@@ -1,0 +1,152 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads ``results/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+derives, per (arch × shape × mesh × variant):
+
+  T_compute    = HLO_FLOPs / peak_FLOPs            (197 TF bf16 / chip)
+  T_memory     = HLO_traffic_bytes / HBM_bw        (819 GB/s / chip)
+  T_collective = wire_bytes_ici / ICI_bw  (+ DCN)  (50 GB/s/link; DCN 25)
+
+All three inputs are **per-chip** (the post-SPMD module is per-chip) and
+**trip-count exact** (see ``repro.launch.hlo_analysis`` — XLA's own
+cost_analysis undercounts scan bodies by their trip counts).
+
+Additional columns:
+  MODEL_FLOPS        6·N·D (dense) / 6·N_active·D (MoE); 2·N·D serving
+  useful ratio       MODEL_FLOPS / (HLO_FLOPs · chips) — remat/masking/
+                     capacity-dispatch waste shows up here
+  bottleneck         argmax of the three terms
+  roofline fraction  T_dominant / ΣT — how balanced the cell is; the §Perf
+                     loop drives the dominant term down
+  fits               per-chip arguments+temp ≤ 16 GB HBM
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+      [--variant baseline] [--md results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # TPU v5e bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+DCN_BW = 25e9              # bytes/s cross-pod (conservative)
+HBM_BYTES = 16 * 2 ** 30
+
+
+def load_records(out_dir="results/dryrun", mesh=None, variant=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if variant and rec["variant"]["name"] != variant:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def terms(rec):
+    ha = rec["hlo_analysis"]
+    t_c = ha["flops"] / PEAK_FLOPS
+    t_m = ha["traffic_bytes"] / HBM_BW
+    t_x = ha["wire_bytes_ici"] / ICI_BW + ha["wire_bytes_dcn"] / DCN_BW
+    chips = rec["n_devices"]
+    hlo_total = ha["flops"] * chips
+    useful = rec["model_flops"] / hlo_total if hlo_total else 0.0
+    mem = rec["memory_analysis"]
+    per_dev = (mem.get("argument_size_in_bytes", 0) +
+               mem.get("temp_size_in_bytes", 0))
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    total = t_c + t_m + t_x
+    return {
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom[0], "t_dominant": dom[1],
+        "frac": dom[1] / total if total else 0.0,
+        "useful_ratio": useful,
+        "bytes_per_dev": per_dev,
+        "fits": per_dev <= HBM_BYTES,
+    }
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def table(recs, *, md=False):
+    headers = ["arch", "shape", "mesh", "variant", "T_comp", "T_mem",
+               "T_coll", "bottleneck", "useful", "GiB/dev", "fits"]
+    rows = []
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                           r["mesh"])):
+        t = terms(rec)
+        rows.append([
+            rec["arch"], rec["shape"], rec["mesh"],
+            rec["variant"]["name"],
+            fmt_s(t["t_compute"]), fmt_s(t["t_memory"]),
+            fmt_s(t["t_collective"]),
+            f"{t['dominant']} ({t['frac']:.0%})",
+            f"{t['useful_ratio']:.2f}",
+            f"{t['bytes_per_dev']/2**30:.1f}",
+            "✓" if t["fits"] else "✗",
+        ])
+    if md:
+        out = ["| " + " | ".join(headers) + " |", "|" + "---|" * len(headers)]
+        out += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+    else:
+        w = [max(len(str(r[i])) for r in rows + [headers])
+             for i in range(len(headers))]
+        out = ["  ".join(h.ljust(w[i]) for i, h in enumerate(headers))]
+        out += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(r))
+                for r in rows]
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None, choices=(None, "single",
+                                                     "multi"))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--md", default=None, help="write markdown table here")
+    args = ap.parse_args(argv)
+
+    recs = load_records(args.dir, args.mesh, args.variant)
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun first")
+        return 1
+    print(table(recs))
+    if args.md:
+        os.makedirs(os.path.dirname(args.md) or ".", exist_ok=True)
+        with open(args.md, "w") as f:
+            f.write(table(recs, md=True) + "\n")
+        print(f"\nmarkdown table → {args.md}")
+
+    # summary: worst cells by each criterion (the §Perf cell-selection aid)
+    singles = [r for r in recs if r["mesh"] == "single"
+               and r["variant"]["name"] == "baseline"]
+    if singles:
+        worst_useful = min(singles, key=lambda r: terms(r)["useful_ratio"])
+        most_coll = max(singles, key=lambda r: terms(r)["t_collective"])
+        print("\n[selection] worst useful-compute ratio:",
+              worst_useful["arch"], worst_useful["shape"],
+              f"({terms(worst_useful)['useful_ratio']:.3f})")
+        print("[selection] most collective-bound:",
+              most_coll["arch"], most_coll["shape"],
+              f"({fmt_s(terms(most_coll)['t_collective'])})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Spinodal decomposition of a binary fluid — the Ludwig-style application.
+
+A symmetric quench (φ = ±noise) phase-separates into domains; this is the
+physics the paper's binary-collision benchmark kernel comes from.  Runs
+the full targetDP-structured simulation (moments → stencil → collision →
+streaming) and prints conservation + coarsening observables.
+
+Run:  PYTHONPATH=src python examples/lb_spinodal.py [--steps 400]
+"""
+import argparse
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.lb.params import LBParams
+from repro.lb.sim import BinaryFluidSim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--chunk", type=int, default=50)
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas_interpret"))
+    ap.add_argument("--vvl", type=int, default=128)
+    args = ap.parse_args()
+
+    params = LBParams(A=0.125, B=0.125, kappa=0.02)
+    sim = BinaryFluidSim((args.grid,) * 3, params=params,
+                         backend=args.backend, vvl=args.vvl)
+    state = sim.init_spinodal(seed=0, noise=0.05)
+
+    obs0 = sim.observables(state)
+    print(f"{'step':>6} {'mass':>12} {'phi_total':>12} {'phi_var':>10} "
+          f"{'phi_range':>16} {'Msites/s':>9}")
+
+    def report(st, rate=0.0):
+        o = sim.observables(st)
+        print(f"{st.step:>6} {o['mass']:>12.4f} {o['phi_total']:>12.5f} "
+              f"{o['phi_var']:>10.5f} "
+              f"[{o['phi_min']:>6.3f},{o['phi_max']:>6.3f}] "
+              f"{rate:>9.2f}")
+        assert not o["nan"], "NaN in fields"
+        return o
+
+    report(state)
+    n = sim.grid_shape[0] ** 3
+    while state.step < args.steps:
+        t0 = time.perf_counter()
+        state = sim.run_scanned(state, args.chunk)
+        state.f.block_until_ready()
+        dt = time.perf_counter() - t0
+        report(state, rate=n * args.chunk / dt / 1e6)
+
+    o_end = sim.observables(state)
+    drift = abs(o_end["mass"] - obs0["mass"]) / obs0["mass"]
+    print(f"\n[lb_spinodal] mass drift over {args.steps} steps: {drift:.2e}")
+    print(f"[lb_spinodal] φ variance {obs0['phi_var']:.5f} → "
+          f"{o_end['phi_var']:.5f} (domains formed)")
+
+
+if __name__ == "__main__":
+    main()

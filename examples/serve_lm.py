@@ -1,0 +1,119 @@
+"""Batched serving driver: prefill + decode over a request batch.
+
+The brief's serving-side end-to-end example: several requests with a
+shared decode budget run through prefill (cache build), then token-by-
+token batched decode with greedy/temperature sampling — the same
+serve-step builders the 32k/500k dry-run cells lower at mesh scale.
+
+Uses a model trained by examples/train_lm.py when a checkpoint exists
+(so continuations follow the synthetic bigram table — verifiable!),
+otherwise random weights.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--gen 32]
+"""
+import argparse
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.data import SyntheticConfig, batch_for_step
+from repro.data.synthetic import _successor_table
+from repro.models import params as params_lib
+from repro.models.config import AttnConfig, ModelConfig, repeat_program
+from repro.models.context import ExecContext
+from repro.runtime.steps import build_serve_steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    p = dict(d_model=384, n_layers=6, n_heads=6, d_ff=1536, vocab=8192)
+    cfg = ModelConfig(
+        name="lm-22m", d_model=p["d_model"], n_layers=p["n_layers"],
+        vocab_size=p["vocab"], d_ff=p["d_ff"],
+        layer_program=repeat_program(("attn",), p["n_layers"]),
+        attn=AttnConfig(p["n_heads"], p["n_heads"],
+                        p["d_model"] // p["n_heads"]))
+    params, _ = params_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    trained = False
+    if latest_step(args.ckpt_dir) is not None:
+        tree = {"params": params, "opt": None}
+        try:
+            got, _, step = restore_checkpoint(
+                args.ckpt_dir, {"params": params})
+            params = got["params"]
+            trained = True
+            print(f"[serve_lm] restored trained weights (step {step})")
+        except Exception as e:  # noqa: BLE001
+            print(f"[serve_lm] checkpoint restore skipped ({e}); "
+                  "using random weights")
+
+    data = SyntheticConfig(vocab_size=p["vocab"], seq_len=args.prompt_len,
+                           global_batch=args.batch, seed=0, branching=8)
+    prompts = batch_for_step(data, step=10_001)   # unseen step → fresh data
+    batch = {"tokens": jnp.asarray(prompts["tokens"])}
+
+    ctx = ExecContext()
+    max_len = args.prompt_len + args.gen
+    prefill_step, decode_step = build_serve_steps(
+        cfg, ctx, max_len=max_len, temperature=args.temperature)
+    prefill_step = jax.jit(prefill_step)
+    decode_step = jax.jit(decode_step, donate_argnums=(2,))
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.perf_counter()
+    tok, caches, length, _ = prefill_step(params, batch, key)
+    jax.block_until_ready(tok)
+    t_prefill = time.perf_counter() - t0
+    print(f"[serve_lm] prefill {args.batch}×{args.prompt_len} tokens: "
+          f"{t_prefill*1e3:.0f} ms "
+          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+
+    outs = [np.asarray(tok)]
+    t1 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        tok, caches, length = decode_step(params, tok, caches, length, sub)
+        outs.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t1
+    gen = np.concatenate(outs, axis=1)
+    print(f"[serve_lm] decode {args.gen-1} steps × {args.batch} reqs: "
+          f"{t_dec*1e3:.0f} ms "
+          f"({(args.gen-1)*args.batch/t_dec:.0f} tok/s, "
+          f"{t_dec/(args.gen-1)*1e3:.1f} ms/step)")
+
+    # verify continuations against the bigram table when trained
+    table = _successor_table(data)
+    ok = total = 0
+    for r in range(args.batch):
+        prev = prompts["tokens"][r, -1]
+        for t in range(args.gen):
+            total += 1
+            if gen[r, t] in table[prev]:
+                ok += 1
+            prev = gen[r, t]
+    chance = 8 / p["vocab"]
+    lift = (ok / total) / chance if total else 0.0
+    print(f"[serve_lm] continuations following the bigram table: "
+          f"{ok}/{total} ({ok/total:.1%}; chance {chance:.2%} → "
+          f"{lift:.0f}× lift)"
+          + ("" if trained else "  (random weights)"))
+    for r in range(min(3, args.batch)):
+        print(f"  req{r}: ...{prompts['tokens'][r, -4:].tolist()} → "
+              f"{gen[r, :10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end LM training driver on the synthetic bigram stream.
+
+Exercises the full stack — data pipeline → sharding plan → train step
+(grad accumulation, remat) → AdamW → async checkpointing → restart — for a
+configurable model size.  The synthetic stream has ~log2(8)=3 bits/token
+of structure, so cross-entropy falls from ln(V) toward ~ln(8) as the model
+learns the bigram table: a *real* loss curve, not noise.
+
+Defaults fit a CPU budget (~22M params, 300 steps); ``--preset 100m``
+selects the ~100M-parameter config used on real hardware (identical code
+path; the dry-run validates it at mesh scale).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import SyntheticConfig
+from repro.models.config import AttnConfig, ModelConfig, repeat_program
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig, TrainHParams
+
+PRESETS = {
+    # ~22M params: CPU-budget demo (d=384, 6L)
+    "22m": dict(d_model=384, n_layers=6, n_heads=6, d_ff=1536, vocab=8192,
+                seq=128, batch=16),
+    # ~100M params: the brief's end-to-end scale (runs as-is on devices)
+    "100m": dict(d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+                 vocab=32768, seq=512, batch=32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="22m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--grad-accum", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--quant-moments", action="store_true")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", d_model=p["d_model"],
+        n_layers=p["n_layers"], vocab_size=p["vocab"], d_ff=p["d_ff"],
+        layer_program=repeat_program(("attn",), p["n_layers"]),
+        attn=AttnConfig(n_heads=p["n_heads"], n_kv_heads=p["n_heads"],
+                        head_dim=p["d_model"] // p["n_heads"]))
+    print(f"[train_lm] {cfg.name}: {cfg.num_params()/1e6:.1f}M params, "
+          f"seq {p['seq']}, global batch {p['batch']}")
+
+    data = SyntheticConfig(vocab_size=p["vocab"], seq_len=p["seq"],
+                           global_batch=p["batch"], seed=0, branching=8)
+    hp = TrainHParams(peak_lr=args.lr, warmup_steps=40,
+                      total_steps=args.steps, grad_accum=args.grad_accum)
+    opt = AdamWConfig(quantize_moments=args.quant_moments)
+    tc = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                       log_every=10, hb_dir=args.ckpt_dir + "/hb")
+
+    trainer = Trainer(cfg, None, data, opt, hp, tc)
+    hist = trainer.run(args.steps)
+
+    import math
+    first = hist[0]["loss"] if hist else float("nan")
+    last = hist[-1]["loss"] if hist else float("nan")
+    print(f"\n[train_lm] loss {first:.3f} → {last:.3f} "
+          f"(uniform={math.log(p['vocab']):.3f}, "
+          f"bigram floor≈{math.log(8):.3f})")
+    assert last < first, "loss did not decrease"
+    print("[train_lm] loss curve (step, ce):")
+    for h in hist:
+        print(f"  {h['step']:>5} {h['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Fault-tolerant checkpointing: atomic, async, manifested, elastic."""
+from .store import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager", "latest_step", "restore_checkpoint",
+    "save_checkpoint", "verify_checkpoint",
+]

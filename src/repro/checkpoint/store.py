@@ -1,0 +1,253 @@
+"""Sharded checkpoint store: atomic, async, checksummed, elastic.
+
+Layout (one directory per step)::
+
+    <root>/step_000001230/
+        manifest.json      # tree structure, shapes, dtypes, shard files,
+                           # sha256 per file, step, wall time
+        arr_00000.npy      # one file per leaf *shard* (axis-0 split across
+        arr_00001.npy      #  writer slots — stands in for per-host files)
+        ...
+
+Guarantees:
+
+* **Atomicity** — written into ``<dir>.tmp`` then ``os.replace``d; a crash
+  mid-save never corrupts the latest complete checkpoint, and
+  :func:`latest_step` only ever sees complete directories.
+* **Integrity** — per-file SHA-256 in the manifest; :func:`verify_checkpoint`
+  and restore both check.
+* **Elastic restore** — leaves are stored as *logical* arrays (shard files
+  concatenate on axis 0), so a checkpoint written on an N-chip mesh
+  restores onto any M-chip mesh: pass new ``shardings`` and each leaf is
+  ``device_put`` with the new layout.  Re-sharding is a placement decision,
+  not a data transform.
+* **Async** — :class:`CheckpointManager` snapshots to host memory
+  synchronously (cheap) and writes in a background thread, overlapping the
+  next training steps; ``wait()`` joins before the next save or exit.
+* **Retention** — keep the newest ``keep`` checkpoints (always ≥1).
+
+QTensor optimizer leaves (8-bit moments) are plain NamedTuples of arrays —
+the pytree machinery below handles them transparently.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+_MANIFEST = "manifest.json"
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:012d}")
+
+
+def save_checkpoint(root: str, step: int, tree, *, extra: dict | None = None,
+                    nshards: int = 4) -> str:
+    """Synchronous atomic save.  Returns the final directory path."""
+    keys, leaves, treedef = _tree_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    final = _step_dir(root, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    entries = []
+    fid = 0
+    for key, arr in zip(keys, host_leaves):
+        # non-native dtypes (bfloat16, fp8, ...) are stored as raw bytes;
+        # the manifest keeps the true dtype for reconstruction
+        raw = arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict
+        store = (np.frombuffer(np.ascontiguousarray(arr).tobytes(),
+                               np.uint8) if raw else arr)
+        # split big leaves across writer slots (per-host files at scale)
+        n0 = store.shape[0] if store.ndim else 1
+        cuts = min(nshards, n0) if store.ndim and \
+            store.nbytes > (1 << 20) else 1
+        bounds = np.linspace(0, n0, cuts + 1, dtype=int) if cuts > 1 else None
+        files = []
+        for s in range(cuts):
+            part = store if cuts == 1 else store[bounds[s]:bounds[s + 1]]
+            fname = f"arr_{fid:05d}.npy"
+            fid += 1
+            np.save(os.path.join(tmp, fname), part)
+            files.append({"file": fname,
+                          "sha256": _sha256(os.path.join(tmp, fname))})
+        entries.append({"key": key, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype), "raw": bool(raw),
+                        "files": files})
+
+    manifest = {
+        "version": 1,
+        "step": int(step),
+        "time": time.time(),
+        "extra": extra or {},
+        "leaves": entries,
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _load_manifest(path: str) -> dict:
+    with open(os.path.join(path, _MANIFEST)) as f:
+        return json.load(f)
+
+
+def verify_checkpoint(path: str) -> bool:
+    try:
+        man = _load_manifest(path)
+    except (OSError, json.JSONDecodeError):
+        return False
+    for e in man["leaves"]:
+        for fl in e["files"]:
+            fp = os.path.join(path, fl["file"])
+            if not os.path.exists(fp) or _sha256(fp) != fl["sha256"]:
+                return False
+    return True
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(root, d, _MANIFEST)):
+            steps.append(int(d[len("step_"):]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: str, tree_like, *, step: Optional[int] = None,
+                       shardings=None, verify: bool = False):
+    """Restore into the structure of ``tree_like`` (shapes are trusted from
+    the manifest).  ``shardings``: optional twin pytree of NamedShardings —
+    this is the **elastic** path: any mesh, any layout.
+    Returns (tree, manifest_extra, step).
+    """
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    path = _step_dir(root, step)
+    if verify and not verify_checkpoint(path):
+        raise IOError(f"checkpoint {path} failed integrity check")
+    man = _load_manifest(path)
+    by_key = {e["key"]: e for e in man["leaves"]}
+
+    keys, leaves, treedef = _tree_paths(tree_like)
+    shard_leaves = (None,) * len(leaves)
+    if shardings is not None:
+        skeys, shard_leaves, _ = _tree_paths(shardings)
+        assert skeys == keys, "shardings tree does not match target tree"
+
+    out = []
+    for key, like, shard in zip(keys, leaves, shard_leaves):
+        e = by_key.get(key)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        parts = [np.load(os.path.join(path, fl["file"])) for fl in e["files"]]
+        arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        if e.get("raw"):
+            import ml_dtypes
+            dt = np.dtype(getattr(ml_dtypes, e["dtype"], None) or e["dtype"])
+            arr = np.frombuffer(arr.tobytes(), dt).reshape(e["shape"])
+        if list(arr.shape) != list(e["shape"]):
+            raise IOError(f"shape mismatch for {key}: {arr.shape} vs manifest")
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out), man.get("extra", {}), step
+
+
+def _prune(root: str, keep: int):
+    if not os.path.isdir(root):
+        return
+    steps = sorted(
+        int(d[len("step_"):]) for d in os.listdir(root)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(root, d, _MANIFEST)))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Async save orchestration + retention.
+
+    ``save()`` device_gets synchronously (the only part that must see
+    consistent device state) and writes files on a daemon thread.
+    """
+
+    def __init__(self, root: str, *, keep: int = 3, nshards: int = 4):
+        self.root = root
+        self.keep = keep
+        self.nshards = nshards
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(root, exist_ok=True)
+
+    def save(self, step: int, tree, *, extra: dict | None = None,
+             blocking: bool = False):
+        self.wait()
+        keys, leaves, treedef = _tree_paths(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        snapshot = treedef.unflatten(host)
+
+        def work():
+            try:
+                save_checkpoint(self.root, step, snapshot, extra=extra,
+                                nshards=self.nshards)
+                _prune(self.root, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def restore_latest(self, tree_like, *, shardings=None, verify=False):
+        return restore_checkpoint(self.root, tree_like, shardings=shardings,
+                                  verify=verify)

@@ -1,0 +1,154 @@
+"""Assigned-architecture registry + input-shape cells.
+
+One module per architecture exports:
+  ``CONFIG``  — the exact public configuration (sources cited in-module)
+  ``SMOKE``   — a reduced same-family config for CPU smoke tests
+  ``LONG_OK`` — whether the ``long_500k`` cell applies (sub-quadratic decode)
+
+The shape cells (seq_len × global_batch) come from the assignment brief;
+``decode_*``/``long_*`` lower ``serve_step`` (single-token with a KV/state
+cache of seq_len), not ``train_step``.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "deepseek_v3_671b",
+    "granite_moe_1b_a400m",
+    "gemma3_27b",
+    "nemotron_4_15b",
+    "phi3_medium_14b",
+    "gemma2_2b",
+    "zamba2_2p7b",
+    "falcon_mamba_7b",
+    "whisper_medium",
+    "qwen2_vl_2b",
+)
+
+# brief ids ↔ module names
+ALIASES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "gemma3-27b": "gemma3_27b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "gemma2-2b": "gemma2_2b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    arch = ALIASES.get(arch, arch)
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; know {list(ARCHS)}"
+                       f" (+aliases {list(ALIASES)})")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def long_ok(arch: str) -> bool:
+    return bool(getattr(_module(arch), "LONG_OK", False))
+
+
+def applicable_cells(arch: str) -> list[tuple[str, str]]:
+    """[(shape_name, "" | skip-reason)] for all four shape cells."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not long_ok(arch):
+            out.append((s.name, "pure full-attention arch: 500k decode "
+                        "skipped per brief (DESIGN.md §5)"))
+        else:
+            out.append((s.name, ""))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocate)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _modality_stubs(cfg: ModelConfig, b: int, s: int) -> dict:
+    extra = {}
+    if cfg.is_encdec:
+        extra["audio_embed"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                                    jnp.float32)
+    if cfg.vision_stub:
+        npatch = min(256, s)
+        extra["vision_embed"] = _sds((b, npatch, cfg.d_model), jnp.float32)
+        extra["vision_slot"] = _sds((b, s), jnp.int32)
+    if cfg.pos_embed == "mrope":
+        extra["positions3"] = _sds((3, b, s), jnp.int32)
+    return extra
+
+
+def input_specs(arch: str, shape: str, *, cache_dtype=jnp.bfloat16,
+                local_ring: bool = False) -> dict:
+    """Abstract inputs for one (arch × shape) cell.
+
+    Returns a dict:
+      train:   {"batch": {tokens, labels, ...}}
+      prefill: {"batch": {tokens, ...}}
+      decode:  {"token", "caches", "length" [, "positions3"]}
+    """
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+
+    if cell.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        batch.update(_modality_stubs(cfg, b, s))
+        return {"batch": batch}
+
+    if cell.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        batch.update(_modality_stubs(cfg, b, s))
+        return {"batch": batch}
+
+    # decode: cache shapes via eval_shape of init_cache — no allocation
+    caches = jax.eval_shape(
+        lambda: lm.init_cache(None, cfg, b, s, dtype=cache_dtype,
+                              local_ring=local_ring))
+    out = {"token": _sds((b, 1), jnp.int32),
+           "caches": caches,
+           "length": _sds((), jnp.int32)}
+    if cfg.pos_embed == "mrope":
+        out["positions3"] = _sds((3, b, 1), jnp.int32)
+    return out

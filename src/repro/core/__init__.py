@@ -1,0 +1,43 @@
+"""targetDP core — the paper's contribution as a composable JAX module.
+
+Public surface (paper → here):
+
+* lattice/fields: :class:`Lattice`, :class:`Field` (SoA mandated, AoS kept
+  as the measurable baseline layout).
+* memory model: :func:`target_malloc`, :func:`copy_to_target`,
+  :func:`copy_from_target`, masked variants, :class:`TargetConst`,
+  :func:`sync_target`.
+* execution model: :func:`site_kernel` (``TARGET_ENTRY``), :func:`launch`
+  (``TARGET_LAUNCH`` + ``TARGET_TLP``/``TARGET_ILP`` with tunable VVL),
+  :func:`reduce` (the paper's §V planned extension).
+"""
+from .lattice import Lattice, token_lattice
+from .field import Field, field_like
+from .memory import (
+    TargetConst,
+    copy_constant_to_target,
+    copy_from_target,
+    copy_from_target_masked,
+    copy_to_target,
+    copy_to_target_masked,
+    sync_target,
+    target_free,
+    target_malloc,
+    target_malloc_like,
+)
+from .execute import (
+    default_vvl,
+    launch,
+    reduce,
+    set_default_vvl,
+    site_kernel,
+)
+
+__all__ = [
+    "Lattice", "token_lattice", "Field", "field_like",
+    "TargetConst", "copy_constant_to_target",
+    "copy_to_target", "copy_from_target",
+    "copy_to_target_masked", "copy_from_target_masked",
+    "sync_target", "target_free", "target_malloc", "target_malloc_like",
+    "site_kernel", "launch", "reduce", "default_vvl", "set_default_vvl",
+]

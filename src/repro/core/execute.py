@@ -1,0 +1,244 @@
+"""targetDP execution model: single-source site kernels, TLP × ILP, VVL.
+
+Paper §III-C, restated for TPU/JAX:
+
+* A **site kernel** is written once, against *chunk* arrays of shape
+  ``(ncomp, VVL)`` — ``VVL`` (virtual vector length) is the tunable innermost
+  extent the paper strip-mines out of the site loop (``TARGET_ILP``).
+* **TLP**: the loop over chunks (``TARGET_TLP``).  On the jnp executor it is
+  a ``vmap`` over the chunk axis (XLA fuses and threads it); on the Pallas
+  executor it is the ``pallas_call`` grid; one level up, the site axis is
+  sharded over the device mesh by the caller (``shard_map``/``jit``) — the
+  analogue of the paper's MPI level.
+* **ILP**: inside a chunk, every op is vectorised over the trailing ``VVL``
+  axis — VPU lanes on TPU (the analogue of AVX lanes / per-thread ILP).
+* **Single source**: the same kernel body runs under both executors; the
+  ``backend=`` switch is the paper's C-vs-CUDA build switch.
+
+The Pallas executor lives in :mod:`repro.kernels.tdp_pointwise` (explicit
+``BlockSpec`` VMEM tiling, block extent = VVL); it is imported lazily so the
+core stays importable without Pallas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .lattice import Lattice
+from .memory import TargetConst
+
+# Default VVL: one full TPU vector register row of lanes.  The paper tunes
+# VVL per architecture (8 on AVX, 2 on K40); benchmarks/run.py sweeps it here.
+_DEFAULT_VVL = 128
+
+Backend = str  # "xla" | "pallas" | "pallas_interpret"
+_VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
+
+
+def default_vvl() -> int:
+    return _DEFAULT_VVL
+
+
+def set_default_vvl(vvl: int) -> None:
+    global _DEFAULT_VVL
+    if vvl <= 0:
+        raise ValueError("vvl must be positive")
+    _DEFAULT_VVL = int(vvl)
+
+
+def site_kernel(fn: Callable) -> Callable:
+    """Mark ``fn`` as a targetDP site kernel (``TARGET_ENTRY``).
+
+    ``fn(*chunks, **consts)`` receives one ``(ncomp_i, VVL)`` array per input
+    field (plus ``site_idx`` of shape ``(VVL,)`` if requested at launch) and
+    returns one ``(ncomp_o, VVL)`` array or a tuple of them.  The body must
+    be pure jnp — that is what makes it single-source across executors.
+    """
+    fn.__tdp_site_kernel__ = True
+    return fn
+
+
+def _unwrap_consts(consts: Mapping[str, object]) -> dict:
+    out = {}
+    for k, v in consts.items():
+        out[k] = v.value if isinstance(v, TargetConst) else v
+    return out
+
+
+def _consts_cache_key(consts: Mapping[str, object]):
+    items = []
+    for k in sorted(consts):
+        v = consts[k]
+        if isinstance(v, TargetConst):
+            items.append((k, v))
+        elif isinstance(v, (int, float, bool, str)):
+            items.append((k, v))
+        else:
+            # Fall back to content hashing through TargetConst semantics.
+            items.append((k, TargetConst(v)))
+    return tuple(items)
+
+
+def _normalize_out_ncomp(out_ncomp, inputs) -> tuple[int, ...]:
+    if out_ncomp is None:
+        return (inputs[0].shape[0],)
+    if isinstance(out_ncomp, int):
+        return (out_ncomp,)
+    return tuple(int(c) for c in out_ncomp)
+
+
+# ---------------------------------------------------------------------------
+# jnp executor ("C implementation")
+# ---------------------------------------------------------------------------
+
+def _xla_launch(kernel, vvl: int, with_site_index: bool, n_out: int,
+                consts: dict, inputs: Sequence[jax.Array]):
+    n = inputs[0].shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    nchunks = n_pad // vvl
+
+    def pad(x):
+        if n_pad == n:
+            return x
+        return jnp.pad(x, ((0, 0), (0, n_pad - n)))
+
+    chunked = [pad(x).reshape(x.shape[0], nchunks, vvl) for x in inputs]
+
+    body = functools.partial(kernel, **consts) if consts else kernel
+    if with_site_index:
+        site_idx = jnp.arange(n_pad, dtype=jnp.int32).reshape(nchunks, vvl)
+        outs = jax.vmap(body, in_axes=(1,) * len(chunked) + (0,),
+                        out_axes=1 if n_out == 1 else (1,) * n_out)(*chunked, site_idx)
+    else:
+        outs = jax.vmap(body, in_axes=1,
+                        out_axes=1 if n_out == 1 else (1,) * n_out)(*chunked)
+    outs = (outs,) if n_out == 1 else tuple(outs)
+    flat = tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
+    return flat[0] if n_out == 1 else flat
+
+
+# ---------------------------------------------------------------------------
+# launch ("TARGET_LAUNCH") — dispatches on backend, jit-cached
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _build_launch(kernel, vvl: int, backend: Backend, with_site_index: bool,
+                  out_ncomp: tuple[int, ...], const_key) -> Callable:
+    consts = _unwrap_consts(dict(const_key))
+    n_out = len(out_ncomp)
+
+    if backend == "xla":
+        fn = functools.partial(_xla_launch, kernel, vvl, with_site_index, n_out, consts)
+    else:
+        from repro.kernels import tdp_pointwise  # lazy: Pallas import
+        fn = functools.partial(
+            tdp_pointwise.pallas_launch, kernel, vvl, with_site_index,
+            out_ncomp, consts, backend == "pallas_interpret")
+    return jax.jit(lambda *xs: fn(xs))
+
+
+def launch(kernel: Callable, lattice: Lattice | None, inputs: Sequence[jax.Array], *,
+           out_ncomp: int | Sequence[int] | None = None,
+           consts: Mapping[str, object] | None = None,
+           vvl: int | None = None,
+           backend: Backend = "xla",
+           with_site_index: bool = False):
+    """Launch a site kernel over the lattice (``kernel TARGET_LAUNCH(N) (...)``).
+
+    Args:
+      kernel: a :func:`site_kernel` function.
+      lattice: optional lattice descriptor (used for validation only; the
+        site extent is taken from the input arrays, which may include halo).
+      inputs: SoA target arrays, each ``(ncomp_i, nsites)``.  targetDP
+        *requires* SoA (paper §III-B); pass ``Field.to_layout("soa")`` data.
+      out_ncomp: component count(s) of the output(s); defaults to input 0's.
+      consts: ``TARGET_CONST`` parameters (``TargetConst`` or scalars) —
+        closed over at jit time.
+      vvl: virtual vector length (ILP extent).  Default 128 (TPU lane row).
+      backend: ``"xla"`` (jnp executor), ``"pallas"`` (TPU VMEM tiling) or
+        ``"pallas_interpret"`` (Pallas semantics on CPU, for validation).
+      with_site_index: pass global site indices ``(vvl,)`` as the last
+        positional argument (e.g. position-dependent kernels like RoPE).
+    """
+    if backend not in _VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {backend!r}")
+    inputs = tuple(inputs)
+    if not inputs:
+        raise ValueError("launch requires at least one input field")
+    nsite_set = {int(x.shape[-1]) for x in inputs}
+    if len(nsite_set) != 1:
+        raise ValueError(f"inputs disagree on site extent: {sorted(nsite_set)}")
+    if any(x.ndim != 2 for x in inputs):
+        raise ValueError("inputs must be SoA arrays of shape (ncomp, nsites)")
+    if lattice is not None:
+        n = nsite_set.pop()
+        if n not in (lattice.nsites, lattice.nsites_with_halo):
+            raise ValueError(
+                f"site extent {n} matches neither interior ({lattice.nsites}) "
+                f"nor halo-padded ({lattice.nsites_with_halo}) lattice")
+    vvl = vvl or _DEFAULT_VVL
+    out_spec = _normalize_out_ncomp(out_ncomp, inputs)
+    key = _consts_cache_key(consts or {})
+    return _build_launch(kernel, vvl, backend, with_site_index, out_spec, key)(*inputs)
+
+
+# ---------------------------------------------------------------------------
+# reductions — the paper's §V "planned extension", implemented
+# ---------------------------------------------------------------------------
+
+_REDUCERS = {
+    "sum": (jnp.sum, 0.0),
+    "max": (jnp.max, -jnp.inf),
+    "min": (jnp.min, jnp.inf),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _masked_kernel(kernel: Callable, op: str) -> Callable:
+    """Wrap ``kernel`` so padding sites map to the reduction identity.
+
+    Cached per (kernel, op) so repeated ``reduce`` calls reuse one jitted
+    launch instead of recompiling (the wrapper's identity is the cache key
+    inside :func:`_build_launch`).
+    """
+    _, ident = _REDUCERS[op]
+
+    def masked(*chunks_and_idx, _tdp_nsites: int = 0, **kw):
+        *chunks, site_idx = chunks_and_idx
+        vals = kernel(*chunks, **kw)
+        single = not isinstance(vals, tuple)
+        vals = (vals,) if single else vals
+        keep = (site_idx < _tdp_nsites)[None, :]
+        out = tuple(jnp.where(keep, v, ident) for v in vals)
+        return out[0] if single else out
+
+    masked.__name__ = f"reduce_{op}_{getattr(kernel, '__name__', 'kernel')}"
+    return masked
+
+
+def reduce(kernel: Callable, lattice: Lattice | None, inputs: Sequence[jax.Array], *,
+           op: str = "sum",
+           out_ncomp: int | Sequence[int] | None = None,
+           consts: Mapping[str, object] | None = None,
+           vvl: int | None = None,
+           backend: Backend = "xla") -> jax.Array:
+    """Map a site kernel over the lattice and reduce over sites.
+
+    Returns ``(ncomp_out,)``.  Padding sites are masked with the reduction
+    identity *after* mapping, so kernels need not behave on padded zeros.
+    """
+    if op not in _REDUCERS:
+        raise ValueError(f"op must be one of {sorted(_REDUCERS)}")
+    reducer, _ = _REDUCERS[op]
+    n = int(inputs[0].shape[-1])
+    all_consts = dict(consts or {})
+    all_consts["_tdp_nsites"] = n
+    out_spec = _normalize_out_ncomp(out_ncomp, inputs)
+    mapped = launch(_masked_kernel(kernel, op), lattice, inputs, out_ncomp=out_spec,
+                    consts=all_consts, vvl=vvl, backend=backend, with_site_index=True)
+    mapped = (mapped,) if not isinstance(mapped, tuple) else mapped
+    red = tuple(reducer(m, axis=-1) for m in mapped)
+    return red[0] if len(red) == 1 else red

@@ -1,0 +1,91 @@
+"""Lattice descriptors — the structured grids targetDP operates over.
+
+A :class:`Lattice` is a static description of a structured grid of *sites*.
+It carries no data; :class:`repro.core.field.Field` attaches per-site values.
+
+Two lattice families appear in this framework:
+
+* the 3-D fluid lattice used by the Ludwig binary-fluid application
+  (``Lattice(shape=(Lx, Ly, Lz), halo=1)``), and
+* the flattened *token lattice* used by the LM substrate
+  (``Lattice(shape=(batch, seq))``) — every token position is a site.
+
+Following the paper (§III-C), launched kernels iterate over sites in chunks
+of a tunable *virtual vector length* (VVL).  The site count is padded up to a
+multiple of the VVL at launch time; :meth:`Lattice.padded_nsites` gives the
+padded extent for a given VVL.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import reduce
+from operator import mul
+
+
+def _prod(xs) -> int:
+    return reduce(mul, xs, 1)
+
+
+@dataclass(frozen=True)
+class Lattice:
+    """A static structured grid of sites.
+
+    Args:
+      shape: per-dimension site extents (excluding halo).
+      halo: halo width in every dimension (0 for the token lattice; >=1 for
+        stencil codes such as lattice Boltzmann streaming).
+    """
+
+    shape: tuple[int, ...]
+    halo: int = 0
+
+    def __post_init__(self):
+        if not self.shape:
+            raise ValueError("lattice must have at least one dimension")
+        if any(int(s) <= 0 for s in self.shape):
+            raise ValueError(f"lattice extents must be positive, got {self.shape}")
+        if self.halo < 0:
+            raise ValueError("halo must be non-negative")
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nsites(self) -> int:
+        """Number of interior (non-halo) sites."""
+        return _prod(self.shape)
+
+    @property
+    def halo_shape(self) -> tuple[int, ...]:
+        """Per-dimension extents including halo."""
+        return tuple(s + 2 * self.halo for s in self.shape)
+
+    @property
+    def nsites_with_halo(self) -> int:
+        return _prod(self.halo_shape)
+
+    def padded_nsites(self, vvl: int) -> int:
+        """Site count rounded up to a multiple of ``vvl`` (paper §III-C:
+        the TLP loop strides in steps of VVL, so the site extent must be a
+        whole number of chunks)."""
+        if vvl <= 0:
+            raise ValueError("vvl must be positive")
+        return math.ceil(self.nsites / vvl) * vvl
+
+    def nchunks(self, vvl: int) -> int:
+        """Number of VVL-sized site chunks (the TLP grid extent)."""
+        return self.padded_nsites(vvl) // vvl
+
+    def interior_slices(self) -> tuple[slice, ...]:
+        """Slices selecting the interior of a halo-padded array."""
+        if self.halo == 0:
+            return tuple(slice(None) for _ in self.shape)
+        return tuple(slice(self.halo, self.halo + s) for s in self.shape)
+
+
+def token_lattice(batch: int, seq: int) -> Lattice:
+    """The LM token lattice: one site per (batch, position) pair."""
+    return Lattice(shape=(batch, seq), halo=0)

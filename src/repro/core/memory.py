@@ -1,0 +1,218 @@
+"""targetDP memory model: host vs target copies, masked transfers, constants.
+
+Paper §III-A/B: *"We maintain both host and target copies of our lattice
+data, where the target copy is located in a memory space suitable for access
+on the target, and is treated as the master copy within those lattice-based
+computations."*  Crucially the distinction is kept **even when the target is
+the host CPU** — which is exactly this container's situation (the target is
+a CpuDevice; on a real deployment it is a TPU chip's HBM, possibly sharded
+over a mesh).
+
+Mapping of the paper's library surface:
+
+=========================  ====================================================
+paper                      this module
+=========================  ====================================================
+``targetMalloc``           :func:`target_malloc`  (``jax.device_put`` of zeros,
+                           optionally with a ``NamedSharding``)
+``targetFree``             :func:`target_free`    (``.delete()``)
+``copyToTarget``           :func:`copy_to_target`
+``copyFromTarget``         :func:`copy_from_target`
+``copyToTargetMasked``     :func:`copy_to_target_masked`   (pack → transfer →
+``copyFromTargetMasked``   :func:`copy_from_target_masked`  device scatter, the
+                           same compress/unpack scheme as the paper's CUDA impl)
+``TARGET_CONST`` +         :class:`TargetConst` — small read-only parameters
+``copyConstant<X>ToTarget``  closed over at ``jit`` time (XLA constant-folds
+                           them into fast memory; the TPU analogue of
+                           ``__constant__``), or fed to Pallas kernels via
+                           scalar prefetch (SMEM).
+``syncTarget``             :func:`sync_target` (``block_until_ready``)
+=========================  ====================================================
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .field import Field, field_like
+
+
+def _maybe_put(x, sharding):
+    if sharding is None:
+        return jax.device_put(x)
+    return jax.device_put(x, sharding)
+
+
+# ---------------------------------------------------------------------------
+# allocation
+# ---------------------------------------------------------------------------
+
+def target_malloc(shape: tuple[int, ...], dtype=jnp.float32, sharding=None) -> jax.Array:
+    """Allocate a zeroed target array (``targetMalloc`` + error checking).
+
+    With a ``NamedSharding`` the allocation lands distributed over the mesh —
+    the multi-chip generalisation of "a memory space suitable for access on
+    the target".
+    """
+    if any(int(s) <= 0 for s in shape):
+        raise ValueError(f"non-positive extent in {shape}")
+    return _maybe_put(jnp.zeros(shape, dtype=dtype), sharding)
+
+
+def target_malloc_like(f: Field, sharding=None, dtype=None) -> jax.Array:
+    return target_malloc(f.array_shape, dtype or f.dtype, sharding)
+
+
+def target_free(arr: jax.Array) -> None:
+    """Release target memory eagerly (``targetFree``)."""
+    arr.delete()
+
+
+# ---------------------------------------------------------------------------
+# full-lattice transfers
+# ---------------------------------------------------------------------------
+
+def copy_to_target(host: Field | np.ndarray, sharding=None, dtype=None) -> jax.Array:
+    """Host → target transfer of a full field (``copyToTarget``)."""
+    data = host.data if isinstance(host, Field) else np.asarray(host)
+    if dtype is not None:
+        data = data.astype(dtype)
+    return _maybe_put(data, sharding)
+
+
+def copy_from_target(target: jax.Array, host: Field | None = None) -> Field | np.ndarray:
+    """Target → host transfer (``copyFromTarget``).
+
+    If ``host`` is given, its buffer is overwritten in place (matching the
+    paper's signature); otherwise a bare ndarray is returned.
+    """
+    out = np.asarray(jax.device_get(target))
+    if host is None:
+        return out
+    if out.shape != host.data.shape:
+        raise ValueError(f"shape mismatch {out.shape} vs {host.data.shape}")
+    host.data[...] = out.astype(host.dtype)
+    return host
+
+
+# ---------------------------------------------------------------------------
+# masked (compressed) transfers — paper §III-B
+# ---------------------------------------------------------------------------
+#
+# "It is often the case that only a subset of the lattice data is required in
+#  such transfers. ... a CUDA kernel ... pack[s] the included sites into a
+#  scratch structure on the GPU, transferring the packed structure with
+#  cudaMemcpy, and unpacking on the host using a loop."
+#
+# We realise pack/unpack with gather/scatter.  The mask is boolean over sites;
+# the packed buffer has static shape (ncomp, nsel) so the pack step is
+# jit-able (nsel is derived on the host from the mask, which the paper also
+# requires to be host-known).
+
+def _site_indices(mask: np.ndarray) -> np.ndarray:
+    mask = np.asarray(mask)
+    if mask.dtype != np.bool_:
+        mask = mask.astype(bool)
+    return np.flatnonzero(mask.reshape(-1))
+
+
+@jax.jit
+def _pack_soa(target: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(target, idx, axis=-1)
+
+
+@jax.jit
+def _scatter_soa(target: jax.Array, idx: jax.Array, packed: jax.Array) -> jax.Array:
+    return target.at[..., idx].set(packed)
+
+
+def copy_from_target_masked(target: jax.Array, mask: np.ndarray,
+                            host: Field | None = None) -> np.ndarray | Field:
+    """Compressed target → host copy of the masked site subset.
+
+    Pack on device (gather over the site axis), transfer only the packed
+    buffer, unpack into the host field.  SoA layout (site axis last).
+    """
+    idx = _site_indices(mask)
+    if idx.size == 0:
+        if host is not None:
+            return host
+        return np.zeros(target.shape[:-1] + (0,), dtype=target.dtype)
+    packed = np.asarray(jax.device_get(_pack_soa(target, jnp.asarray(idx))))
+    if host is None:
+        return packed
+    host.data[..., idx] = packed.astype(host.dtype)
+    return host
+
+
+def copy_to_target_masked(target: jax.Array, host: Field | np.ndarray,
+                          mask: np.ndarray) -> jax.Array:
+    """Compressed host → target copy of the masked site subset.
+
+    Pack on the host (cheap), transfer the packed buffer, scatter on device.
+    Returns the updated target array (functional update — JAX arrays are
+    immutable, the paper's in-place semantics become a rebind).
+    """
+    data = host.data if isinstance(host, Field) else np.asarray(host)
+    idx = _site_indices(mask)
+    if idx.size == 0:
+        return target
+    packed = data[..., idx]
+    return _scatter_soa(target, jnp.asarray(idx), jax.device_put(packed.astype(target.dtype)))
+
+
+# ---------------------------------------------------------------------------
+# constants
+# ---------------------------------------------------------------------------
+
+class TargetConst:
+    """A small read-only parameter living "close to the registers".
+
+    The paper's CUDA implementation copies these to ``__constant__`` memory
+    via ``cudaMemcpyToSymbol``; the C implementation memcpys.  Under XLA the
+    equivalent is to let the value be **closed over** by the jitted launch:
+    XLA embeds it in the executable and stages it into the fastest available
+    memory.  For Pallas kernels, scalars are additionally eligible for SMEM
+    scalar-prefetch.
+
+    ``TargetConst`` values hash by content so they participate in jit cache
+    keys correctly — re-copying a constant (``copyConstant<X>ToTarget``)
+    triggers exactly one recompile, mirroring the paper's explicit update.
+    """
+
+    __slots__ = ("value", "_key")
+
+    def __init__(self, value: Any):
+        arr = np.asarray(value)
+        self.value = jnp.asarray(arr)
+        self._key = (arr.shape, str(arr.dtype), arr.tobytes())
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, TargetConst) and self._key == other._key
+
+    def __repr__(self):
+        return f"TargetConst(shape={self.value.shape}, dtype={self.value.dtype})"
+
+
+def copy_constant_to_target(value: Any) -> TargetConst:
+    """Family stand-in for ``copyConstant<Double|Int|...>ToTarget``."""
+    return TargetConst(value)
+
+
+# ---------------------------------------------------------------------------
+# synchronisation
+# ---------------------------------------------------------------------------
+
+def sync_target(*arrays: jax.Array) -> None:
+    """``syncTarget``: wait for outstanding target work (no-op semantics on
+    the C/host build, a real barrier for asynchronous device execution)."""
+    for a in arrays:
+        a.block_until_ready()
+    if not arrays:
+        (jnp.zeros(()) + 0).block_until_ready()

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ``<name>.py`` contains the ``pl.pallas_call`` + ``BlockSpec``
+implementation; :mod:`repro.kernels.ops` exposes jit'd wrappers with a
+backend switch; :mod:`repro.kernels.ref` holds the pure-jnp oracles used by
+tests and by the CPU/dry-run path.
+
+Kernels:
+  tdp_pointwise     generic targetDP site-kernel executor (the paper's core)
+  lb_collision      D3Q19 binary-fluid LB collision (the paper's benchmark)
+  rmsnorm           fused RMSNorm over the token lattice
+  swiglu            fused SwiGLU / squared-ReLU activation
+  flash_attention   blocked causal/windowed/softcapped attention
+  mamba_scan        Mamba-1 selective-scan (chunked, state in VMEM)
+"""

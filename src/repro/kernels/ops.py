@@ -1,0 +1,87 @@
+"""jit'd public wrappers for the kernel layer, with a backend switch.
+
+``backend`` values (the paper's build switch, runtime-selectable):
+  * ``"xla"``              — pure-jnp oracle path (CPU, dry-run, debugging)
+  * ``"pallas"``           — Pallas TPU kernels (the deployment target)
+  * ``"pallas_interpret"`` — Pallas semantics executed on CPU (validation)
+
+Every wrapper takes the same arguments on every backend — single source at
+the call site, exactly the paper's portability contract.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import lb_collision as _lb
+from . import mamba_scan as _ms
+from . import ref as _ref
+from . import rmsnorm as _rn
+from . import swiglu as _sg
+
+VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
+
+
+def _check(backend: str) -> bool:
+    if backend not in VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend!r}")
+    return backend != "xla"
+
+
+def _interp(backend: str) -> bool:
+    return backend == "pallas_interpret"
+
+
+def lb_collision(f, g, phi, gradphi, del2phi, *, backend="xla", vvl=128, **phys):
+    if _check(backend):
+        return _lb.lb_collision_pallas(f, g, phi, gradphi, del2phi, vvl=vvl,
+                                       interpret=_interp(backend), **phys)
+    return _ref.lb_collision_ref(f, g, phi, gradphi, del2phi, **phys)
+
+
+def rmsnorm(x, weight, *, backend="xla", vvl=256, eps=1e-6, scale_offset=0.0):
+    if _check(backend):
+        return _rn.rmsnorm_pallas(x, weight, vvl=vvl, eps=eps,
+                                  scale_offset=scale_offset,
+                                  interpret=_interp(backend))
+    return _ref.rmsnorm_ref(x, weight, eps=eps, scale_offset=scale_offset)
+
+
+def gated_act(u, v=None, *, kind="swiglu", backend="xla", vvl=256, block_f=512):
+    if _check(backend):
+        return _sg.gated_act_pallas(u, v, kind=kind, vvl=vvl, block_f=block_f,
+                                    interpret=_interp(backend))
+    return _ref.gated_act_ref(u, v, kind=kind)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, backend="xla", block_q=128, block_k=128,
+                    impl="ref", q_offset=0):
+    """``impl`` selects the xla-backend oracle: "ref" (whole-S² scores) or
+    "chunked" (q-block scan + flash backward, memory-bounded — the
+    dry-run path).  ``q_offset``: global position of q[...,0,:] for
+    sequence-parallel callers (chunked impl only)."""
+    if _check(backend):
+        if q_offset:
+            raise NotImplementedError("q_offset on the Pallas path is a "
+                                      "grid-offset BlockSpec change (TPU)")
+        return _fa.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, block_q=block_q, block_k=block_k,
+            interpret=_interp(backend))
+    if impl == "chunked":
+        return _ref.attention_chunked_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, block_q=block_q, q_offset=q_offset)
+    if q_offset:
+        raise NotImplementedError("q_offset requires impl='chunked'")
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+
+
+def mamba_scan(x, dt, b, c, a, d, *, backend="xla", block_d=128, block_t=128):
+    if _check(backend):
+        return _ms.mamba_scan_pallas(x, dt, b, c, a, d, block_d=block_d,
+                                     block_t=block_t,
+                                     interpret=_interp(backend))
+    return _ref.mamba_scan_ref(x, dt, b, c, a, d)

@@ -1,0 +1,56 @@
+"""Fused RMSNorm over the token lattice (Pallas, VVL-token blocks).
+
+targetDP view: the token lattice's sites are chunked by VVL onto the grid
+(TLP); inside a block every op vectorises over the feature (lane) axis —
+for LM fields the feature extent d ≥ 1024 fills the 128-lane rows perfectly,
+so the ILP axis is the feature axis and VVL counts *tokens per block*
+(sublane rows).  This is the layout-adapted dual of the LB kernels (19
+components → sites must ride the lanes); see DESIGN.md §2.
+
+VMEM per step ≈ 2 · VVL · d · itemsize + d · 4; with d=8192, bf16, VVL=256:
+~8.4 MiB — the ops-level wrapper auto-shrinks VVL to fit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_EPS = 1e-6
+
+
+def _rmsnorm_body(x_ref, w_ref, o_ref, *, eps: float, scale_offset: float):
+    x = x_ref[...].astype(jnp.float32)                 # (VVL, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    w = w_ref[...].astype(jnp.float32) + scale_offset  # (1, d)
+    o_ref[...] = (x * inv * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("vvl", "interpret", "eps", "scale_offset"))
+def rmsnorm_pallas(x: jax.Array, weight: jax.Array, *, vvl: int = 256,
+                   interpret: bool = False, eps: float = DEFAULT_EPS,
+                   scale_offset: float = 0.0) -> jax.Array:
+    """RMSNorm of ``x: (tokens, d)`` with ``weight: (d,)``.
+
+    ``scale_offset=1.0`` gives the Gemma convention ``x * rms * (1 + w)``.
+    """
+    t, d = x.shape
+    t_pad = -(-t // vvl) * vvl
+    xp = jnp.pad(x, ((0, t_pad - t), (0, 0))) if t_pad != t else x
+    w2 = weight.reshape(1, d)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_body, eps=eps, scale_offset=scale_offset),
+        grid=(t_pad // vvl,),
+        in_specs=[pl.BlockSpec((vvl, d), lambda i: (i, 0)),
+                  pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((vvl, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d), x.dtype),
+        interpret=interpret,
+        name=f"rmsnorm_vvl{vvl}_d{d}",
+    )(xp, w2)
+    return out[:t]

@@ -1,0 +1,125 @@
+"""Pallas executor for targetDP site kernels — the "CUDA implementation".
+
+The paper's CUDA build of the macros assigns each thread a VVL-sized chunk of
+sites (`TARGET_TLP`) and loops the innermost op over the chunk
+(`TARGET_ILP`).  The TPU-native equivalent:
+
+* the ``pallas_call`` **grid** plays the role of the CUDA thread grid: one
+  grid step per VVL-chunk of sites;
+* each input/output block is an explicit VMEM tile of shape
+  ``(ncomp, VVL)`` — sites on the **lane** axis (SoA!), components on
+  sublanes, so every jnp op inside the kernel body vectorises over lanes
+  exactly as the strip-mined ILP loop vectorises over AVX lanes;
+* ``VVL`` is the tunable block extent.  Multiples of 128 fill lane rows;
+  larger values amortise HBM→VMEM latency (the paper's "m>1 can be faster"
+  observation) at the cost of VMEM footprint:
+  ``vmem_bytes ≈ sum_i(ncomp_i * VVL * itemsize)`` which must stay ≲ 16 MiB.
+
+``interpret=True`` runs the same kernel body on CPU for validation — this
+container has no TPU; tests exercise the Pallas path through interpret mode
+and assert allclose against the jnp executor (the "C implementation").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def vmem_bytes_estimate(in_ncomp: Sequence[int], out_ncomp: Sequence[int],
+                        vvl: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step (inputs + outputs)."""
+    return sum(in_ncomp) * vvl * itemsize + sum(out_ncomp) * vvl * itemsize
+
+
+def _canonicalize_consts(consts: dict):
+    """Split TARGET_CONST parameters into literal scalars (closed over — XLA
+    inlines them) and array constants (side inputs: Pallas kernels may not
+    capture traced values, so small read-only arrays ride along as full-block
+    VMEM operands — the TPU analogue of ``__constant__`` memory)."""
+    scalars, arrays = {}, {}
+    for k, v in consts.items():
+        if isinstance(v, (int, float, bool)):
+            scalars[k] = v
+        else:
+            arr = jnp.asarray(v)
+            orig_shape = arr.shape
+            if arr.ndim == 0:
+                arr2 = arr.reshape(1, 1)
+            elif arr.ndim == 1:
+                arr2 = arr.reshape(1, -1)
+            else:
+                arr2 = arr.reshape(arr.shape[0], -1)
+            arrays[k] = (orig_shape, arr2)
+    return scalars, arrays
+
+
+def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,
+                  out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
+                  inputs: tuple[jax.Array, ...]):
+    """Launch ``kernel`` over the site axis with VVL-sized VMEM blocks."""
+    n = inputs[0].shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    nchunks = n_pad // vvl
+    dtype = inputs[0].dtype
+
+    def pad(x):
+        if n_pad == n:
+            return x
+        return jnp.pad(x, ((0, 0), (0, n_pad - n)))
+
+    padded = tuple(pad(x) for x in inputs)
+    scalar_consts, array_consts = _canonicalize_consts(consts)
+    const_names = list(array_consts)
+    const_vals = [array_consts[k][1] for k in const_names]
+    n_out = len(out_ncomp)
+
+    def body(*refs):
+        in_refs = refs[:len(padded)]
+        cref0 = len(padded)
+        const_refs = refs[cref0:cref0 + len(const_names)]
+        out_refs = refs[cref0 + len(const_names):]
+        chunks = [r[...] for r in in_refs]
+        if with_site_index:
+            # global site index of each lane in this chunk (TARGET_ILP offset
+            # + baseIndex), computed from the grid position.
+            base = pl.program_id(0) * vvl
+            site_idx = base + jax.lax.iota(jnp.int32, vvl)
+            chunks.append(site_idx)
+        kw = dict(scalar_consts)
+        for name, cref in zip(const_names, const_refs):
+            orig_shape, _ = array_consts[name]
+            kw[name] = cref[...].reshape(orig_shape)
+        vals = kernel(*chunks, **kw)
+        vals = (vals,) if not isinstance(vals, tuple) else vals
+        for r, v in zip(out_refs, vals):
+            r[...] = v.astype(r.dtype)
+
+    grid = (nchunks,)
+    in_specs = [
+        pl.BlockSpec((x.shape[0], vvl), lambda i: (0, i)) for x in padded
+    ] + [
+        pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in const_vals
+    ]
+    out_specs = [
+        pl.BlockSpec((c, vvl), lambda i: (0, i)) for c in out_ncomp
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((c, n_pad), dtype) for c in out_ncomp
+    ]
+
+    outs = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        name=f"tdp_{getattr(kernel, '__name__', 'site_kernel')}_vvl{vvl}",
+    )(*padded, *const_vals)
+
+    outs = tuple(o[:, :n] for o in outs)
+    return outs[0] if n_out == 1 else outs

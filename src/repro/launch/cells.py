@@ -1,0 +1,311 @@
+"""Cell builder: (arch × shape × mesh × variant) → AOT-lowerable closure.
+
+One function, :func:`build_cell`, assembles everything a dry-run /
+roofline pass needs:
+
+  * the step function (train_step / prefill / decode_step),
+  * abstract arguments (ShapeDtypeStructs — nothing allocates),
+  * in/out shardings from the rules engine,
+  * bookkeeping (param counts, MODEL_FLOPS estimate for §Roofline).
+
+``Variant`` carries every §Perf tuning knob so hillclimb candidates are
+*data* (recorded in EXPERIMENTS.md) rather than code edits.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as configs_lib
+from repro.models import lm, params as params_lib
+from repro.models.config import ModelConfig
+from repro.models.context import ExecContext
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.steps import TrainHParams, build_train_step
+from repro.sharding import make_plan, sharding_for_tree, spec_for_axes
+
+
+@dataclass(frozen=True)
+class Variant:
+    """Tuning knobs for one lowering (the §Perf search space)."""
+    name: str = "baseline"
+    # train
+    grad_accum: int = 16
+    remat: str = "block"
+    fsdp: bool = True
+    quantize_moments: bool = False
+    compress_pod: bool = False
+    param_dtype: str = "bfloat16"
+    # attention / kernels
+    attn_impl: str = "chunked"
+    attn_block_q: int = 512
+    seq_parallel_attn: bool = True
+    seq_sharded_residual: bool = False
+    # moe
+    moe_impl: str = "capacity"
+    # decode
+    seq_shard_decode: bool = True
+    seq_over_data: bool = False         # batch-1 decode: KV seq over
+                                        # (data×model) under pure GSPMD
+    cache_dtype: str = "bfloat16"
+    local_ring_cache: bool = False      # window-sized cache for local layers
+
+    def with_(self, **kw) -> "Variant":
+        return replace(self, **kw)
+
+
+BASELINE = Variant()
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    kind: str
+    fn: Any                      # the function to jit
+    args: tuple                  # abstract args
+    in_shardings: Any
+    out_shardings: Any
+    donate: tuple
+    model_flops: float           # 6·N(,active)·D per step
+    note: str = ""
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def _batch_shardings(batch_specs: dict, mesh: Mesh, batch_axes) -> dict:
+    """tokens/labels/stub tensors: dim0 = batch → batch_axes (positions3 has
+    batch on dim1)."""
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions3":
+            spec = P(None, batch_axes)
+        else:
+            spec = P(batch_axes)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def _cache_shardings(caches, cfg: ModelConfig, mesh: Mesh, batch_axes,
+                     model_axis: Optional[str], seq_shard: bool,
+                     seq_over_data: bool = False):
+    """Walk the cache pytree (group-list structure with named leaves).
+
+    ``seq_over_data``: when the request batch can't shard the data axis
+    (long_500k decodes batch=1), the otherwise-idle data axis joins the
+    model axis on the *sequence* dim — a 500k KV cache then spreads over
+    all 256 chips instead of 16.  GSPMD partitions the score/value
+    contractions over S and inserts the exact psums (the shard_map
+    flash-decode path serves the model-axis-only layout)."""
+
+    def mk(spec_dims):
+        # drop axes that don't divide (replicate instead)
+        return NamedSharding(mesh, P(*spec_dims))
+
+    def seq_axes_for(extent, baxes):
+        if not seq_shard or model_axis is None:
+            return None
+        if seq_over_data and baxes is None and batch_axes:
+            combined = tuple(batch_axes) + (model_axis,)
+            if extent % _axes_size(mesh, combined) == 0:
+                return combined
+        if extent % mesh.shape[model_axis] == 0:
+            return model_axis
+        return None
+
+    def leaf(name, t):
+        shp = t.shape
+        bdim = 1                       # (k, B, ...)
+        baxes = batch_axes if batch_axes and \
+            shp[bdim] % _axes_size(mesh, batch_axes) == 0 else None
+        if name in ("k", "v", "xk", "xv"):      # (k,B,Hkv,S,dh)
+            return mk((None, baxes, None, seq_axes_for(shp[3], baxes), None))
+        if name in ("c_kv", "k_rope"):          # (k,B,S,R)
+            return mk((None, baxes, seq_axes_for(shp[2], baxes), None))
+        # conv/ssm states: (k,B,...) — batch only
+        return mk((None, baxes) + (None,) * (len(shp) - 2))
+
+    def walk(c):
+        if isinstance(c, dict):
+            return {k: (walk(v) if isinstance(v, dict) else leaf(k, v))
+                    for k, v in c.items()}
+        if isinstance(c, list):
+            return [walk(v) for v in c]
+        return c
+
+    return walk(caches)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the roofline's useful-compute numerator)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per step; decode D = batch·1."""
+    n = cfg.active_params() if cfg.moe is not None else cfg.num_params()
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# the builder
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               variant: Variant = BASELINE) -> Cell:
+    cfg = configs_lib.get_config(arch)
+    cell_def = configs_lib.SHAPES[shape]
+    kind = cell_def.kind
+    specs = configs_lib.input_specs(
+        arch, shape, cache_dtype=jnp.dtype(variant.cache_dtype),
+        local_ring=variant.local_ring_cache)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model_axis = "model" if "model" in mesh.axis_names else None
+    dtype = jnp.dtype(variant.param_dtype)
+
+    ctx = ExecContext(
+        backend="xla", mesh=mesh, batch_axes=batch_axes,
+        model_axis=model_axis,
+        remat=variant.remat if kind == "train" else "none",
+        attn_impl=variant.attn_impl, attn_block_q=variant.attn_block_q,
+        seq_parallel_attn=variant.seq_parallel_attn,
+        seq_sharded_residual=variant.seq_sharded_residual,
+        moe_impl=variant.moe_impl,
+        # seq_over_data uses plain GSPMD partitioning of the decode
+        # contraction instead of the model-axis shard_map flash path
+        seq_shard_decode=(variant.seq_shard_decode and kind == "decode"
+                          and not variant.seq_over_data),
+    )
+
+    key = jax.random.PRNGKey(0)
+    # eval_shape the params; the axes twin (string tuples) rides out via
+    # closure — it is deterministic metadata, not traced values.
+    axes_box = {}
+
+    def _init_p(k):
+        p, ax = params_lib.init_params(cfg, k, dtype)
+        axes_box["ax"] = ax
+        return p
+
+    pshape = jax.eval_shape(_init_p, key)
+    axes = axes_box["ax"]
+    plan = make_plan(cfg, mode="train" if kind == "train" else "serve",
+                     fsdp=variant.fsdp, moe_impl=variant.moe_impl)
+    pshard = sharding_for_tree(axes, plan, mesh)
+
+    mf = model_flops(cfg, kind, cell_def.global_batch, cell_def.seq_len)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(quantize_moments=variant.quantize_moments)
+        hp = TrainHParams(grad_accum=variant.grad_accum,
+                          compress_pod=variant.compress_pod)
+        step = build_train_step(cfg, ctx, opt_cfg, hp)
+        oshape = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg),
+                                pshape)
+        if variant.quantize_moments:
+            oshard = _qtensor_shardings(oshape, pshard, mesh)
+        else:
+            oshard = {"m": pshard, "v": pshard,
+                      "step": NamedSharding(mesh, P())}
+        bshard = _batch_shardings(specs["batch"], mesh, batch_axes)
+        args = (pshape, oshape, specs["batch"])
+        in_sh = (pshard, oshard, bshard)
+        if variant.compress_pod:
+            efshape = jax.eval_shape(
+                lambda p: jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.dtype(hp.ef_dtype)), p),
+                pshape)
+            args = args + (efshape,)
+            in_sh = in_sh + (pshard,)
+            out_sh = (pshard, oshard,
+                      _replicated(jax.eval_shape(step, *args)[2], mesh),
+                      pshard)
+        else:
+            out_sh = (pshard, oshard, _replicated(
+                jax.eval_shape(step, *args)[2], mesh))
+        return Cell(arch, shape, cfg, kind, step, args, in_sh, out_sh,
+                    donate=(0, 1), model_flops=mf)
+
+    if kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, caches, _ = lm.prefill(params, batch, cfg, ctx)
+            return logits, caches
+        bshard = _batch_shardings(specs["batch"], mesh, batch_axes)
+        out_shape = jax.eval_shape(prefill_fn, pshape, specs["batch"])
+        cache_sh = _cache_shardings(out_shape[1], cfg, mesh, batch_axes,
+                                    model_axis, variant.seq_shard_decode)
+        out_sh = (NamedSharding(mesh, P(batch_axes, None, model_axis)),
+                  cache_sh)
+        return Cell(arch, shape, cfg, kind, prefill_fn,
+                    (pshape, specs["batch"]), (pshard, bshard), out_sh,
+                    donate=(), model_flops=mf)
+
+    # decode
+    pos3 = specs.get("positions3")
+
+    def decode_fn(params, token, caches, length, positions3=None):
+        logits, new_caches = lm.decode_step(params, token, caches, length,
+                                            cfg, ctx, positions3=positions3)
+        return logits, new_caches
+
+    cache_sh = _cache_shardings(specs["caches"], cfg, mesh, batch_axes,
+                                model_axis,
+                                variant.seq_shard_decode or
+                                variant.seq_over_data,
+                                seq_over_data=variant.seq_over_data)
+    tok_sh = NamedSharding(
+        mesh, P(batch_axes if cell_def.global_batch %
+                _axes_size(mesh, batch_axes) == 0 else None))
+    args = [pshape, specs["token"], specs["caches"], specs["length"]]
+    in_sh = [pshard, tok_sh, cache_sh, NamedSharding(mesh, P())]
+    if pos3 is not None:
+        args.append(pos3)
+        in_sh.append(NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(None, None, model_axis)), cache_sh)
+    return Cell(arch, shape, cfg, kind, decode_fn, tuple(args),
+                tuple(in_sh), out_sh, donate=(2,), model_flops=mf)
+
+
+def _qtensor_shardings(oshape, pshard, mesh: Mesh):
+    """8-bit moments inherit the parameter's sharding: codes are shape-
+    identical to the param; scales drop the (blocked) last-axis entry."""
+    from repro.optim.quant import QTensor
+
+    def one(q, psh):
+        if not isinstance(q, QTensor):
+            return NamedSharding(mesh, P())
+        spec = psh.spec
+        dims = list(spec) + [None] * (q.codes.ndim - len(spec))
+        scale_dims = dims[:-1] if q.codes.ndim else []
+        # scale's last (block) axis replicates unless divisible
+        if q.scale.ndim == len(scale_dims) + 1:
+            scale_dims = scale_dims + [None]
+        return QTensor(NamedSharding(mesh, P(*dims)),
+                       NamedSharding(mesh, P(*scale_dims)))
+
+    is_q = lambda x: isinstance(x, QTensor)
+    return {"m": jax.tree.map(one, oshape["m"], pshard, is_leaf=is_q),
+            "v": jax.tree.map(one, oshape["v"], pshard, is_leaf=is_q),
+            "step": NamedSharding(mesh, P())}

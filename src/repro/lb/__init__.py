@@ -1,0 +1,15 @@
+"""Ludwig-style binary-fluid lattice Boltzmann — the paper's application.
+
+D3Q19 BGK collision of two distributions (fluid f, order parameter g) with
+a symmetric free-energy force; streaming with periodic boundaries; halo
+exchange over the device mesh via masked pack + ``ppermute``.
+
+The collision hot-spot runs through the targetDP kernel layer
+(:mod:`repro.kernels.lb_collision`); :mod:`repro.lb.baseline` keeps the
+paper's "original code" structure (AoS, model-dictated innermost extents)
+as the measurable Fig.-1 baseline.
+"""
+from .params import LBParams
+from .sim import BinaryFluidSim
+
+__all__ = ["LBParams", "BinaryFluidSim"]

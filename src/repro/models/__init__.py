@@ -1,0 +1,12 @@
+"""LM substrate: composable model definitions for the assigned archs."""
+from .config import (AttnConfig, EncoderConfig, MLAConfig, MoEConfig,
+                     ModelConfig, SSMConfig, plan_layer_groups,
+                     repeat_program)
+from .context import ExecContext
+from .params import count_params, init_params
+
+__all__ = [
+    "AttnConfig", "EncoderConfig", "MLAConfig", "MoEConfig", "ModelConfig",
+    "SSMConfig", "ExecContext", "plan_layer_groups", "repeat_program",
+    "count_params", "init_params",
+]

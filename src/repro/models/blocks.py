@@ -1,0 +1,112 @@
+"""Block-level forward functions: one dispatch for train/prefill/decode.
+
+``apply_block`` is the single entry point the layer-program scan calls; the
+block type string selects the mixer (attention variant / MoE / SSM) and the
+presence of ``cache`` selects decode vs full-sequence mode.
+
+Cache structure per block type:
+  attn family   {"k","v"}: (B, Hkv, S_max, dh)
+  MLA           {"c_kv": (B, S_max, R), "k_rope": (B, S_max, rope_dim)}
+  xattn         self {"k","v"} + {"xk","xv"} cross K/V (set at prefill)
+  mamba1        {"conv": (B, k-1, di), "ssm": (B, di, N)}
+  mamba2        {"conv","conv_bc","ssm"}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, mla, moe, ssm
+from .config import ModelConfig
+from .context import ExecContext
+
+
+def _mlp_for(btype, bp, x, cfg, ctx):
+    if btype == "attn_moe":
+        if ctx.moe_impl == "a2a":
+            return moe.moe_a2a(bp["mlp"], x, cfg, ctx)
+        return moe.moe_mlp(bp["mlp"], x, cfg, ctx)
+    return layers.mlp(bp["mlp"], x, cfg, ctx)
+
+
+def _attn_for(bp, x, cfg, ctx, *, rope, causal, window, cache, length,
+              cross_kv=None):
+    """Dispatch attention (standard or MLA) for full or decode mode."""
+    if cfg.mla is not None:
+        if cache is None:
+            out, kv = mla.mla_full(bp, x, cfg, ctx, rope=rope, causal=causal)
+            return out, {"c_kv": kv[0], "k_rope": kv[1]}
+        out, new_cache = mla.mla_decode(bp, x, cfg, ctx, cache, length,
+                                        rope=rope)
+        return out, new_cache
+    a = cfg.attn
+    if cache is None:
+        out, kv = attention.full_attention(bp, x, a, ctx, rope=rope,
+                                           causal=causal, window=window,
+                                           kv_override=cross_kv)
+        return out, {"k": kv[0].transpose(0, 2, 1, 3),
+                     "v": kv[1].transpose(0, 2, 1, 3)}
+    out, new_cache = attention.decode_attention(
+        bp, x, a, ctx, cache, length, rope=rope, window=window,
+        cross=cross_kv is not None)
+    return out, new_cache
+
+
+def apply_block(btype: str, bp, x, *, cfg: ModelConfig, ctx: ExecContext,
+                shared=None, rope=None, rope_local=None, cache=None,
+                length=None, enc_out=None):
+    """Apply one block; returns (x, new_cache).
+
+    ``rope_local`` is the sliding-window layers' table when the arch uses a
+    different local theta (gemma3).  ``enc_out`` feeds cross-attention.
+    """
+    if btype == "shared_attn":
+        bp = shared
+        btype = "attn"
+
+    if btype in ("mamba1", "mamba2"):
+        mixer = ssm.mamba1_mixer if btype == "mamba1" else ssm.mamba2_mixer
+        h = layers.norm(bp["norm1"], x, cfg, ctx)
+        out, new_cache = mixer(bp["mixer"], h, cfg, ctx, cache=cache,
+                               length=length)
+        return x + out, new_cache
+
+    window = cfg.attn.window if (cfg.attn and btype == "local") else 0
+    rp = rope_local if (btype == "local" and rope_local is not None) else rope
+    causal = btype != "enc"
+
+    h = layers.norm(bp["norm1"], x, cfg, ctx)
+    self_cache = cache.get("self") if isinstance(cache, dict) and "self" in cache \
+        else cache
+    out, new_self = _attn_for(bp["attn"], h, cfg, ctx, rope=rp, causal=causal,
+                              window=window, cache=self_cache, length=length)
+    x = x + out
+
+    new_cache = new_self
+    if btype == "xattn":
+        hx = layers.norm(bp["norm_x"], x, cfg, ctx)
+        if cache is not None:
+            xkv_cache = {"k": cache["xk"], "v": cache["xv"]}
+            out, _ = _attn_for(bp["xattn"], hx, cfg, ctx, rope=None,
+                               causal=False, window=0, cache=xkv_cache,
+                               length=length, cross_kv=((), ()))
+        else:
+            # prefill/train: project cross K/V from the encoder output
+            a = cfg.attn
+            k = (enc_out @ bp["xattn"]["wk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], a.n_kv_heads, a.head_dim)
+            v = (enc_out @ bp["xattn"]["wv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], a.n_kv_heads, a.head_dim)
+            out, _ = attention.full_attention(
+                bp["xattn"], hx, a, ctx, rope=None, causal=False, window=0,
+                kv_override=(k, v))
+            new_cache = {"self": new_self,
+                         "xk": k.transpose(0, 2, 1, 3),
+                         "xv": v.transpose(0, 2, 1, 3)}
+        x = x + out
+        if cache is not None:
+            new_cache = {"self": new_self, "xk": cache["xk"], "xv": cache["xv"]}
+
+    h = layers.norm(bp["norm2"], x, cfg, ctx)
+    x = x + _mlp_for(btype, bp, h, cfg, ctx)
+    return x, new_cache

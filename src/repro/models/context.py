@@ -1,0 +1,103 @@
+"""Execution context: backend switch, mesh wiring, tuning knobs.
+
+The targetDP contract at framework scale: model code is written once; the
+``ExecContext`` decides *how* it runs — which kernel backend (jnp oracle vs
+Pallas), which mesh axes carry tokens vs weights (TLP), and the block/VVL
+tuning parameters (ILP).  The dry-run and the TPU deployment differ only in
+this object.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class ExecContext:
+    backend: str = "xla"                 # "xla" | "pallas" | "pallas_interpret"
+    mesh: Optional[Mesh] = None
+    batch_axes: tuple[str, ...] = ()     # mesh axes sharding tokens/batch
+    model_axis: Optional[str] = None     # mesh axis carrying tensor parallelism
+    remat: str = "none"                  # "none" | "block"
+    # tuning knobs (the VVL family)
+    vvl: int = 256                       # pointwise-kernel token block
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    scan_block_d: int = 128
+    scan_block_t: int = 128
+    # attention options
+    attn_impl: str = "ref"               # "ref" | "chunked" (xla oracle path)
+    seq_parallel_attn: bool = True       # shard q-seq over model when heads
+                                         # don't divide TP (see attention.py)
+    seq_sharded_residual: bool = False   # Megatron-SP-style: keep the
+                                         # residual stream S-sharded over the
+                                         # model axis; only K/V (small) and
+                                         # the TP matmuls gather/scatter
+    # decode options
+    seq_shard_decode: bool = False       # shard KV over model axis (flash-decode)
+    # moe options
+    moe_impl: str = "capacity"           # "capacity" | "ragged" | "a2a"
+
+    def with_(self, **kw) -> "ExecContext":
+        return replace(self, **kw)
+
+    @property
+    def shard_map_mesh(self):
+        """Mesh to hand nested ``shard_map``s.
+
+        Inside a partial-manual region (the pod-manual gradient-
+        compression wrapper) the tracing context carries an AbstractMesh
+        with the manual axes marked; a nested shard_map must receive
+        *that* mesh, not the original all-Auto one, or jax rejects the
+        mismatch.  Outside any manual region this returns ``self.mesh``.
+        """
+        try:
+            am = jax.sharding.get_abstract_mesh()
+            if am is not None and am.shape_tuple:
+                return am
+        except Exception:  # noqa: BLE001 — fall back to the concrete mesh
+            pass
+        return self.mesh
+
+    def constrain_batch(self, x):
+        """Pin an activation's leading (batch) dim to the batch mesh axes.
+
+        GSPMD propagation is ambiguous when FSDP shards weights' d_model
+        over the same axis that carries the batch: left alone it can pick
+        a D-sharded/batch-replicated activation layout (a measured 16×
+        FLOP replication on the non-TP-divisible archs).  Production
+        frameworks pin the residual stream explicitly; so do we.
+        """
+        if self.mesh is None or not self.batch_axes or x.ndim < 2:
+            return x
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        if x.shape[0] % n != 0:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dims = [None] * (x.ndim - 1)
+        if (self.seq_sharded_residual and x.ndim == 3 and self.model_axis
+                and x.shape[1] % self.mesh.shape[self.model_axis] == 0):
+            dims[0] = self.model_axis
+        spec = P(self.batch_axes, *dims)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n

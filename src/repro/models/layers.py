@@ -1,0 +1,129 @@
+"""Common layers: norms, rotary embeddings, MLPs, embedding/loss.
+
+Site-wise ops (norms, activations, rotations) route through the targetDP
+kernel layer (:mod:`repro.kernels.ops`) — single source, backend-switched.
+Matmuls stay as jnp einsums so XLA drives the MXU and GSPMD shards them
+from the parameter shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import AttnConfig, ModelConfig
+from .context import ExecContext
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(w, x, ctx: ExecContext, *, scale_offset: float = 1.0):
+    """RMSNorm with the (1 + w) convention (w init = 0)."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    y = ops.rmsnorm(x2, w, backend=ctx.backend, vvl=ctx.vvl,
+                    scale_offset=scale_offset)
+    return y.reshape(shp)
+
+
+def norm(w, x, cfg: ModelConfig, ctx: ExecContext):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(w, x, ctx)
+    # layernorm (whisper): no bias variant, (1+w) scale
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * (1.0 + w.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections=None):
+    """cos/sin tables.
+
+    positions: ``(B, S)`` int32, or ``(3, B, S)`` for M-RoPE (t, h, w).
+    Returns cos, sin of shape ``(B, S, head_dim//2)`` in float32.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    else:
+        if positions.ndim != 3:
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        sec_id = jnp.repeat(
+            jnp.arange(3), jnp.asarray(mrope_sections), total_repeat_length=half)
+        pos_f = positions.astype(jnp.float32)                      # (3,B,S)
+        pos_per_freq = jnp.take(pos_f, sec_id, axis=0)             # (half,B,S)
+        ang = jnp.moveaxis(pos_per_freq, 0, -1) * inv_freq         # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x: (B, S, H, head_dim)`` (split-halves / NeoX convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x1.dtype)
+    s = sin[:, :, None, :].astype(x1.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(p, x, cfg: ModelConfig, ctx: ExecContext):
+    """Dense MLP: gated (swiglu/geglu) or plain (relu2/gelu)."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    up = x2 @ p["w_up"]
+    if "w_gate" in p:
+        gate = x2 @ p["w_gate"]
+        h = ops.gated_act(gate, up, kind=cfg.act, backend=ctx.backend,
+                          vvl=ctx.vvl)
+    else:
+        h = ops.gated_act(up, None, kind=cfg.act, backend=ctx.backend,
+                          vvl=ctx.vvl)
+    return (h @ p["w_down"]).reshape(shp)
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def logits_from_hidden(params, x, cfg: ModelConfig):
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    # mask vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)  # broadcasts on last axis
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in fp32; labels < vocab_size; mask 1=count."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,394 @@
+"""Parameter initialisation + logical-axis metadata.
+
+``init_params(cfg, key, dtype)`` returns ``(params, axes)``: twin pytrees
+where every array leaf in ``params`` has a tuple of logical axis names in
+``axes`` (e.g. ``("layers", "d_model", "heads")``).  The sharding rules
+engine (:mod:`repro.sharding.rules`) maps logical names → mesh axes; the
+``"layers"`` axis is the scan-stack dimension and is never sharded.
+
+Layer-group stacking: params for a scan group with unit ``(t0, t1, ...)``
+and ``k`` repeats are stored as ``groups[i] = [per-position params]`` with
+every leaf stacked to leading extent ``k`` (``k=1`` groups are still
+stacked, keeping one code path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, MoEConfig, SSMConfig, plan_layer_groups
+
+Axes = tuple[Optional[str], ...]
+
+
+def _dense(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class _KeyGen:
+    def __init__(self, key):
+        self.key = key
+
+    def __call__(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# per-block parameter builders (params, axes) — structure must match blocks.py
+# ---------------------------------------------------------------------------
+
+def _norm_param(d, dtype):
+    return jnp.zeros((d,), dtype), ("d_model",)
+
+
+def _attn_params(cfg: ModelConfig, kg, dtype):
+    a = cfg.attn
+    d = cfg.d_model
+    p, ax = {}, {}
+    p["wq"] = _dense(kg(), (d, a.n_heads * a.head_dim), dtype)
+    ax["wq"] = ("d_model", "heads_x_dim")
+    p["wk"] = _dense(kg(), (d, a.n_kv_heads * a.head_dim), dtype)
+    ax["wk"] = ("d_model", "kv_x_dim")
+    p["wv"] = _dense(kg(), (d, a.n_kv_heads * a.head_dim), dtype)
+    ax["wv"] = ("d_model", "kv_x_dim")
+    p["wo"] = _dense(kg(), (a.n_heads * a.head_dim, d), dtype)
+    ax["wo"] = ("heads_x_dim", "d_model")
+    if a.qk_norm:
+        p["q_norm"] = jnp.zeros((a.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((a.head_dim,), dtype)
+        ax["q_norm"] = ("head_dim",)
+        ax["k_norm"] = ("head_dim",)
+    return p, ax
+
+
+def _mla_params(cfg: ModelConfig, kg, dtype):
+    m, a, d = cfg.mla, cfg.attn, cfg.d_model
+    h = a.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    p, ax = {}, {}
+    p["w_dq"] = _dense(kg(), (d, m.q_lora_rank), dtype)
+    ax["w_dq"] = ("d_model", "lora")
+    p["q_norm"] = jnp.zeros((m.q_lora_rank,), dtype)
+    ax["q_norm"] = ("lora",)
+    p["w_uq"] = _dense(kg(), (m.q_lora_rank, h * qk), dtype, fan_in=m.q_lora_rank)
+    ax["w_uq"] = ("lora", "heads_x_dim")
+    p["w_dkv"] = _dense(kg(), (d, m.kv_lora_rank), dtype)
+    ax["w_dkv"] = ("d_model", "lora")
+    p["kv_norm"] = jnp.zeros((m.kv_lora_rank,), dtype)
+    ax["kv_norm"] = ("lora",)
+    p["w_kr"] = _dense(kg(), (d, m.rope_head_dim), dtype)
+    ax["w_kr"] = ("d_model", "head_dim")
+    p["w_uk"] = _dense(kg(), (m.kv_lora_rank, h * m.nope_head_dim), dtype,
+                       fan_in=m.kv_lora_rank)
+    ax["w_uk"] = ("lora", "heads_x_dim")
+    p["w_uv"] = _dense(kg(), (m.kv_lora_rank, h * m.v_head_dim), dtype,
+                       fan_in=m.kv_lora_rank)
+    ax["w_uv"] = ("lora", "heads_x_dim")
+    p["wo"] = _dense(kg(), (h * m.v_head_dim, d), dtype)
+    ax["wo"] = ("heads_x_dim", "d_model")
+    return p, ax
+
+
+def _mlp_params(cfg: ModelConfig, kg, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    p, ax = {}, {}
+    p["w_up"] = _dense(kg(), (d, f), dtype)
+    ax["w_up"] = ("d_model", "d_ff")
+    if gated:
+        p["w_gate"] = _dense(kg(), (d, f), dtype)
+        ax["w_gate"] = ("d_model", "d_ff")
+    p["w_down"] = _dense(kg(), (f, d), dtype)
+    ax["w_down"] = ("d_ff", "d_model")
+    return p, ax
+
+
+def _moe_params(cfg: ModelConfig, kg, dtype):
+    mo: MoEConfig = cfg.moe
+    d, e, fe = cfg.d_model, mo.num_experts, mo.d_expert
+    gated = cfg.act in ("swiglu", "geglu")
+    p, ax = {}, {}
+    p["router"] = _dense(kg(), (d, e), dtype)
+    ax["router"] = ("d_model", "experts")
+    p["w_up"] = _dense(kg(), (e, d, fe), dtype, fan_in=d)
+    ax["w_up"] = ("experts", "d_model", "d_ff")
+    if gated:
+        p["w_gate"] = _dense(kg(), (e, d, fe), dtype, fan_in=d)
+        ax["w_gate"] = ("experts", "d_model", "d_ff")
+    p["w_down"] = _dense(kg(), (e, fe, d), dtype, fan_in=fe)
+    ax["w_down"] = ("experts", "d_ff", "d_model")
+    if mo.num_shared:
+        sp, sax = _mlp_params(cfg, kg, dtype, d_ff=fe * mo.num_shared)
+        p["shared"] = sp
+        ax["shared"] = sax
+    return p, ax
+
+
+def _ssm_dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return s, d_inner, dt_rank
+
+
+def _mamba1_params(cfg: ModelConfig, kg, dtype):
+    # Projections are split (not fused) so each matrix shards cleanly on its
+    # own logical axis (DESIGN.md §6: mamba TP slices d_inner over `model`).
+    s, di, dtr = _ssm_dims(cfg)
+    d, n = cfg.d_model, s.d_state
+    p, ax = {}, {}
+    p["w_xm"] = _dense(kg(), (d, di), dtype)
+    ax["w_xm"] = ("d_model", "d_ff")
+    p["w_z"] = _dense(kg(), (d, di), dtype)
+    ax["w_z"] = ("d_model", "d_ff")
+    p["conv_w"] = _dense(kg(), (s.d_conv, di), dtype, fan_in=s.d_conv)
+    ax["conv_w"] = (None, "d_ff")
+    p["conv_b"] = jnp.zeros((di,), dtype)
+    ax["conv_b"] = ("d_ff",)
+    p["w_x"] = _dense(kg(), (di, dtr + 2 * n), dtype)
+    ax["w_x"] = ("d_ff", None)
+    p["w_dt"] = _dense(kg(), (dtr, di), dtype)
+    ax["w_dt"] = (None, "d_ff")
+    dt_init = jnp.exp(jax.random.uniform(
+        kg(), (di,), jnp.float32, minval=math.log(1e-3), maxval=math.log(1e-1)))
+    p["dt_bias"] = jnp.log(jnp.expm1(dt_init)).astype(dtype)
+    ax["dt_bias"] = ("d_ff",)
+    p["a_log"] = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype)
+    ax["a_log"] = ("d_ff", None)
+    p["d_skip"] = jnp.ones((di,), dtype)
+    ax["d_skip"] = ("d_ff",)
+    p["w_out"] = _dense(kg(), (di, d), dtype)
+    ax["w_out"] = ("d_ff", "d_model")
+    return p, ax
+
+
+def _mamba2_params(cfg: ModelConfig, kg, dtype):
+    s, di, _ = _ssm_dims(cfg)
+    d, n, g = cfg.d_model, s.d_state, s.n_groups
+    heads = di // s.head_dim
+    p, ax = {}, {}
+    p["w_xm"] = _dense(kg(), (d, di), dtype)
+    ax["w_xm"] = ("d_model", "d_ff")
+    p["w_z"] = _dense(kg(), (d, di), dtype)
+    ax["w_z"] = ("d_model", "d_ff")
+    p["w_B"] = _dense(kg(), (d, g * n), dtype)
+    ax["w_B"] = ("d_model", None)
+    p["w_C"] = _dense(kg(), (d, g * n), dtype)
+    ax["w_C"] = ("d_model", None)
+    p["w_dtin"] = _dense(kg(), (d, heads), dtype)
+    ax["w_dtin"] = ("d_model", "heads")
+    p["conv_w"] = _dense(kg(), (s.d_conv, di), dtype, fan_in=s.d_conv)
+    ax["conv_w"] = (None, "d_ff")
+    p["conv_b"] = jnp.zeros((di,), dtype)
+    ax["conv_b"] = ("d_ff",)
+    p["conv_w_bc"] = _dense(kg(), (s.d_conv, 2 * g * n), dtype, fan_in=s.d_conv)
+    ax["conv_w_bc"] = (None, None)
+    p["conv_b_bc"] = jnp.zeros((2 * g * n,), dtype)
+    ax["conv_b_bc"] = (None,)
+    p["dt_bias"] = jnp.zeros((heads,), dtype)
+    ax["dt_bias"] = ("heads",)
+    p["a_log"] = jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(dtype)
+    ax["a_log"] = ("heads",)
+    p["d_skip"] = jnp.ones((heads,), dtype)
+    ax["d_skip"] = ("heads",)
+    p["out_norm"] = jnp.zeros((di,), dtype)
+    ax["out_norm"] = ("d_ff",)
+    p["w_out"] = _dense(kg(), (di, d), dtype)
+    ax["w_out"] = ("d_ff", "d_model")
+    return p, ax
+
+
+def _block_params(btype: str, cfg: ModelConfig, kg, dtype):
+    """(params, axes) for one block of type ``btype``."""
+    p, ax = {"norm1": None}, {"norm1": None}
+    p["norm1"], ax["norm1"] = _norm_param(cfg.d_model, dtype)
+
+    if btype in ("attn", "local", "attn_dense", "attn_moe", "shared_attn",
+                 "xattn", "enc"):
+        if cfg.mla is not None:
+            p["attn"], ax["attn"] = _mla_params(cfg, kg, dtype)
+        else:
+            p["attn"], ax["attn"] = _attn_params(cfg, kg, dtype)
+        p["norm2"], ax["norm2"] = _norm_param(cfg.d_model, dtype)
+        if btype == "xattn":
+            p["xattn"], ax["xattn"] = _attn_params(cfg, kg, dtype)
+            p["norm_x"], ax["norm_x"] = _norm_param(cfg.d_model, dtype)
+        if btype == "attn_moe":
+            p["mlp"], ax["mlp"] = _moe_params(cfg, kg, dtype)
+        else:
+            p["mlp"], ax["mlp"] = _mlp_params(cfg, kg, dtype)
+    elif btype == "mamba1":
+        p["mixer"], ax["mixer"] = _mamba1_params(cfg, kg, dtype)
+    elif btype == "mamba2":
+        p["mixer"], ax["mixer"] = _mamba2_params(cfg, kg, dtype)
+    else:
+        raise ValueError(btype)
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _prepend_axis(axes_tree, name="layers"):
+    return jax.tree.map(
+        lambda ax: (name, *ax) if isinstance(ax, tuple) else ax, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Returns (params, axes) twin pytrees for the full model."""
+    kg = _KeyGen(key)
+    d = cfg.d_model
+    params: dict = {}
+    axes: dict = {}
+
+    params["embed"] = _dense(kg(), (cfg.padded_vocab, d), dtype, fan_in=1) * 0.02
+    axes["embed"] = ("vocab", "d_model")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(kg(), (d, cfg.padded_vocab), dtype)
+        axes["lm_head"] = ("d_model", "vocab")
+    if cfg.pos_embed == "learned":
+        params["pos_embed"] = _dense(kg(), (cfg.max_position, d), dtype, fan_in=1) * 0.02
+        axes["pos_embed"] = (None, "d_model")
+
+    # decoder (or unique) stack: scan groups
+    groups = plan_layer_groups(cfg.layer_program)
+    gp, gax = [], []
+    shared_built = False
+    for unit, k in groups:
+        unit_p, unit_ax = [], []
+        for btype in unit:
+            if btype == "shared_attn":
+                if not shared_built:
+                    params["shared_block"], axes["shared_block"] = \
+                        _block_params("attn", cfg, kg, dtype)
+                    shared_built = True
+                # per-position: no unit-varying params (weight-tied)
+                unit_p.append({})
+                unit_ax.append({})
+            else:
+                reps = [_block_params(btype, cfg, kg, dtype) for _ in range(k)]
+                unit_p.append(_stack([r[0] for r in reps]))
+                unit_ax.append(_prepend_axis(reps[0][1]))
+        gp.append(unit_p)
+        gax.append(unit_ax)
+    params["groups"] = gp
+    axes["groups"] = gax
+
+    params["final_norm"], axes["final_norm"] = _norm_param(d, dtype)
+
+    if cfg.is_encdec:
+        enc = cfg.encoder
+        enc_groups = []
+        enc_axes = []
+        reps = [_block_params("enc", cfg, kg, dtype) for _ in range(enc.n_layers)]
+        enc_groups.append([_stack([r[0] for r in reps])])
+        enc_axes.append([_prepend_axis(reps[0][1])])
+        params["encoder"] = {
+            "groups": enc_groups,
+            "final_norm": _norm_param(d, dtype)[0],
+            "pos_embed": _dense(kg(), (enc.n_frames, d), dtype, fan_in=1) * 0.02,
+        }
+        axes["encoder"] = {
+            "groups": enc_axes,
+            "final_norm": ("d_model",),
+            "pos_embed": (None, "d_model"),
+        }
+
+    if cfg.mtp_depth:
+        mtp_p, mtp_ax = [], []
+        for _ in range(cfg.mtp_depth):
+            bp, bax = _block_params(cfg.layer_program[-1], cfg, kg, dtype)
+            proj = _dense(kg(), (2 * d, d), dtype)
+            mtp_p.append({"proj": proj, "block": bp,
+                          "norm": _norm_param(d, dtype)[0]})
+            mtp_ax.append({"proj": ("d_model", "d_model"), "block": bax,
+                           "norm": ("d_model",)})
+        params["mtp"] = mtp_p
+        axes["mtp"] = mtp_ax
+
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (for 6·N·D)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    gated = cfg.act in ("swiglu", "geglu")
+
+    def attn_count():
+        if cfg.mla is not None:
+            m, h = cfg.mla, cfg.attn.n_heads
+            qk = m.nope_head_dim + m.rope_head_dim
+            return (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                    + d * m.kv_lora_rank + d * m.rope_head_dim
+                    + m.kv_lora_rank * h * (m.nope_head_dim + m.v_head_dim)
+                    + h * m.v_head_dim * d)
+        a = cfg.attn
+        return d * a.head_dim * (a.n_heads * 2 + a.n_kv_heads * 2)
+
+    def mlp_count(f):
+        return d * f * (3 if gated else 2)
+
+    def moe_count():
+        mo = cfg.moe
+        e = mo.top_k if active_only else mo.num_experts
+        total = d * mo.num_experts  # router always loaded
+        total += e * mo.d_expert * d * (3 if gated else 2)
+        if mo.num_shared:
+            total += mlp_count(mo.d_expert * mo.num_shared)
+        return total
+
+    def ssm_count(kind):
+        s, di, dtr = _ssm_dims(cfg)
+        n, g = s.d_state, s.n_groups
+        if kind == "mamba1":
+            return (d * 2 * di + s.d_conv * di + di
+                    + di * (dtr + 2 * n) + dtr * di + di + di * n + di
+                    + di * d)
+        heads = di // s.head_dim
+        return (d * (2 * di + 2 * g * n + heads)
+                + s.d_conv * (di + 2 * g * n) + di + 2 * g * n
+                + 3 * heads + di + di * d)
+
+    per_block = {
+        "attn": lambda: attn_count() + mlp_count(cfg.d_ff) + 2 * d,
+        "local": lambda: attn_count() + mlp_count(cfg.d_ff) + 2 * d,
+        "attn_dense": lambda: attn_count() + mlp_count(cfg.d_ff) + 2 * d,
+        "attn_moe": lambda: attn_count() + (moe_count() if cfg.moe else 0) + 2 * d,
+        "mamba1": lambda: ssm_count("mamba1") + d if cfg.ssm else 0,
+        "mamba2": lambda: ssm_count("mamba2") + d if cfg.ssm else 0,
+        "shared_attn": lambda: 0,  # counted once below
+        "xattn": lambda: 2 * attn_count() + mlp_count(cfg.d_ff) + 3 * d,
+        "enc": lambda: attn_count() + mlp_count(cfg.d_ff) + 2 * d,
+    }
+    total = sum(per_block[b]() for b in cfg.layer_program)
+    if "shared_attn" in cfg.layer_program:
+        total += attn_count() + mlp_count(cfg.d_ff) + 2 * d
+    total += cfg.padded_vocab * d  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.padded_vocab * d
+    if cfg.pos_embed == "learned":
+        total += cfg.max_position * d
+    if cfg.is_encdec:
+        total += cfg.encoder.n_layers * per_block["enc"]()
+        total += cfg.encoder.n_frames * d + d
+    if cfg.mtp_depth:
+        total += cfg.mtp_depth * (per_block[cfg.layer_program[-1]]() + 2 * d * d + d)
+    total += d  # final norm
+    return int(total)

@@ -1,0 +1,266 @@
+"""State-space mixers: Mamba-1 (falcon-mamba) and Mamba-2 SSD (zamba2).
+
+Memory discipline is the whole game for SSMs at scale:
+
+* **Mamba-1 train/prefill** — chunked scan: ``lax.scan`` over time chunks,
+  associative scan *within* a chunk (rematerialised), so nothing of size
+  L·d_inner·N is ever live.  On the Pallas backend the fused
+  :mod:`repro.kernels.mamba_scan` kernel keeps the state in VMEM instead.
+* **Mamba-2 train/prefill** — the SSD chunked matmul formulation (MXU
+  friendly): intra-chunk (Q×Q decay-masked score GEMMs) + inter-chunk
+  state recurrence over chunk boundaries only.
+* **decode** — O(1) recurrent state update per token for both.
+
+TP: d_inner (and mamba2 heads) shard over the model axis; the only
+cross-shard contractions are x_proj (mamba1, psum of a 288-wide vector)
+and the output projection psum — GSPMD inserts both from the param
+shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig, SSMConfig
+from .context import ExecContext
+from .params import _ssm_dims
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv, kernel size k (static, small).
+
+    x: (B, L, C); w: (k, C); b: (C,).  With ``state`` (B, k-1, C) the conv
+    continues from a decode/prefill boundary; returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)          # (B, k-1+L, C)
+    y = b
+    for j in range(k):
+        y = y + ext[:, j:j + x.shape[1], :] * w[j]
+    new_state = ext[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def _mamba1_inner(p, xm, cfg: ModelConfig, ctx: ExecContext, *, conv_state=None,
+                  ssm_state=None, decode=False):
+    """Shared pre/post machinery around the scan; xm: (B, L, di)."""
+    s, di, dtr = _ssm_dims(cfg)
+    n = s.d_state
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], state=conv_state)
+    xc = jax.nn.silu(xc)
+    xdbl = xc @ p["w_x"]                               # (B,L,dtr+2N), psum'd by GSPMD
+    dt_r, bmat, cmat = jnp.split(xdbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["w_dt"] + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (di, N)
+
+    if decode:
+        # single step: h' = h·exp(dt·A) + (dt·x)·B ; y = h'·C + D·x
+        decay = jnp.exp(dt[:, 0, :, None] * a[None])   # (B, di, N)
+        h = ssm_state * decay + (dt[:, 0] * xc[:, 0])[..., None] * bmat[:, 0][:, None, :]
+        y = (h * cmat[:, 0][:, None, :]).sum(-1) + p["d_skip"] * xc[:, 0]
+        return y[:, None, :].astype(xm.dtype), new_conv, h
+
+    if ctx.backend in ("pallas", "pallas_interpret"):
+        y, h_fin = ops.mamba_scan(xc, dt.astype(xc.dtype), bmat, cmat, a,
+                                  p["d_skip"].astype(jnp.float32),
+                                  backend=ctx.backend,
+                                  block_d=ctx.scan_block_d,
+                                  block_t=ctx.scan_block_t)
+    else:
+        y, h_fin = _chunked_scan(xc, dt, bmat, cmat, a,
+                                 p["d_skip"].astype(jnp.float32),
+                                 chunk=s.chunk)
+    return y.astype(xm.dtype), new_conv, h_fin
+
+
+def _chunked_scan(x, dt, bmat, cmat, a, d_skip, *, chunk):
+    """Chunked associative scan; only chunk-boundary states persist.
+
+    x, dt: (B, L, di); bmat/cmat: (B, L, N); a: (di, N).
+    """
+    batch, L, di = x.shape
+    n = a.shape[-1]
+    q = min(chunk, L)
+    l_pad = -(-L // q) * q
+    pad = lambda t: jnp.pad(t, ((0, 0), (0, l_pad - L), (0, 0)))
+    xs = (pad(x).reshape(batch, -1, q, di).swapaxes(0, 1),
+          pad(dt).reshape(batch, -1, q, di).swapaxes(0, 1),
+          pad(bmat).reshape(batch, -1, q, n).swapaxes(0, 1),
+          pad(cmat).reshape(batch, -1, q, n).swapaxes(0, 1))
+
+    @jax.checkpoint
+    def chunk_body(h0, inp):
+        xq, dtq, bq, cq = (t.astype(jnp.float32) for t in inp)
+        da = jnp.exp(dtq[..., None] * a)               # (B,Q,di,N)
+        u = (dtq * xq)[..., None] * bq[:, :, None, :]  # (B,Q,di,N)
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, b2 + a2 * b1
+
+        da_c, h_c = jax.lax.associative_scan(combine, (da, u), axis=1)
+        h_all = da_c * h0[:, None] + h_c               # (B,Q,di,N)
+        y = (h_all * cq[:, :, None, :]).sum(-1) + d_skip * xq
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((batch, di, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(batch, l_pad, di)[:, :L]
+    return y, h_fin
+
+
+def mamba1_mixer(p, x, cfg: ModelConfig, ctx: ExecContext, *, cache=None,
+                 length=None):
+    """Full mixer. x: (B, L, D).  With ``cache`` (decode) L must be 1.
+
+    cache: {"conv": (B, k-1, di), "ssm": (B, di, N)}.
+    Returns (out, new_cache) — new_cache is None in train mode.
+    """
+    xm = x @ p["w_xm"]
+    z = x @ p["w_z"]
+    if cache is not None:
+        y, new_conv, h = _mamba1_inner(p, xm, cfg, ctx,
+                                       conv_state=cache["conv"],
+                                       ssm_state=cache["ssm"], decode=True)
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        y, new_conv, h = _mamba1_inner(p, xm, cfg, ctx)
+        new_cache = {"conv": new_conv, "ssm": h}
+    out = (y * jax.nn.silu(z)) @ p["w_out"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _segsum(a):
+    """Stable segment-sum: S[i, j] = sum_{k in (j, i]} a[k], -inf above diag.
+
+    a: (..., Q) → (..., Q, Q).
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a_h, bm, cm, d_skip, *, chunk, init_state=None):
+    """SSD forward.
+
+    xh: (B, L, H, P); dt: (B, L, H); a_h: (H,) negative; bm/cm: (B, L, G, N)
+    broadcast over heads; returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    batch, L, h, p_dim = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    q = min(chunk, L)
+    l_pad = -(-L // q) * q
+    nc = l_pad // q
+
+    def padt(t):
+        return jnp.pad(t, ((0, 0), (0, l_pad - L)) + ((0, 0),) * (t.ndim - 2))
+
+    xq = padt(xh).reshape(batch, nc, q, h, p_dim)
+    dtq = padt(dt).reshape(batch, nc, q, h).astype(jnp.float32)
+    bq = jnp.repeat(padt(bm).reshape(batch, nc, q, g, n), rep, axis=3)
+    cq = jnp.repeat(padt(cm).reshape(batch, nc, q, g, n), rep, axis=3)
+
+    adt = dtq * a_h                                     # (B,nc,Q,H) negative
+    xdt = xq.astype(jnp.float32) * dtq[..., None]       # ∆-weighted input
+
+    @jax.checkpoint
+    def chunk_body(state, inp):
+        xc, adtc, bc, cc = inp                          # (B,Q,H,P),(B,Q,H),(B,Q,H,N)
+        seg = _segsum(adtc.swapaxes(1, 2))              # (B,H,Q,Q)
+        l_mat = jnp.exp(seg)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", cc, bc) * l_mat
+        y_diag = jnp.einsum("bhqk,bkhp->bqhp", scores, xc)
+
+        cum = jnp.cumsum(adtc, axis=1)                  # (B,Q,H)
+        total = cum[:, -1]                              # (B,H)
+        # state contribution into this chunk
+        decay_in = jnp.exp(cum)                         # decay from chunk start
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", cc * decay_in[..., None], state)
+        # new state: decay old + inject inputs decayed to chunk end
+        decay_out = jnp.exp(total[:, None] - cum)       # (B,Q,H)
+        state_new = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bqhn,bqhp->bhpn", bc * decay_out[..., None], xc)
+        return state_new, y_diag + y_off
+
+    xs = (xdt.swapaxes(0, 1), adt.swapaxes(0, 1),
+          bq.astype(jnp.float32).swapaxes(0, 1),
+          cq.astype(jnp.float32).swapaxes(0, 1))
+    state0 = (jnp.zeros((batch, h, p_dim, n), jnp.float32)
+              if init_state is None else init_state)
+    state_f, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(batch, l_pad, h, p_dim)[:, :L]
+    y = y + d_skip * xh.astype(jnp.float32)   # d_skip (H,1) ⊕ (B,L,H,P)
+    return y, state_f
+
+
+def mamba2_mixer(p, x, cfg: ModelConfig, ctx: ExecContext, *, cache=None,
+                 length=None):
+    """Mamba-2 mixer. x: (B, L, D); cache {"conv","conv_bc","ssm"} for decode."""
+    s, di, _ = _ssm_dims(cfg)
+    n, g = s.d_state, s.n_groups
+    hd = s.head_dim
+    heads = di // hd
+    b, L, _ = x.shape
+
+    xm = x @ p["w_xm"]
+    z = x @ p["w_z"]
+    bc = jnp.concatenate([x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    dt_in = x @ p["w_dtin"]                                  # (B,L,H)
+
+    conv_state = cache["conv"] if cache is not None else None
+    conv_state_bc = cache["conv_bc"] if cache is not None else None
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], state=conv_state)
+    bcc, new_conv_bc = _causal_conv(bc, p["conv_w_bc"], p["conv_b_bc"],
+                                    state=conv_state_bc)
+    xc = jax.nn.silu(xc)
+    bcc = jax.nn.silu(bcc)
+    bmat = bcc[..., :g * n].reshape(b, L, g, n)
+    cmat = bcc[..., g * n:].reshape(b, L, g, n)
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    a_h = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,)
+    xh = xc.reshape(b, L, heads, hd)
+    d_skip = p["d_skip"].astype(jnp.float32)[:, None]         # (H,1)
+
+    if cache is not None:
+        # O(1) decode step
+        state = cache["ssm"]                                  # (B,H,P,N)
+        rep = heads // g
+        b1 = jnp.repeat(bmat[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+        c1 = jnp.repeat(cmat[:, 0], rep, axis=1).astype(jnp.float32)
+        dt1 = dt[:, 0]                                        # (B,H)
+        decay = jnp.exp(dt1 * a_h)[..., None, None]           # (B,H,1,1)
+        inject = jnp.einsum("bhn,bhp->bhpn", b1,
+                            (xh[:, 0].astype(jnp.float32)
+                             * dt1[..., None]))
+        state = state * decay + inject
+        y = jnp.einsum("bhpn,bhn->bhp", state, c1) + d_skip * xh[:, 0]
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv": new_conv, "conv_bc": new_conv_bc, "ssm": state}
+    else:
+        y, state_f = _ssd_chunked(xh, dt, a_h, bmat, cmat, d_skip,
+                                  chunk=s.chunk)
+        y = y.reshape(b, L, di)
+        new_cache = {"conv": new_conv, "conv_bc": new_conv_bc, "ssm": state_f}
+
+    # gated RMSNorm then out-projection
+    gated = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    inv = jax.lax.rsqrt(jnp.mean(gated * gated, -1, keepdims=True) + 1e-6)
+    yn = (gated * inv * (1.0 + p["out_norm"].astype(jnp.float32))).astype(x.dtype)
+    return yn @ p["w_out"], new_cache

@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW, schedules, quantised state, compression."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import warmup_cosine
+from .quant import quantize_blockwise, dequantize_blockwise
+from .compress import compressed_psum_mean, compress_init
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "warmup_cosine", "quantize_blockwise", "dequantize_blockwise",
+    "compressed_psum_mean", "compress_init",
+]

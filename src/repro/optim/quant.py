@@ -1,0 +1,78 @@
+"""Shape-preserving block-wise 8-bit quantisation for optimizer moments.
+
+Standard absmax block quantisation (cf. 8-bit Adam), blocked along the
+**last axis** with the codes keeping the tensor's exact shape:
+
+    codes: int8, same shape as x
+    scale: fp32, x.shape[:-1] + (ceil(last/block),)
+
+Shape preservation is the point: the codes take the *parameter's own
+NamedSharding* unchanged, so quantise/dequantise are shard-local under
+GSPMD.  (A flat re-blocked layout forces a cross-shard reshape that the
+partitioner resolves by full replication — a measured 30× temp-memory
+blow-up on the 671B config.)
+
+Memory: 1 byte/elem + 4·lead/block ≈ 1.016 bytes/elem at block=256, vs 4
+for fp32 moments — the 671B Adam state drops from 5.5 TB to 1.4 TB.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    codes: jax.Array          # int8, shape == original
+    scale: jax.Array          # fp32, (*lead, nblocks); scale already /127
+
+
+def quantize_blockwise(x: jax.Array, block: int = 256) -> QTensor:
+    x = x.astype(jnp.float32)
+    if x.ndim == 0:
+        x = x[None]
+        q = quantize_blockwise(x, block)
+        return QTensor(q.codes[0], q.scale[0])
+    last = x.shape[-1]
+    nb = -(-last // min(block, last))
+    bs = -(-last // nb)          # dequantize re-derives this from (last, nb)
+    pad = nb * bs - last
+    xp = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),)) if pad else x
+    xb = xp.reshape(*x.shape[:-1], nb, bs)
+    scale = jnp.max(jnp.abs(xb), axis=-1)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(xb / safe[..., None] * 127.0),
+                     -127, 127).astype(jnp.int8)
+    codes = codes.reshape(*x.shape[:-1], nb * bs)
+    if pad:
+        codes = codes[..., :last]
+    return QTensor(codes, (scale / 127.0).astype(jnp.float32))
+
+
+def dequantize_blockwise(q: QTensor, shape, dtype=jnp.float32) -> jax.Array:
+    codes, scale = q.codes, q.scale
+    if codes.ndim == 0:
+        return (codes.astype(jnp.float32) * scale).astype(dtype)
+    last = codes.shape[-1]
+    nb = scale.shape[-1]
+    bs = -(-last // nb)
+    pad = nb * bs - last
+    cp = jnp.pad(codes, ((0, 0),) * (codes.ndim - 1) + ((0, pad),)) \
+        if pad else codes
+    xb = cp.reshape(*codes.shape[:-1], nb, bs).astype(jnp.float32)
+    out = (xb * scale[..., None]).reshape(*codes.shape[:-1], nb * bs)
+    if pad:
+        out = out[..., :last]
+    return out.reshape(shape).astype(dtype)
+
+
+def tree_quantize(tree, block: int = 256):
+    return jax.tree.map(lambda x: quantize_blockwise(x, block), tree)
+
+
+def tree_dequantize(qtree, shapes_tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: dequantize_blockwise(q, s.shape, dtype),
+        qtree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, QTensor))

@@ -1,0 +1,9 @@
+"""Distributed runtime: step builders, fault tolerance, monitoring."""
+from .steps import build_train_step, build_serve_steps, TrainHParams
+from .monitor import Heartbeat, StragglerMonitor
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "build_train_step", "build_serve_steps", "TrainHParams",
+    "Heartbeat", "StragglerMonitor", "Trainer", "TrainerConfig",
+]

@@ -1,0 +1,231 @@
+"""The fault-tolerant training driver.
+
+Composition of everything below it::
+
+    mesh → plan → shardings → params/opt init (or elastic restore)
+         → jit(train_step, in/out_shardings) → loop:
+               heartbeat · straggler monitor · periodic async checkpoint
+         → on failure: restart loop reloads latest checkpoint, possibly on
+           a different mesh (elastic), and continues from the same data
+           position (stateless loader).
+
+The Trainer is deliberately process-shaped (no globals): tests drive it
+with tiny configs, inject failures, kill and resurrect it, and assert
+bit-exact continuation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.data import SyntheticConfig, make_batch_loader
+from repro.models import params as params_lib
+from repro.models.config import ModelConfig
+from repro.models.context import ExecContext
+from repro.optim import AdamWConfig, adamw_init, compress_init
+from repro.sharding import make_plan, sharding_for_tree, batch_specs
+from .monitor import Heartbeat, StragglerMonitor, PeerFailure
+from .steps import TrainHParams, build_train_step
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    hb_dir: Optional[str] = None
+    hb_timeout_s: float = 60.0
+    log_every: int = 10
+    seed: int = 0
+    param_dtype: str = "float32"
+    fsdp: bool = True
+    max_restarts: int = 3
+    log: Callable[[str], None] = print
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh],
+                 data_cfg: SyntheticConfig, opt_cfg: AdamWConfig,
+                 hp: TrainHParams, tc: TrainerConfig, *,
+                 ctx: Optional[ExecContext] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg
+        self.hp = hp
+        self.tc = tc
+
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if mesh is not None and a in mesh.axis_names)
+        model_axis = ("model" if mesh is not None and
+                      "model" in mesh.axis_names and
+                      mesh.shape["model"] > 1 else None)
+        self.ctx = ctx or ExecContext(
+            mesh=mesh, batch_axes=batch_axes, model_axis=model_axis,
+            remat="block")
+
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=tc.keep)
+        self.hb = (Heartbeat(tc.hb_dir, host_id=0,
+                             timeout_s=tc.hb_timeout_s)
+                   if tc.hb_dir else None)
+        self.monitor = StragglerMonitor(log=tc.log)
+        self.metrics_history: list[dict] = []
+
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        cfg, mesh = self.cfg, self.mesh
+        dtype = jnp.dtype(self.tc.param_dtype)
+        key = jax.random.PRNGKey(self.tc.seed)
+
+        if mesh is not None:
+            if self.hp.compress_pod and self.tc.fsdp:
+                # XLA's SPMD partitioner CHECK-fails when FSDP-sharded
+                # (d_model-over-data) parameters enter a partial-manual
+                # (pod) shard_map (spmd_partitioner_util.cc:504, verified
+                # on jax 0.8.2).  Compression targets the DCN DP axis;
+                # run it with TP-only sharding until the upstream fix.
+                raise ValueError(
+                    "compress_pod currently requires TrainerConfig("
+                    "fsdp=False) — see the note in runtime/trainer.py")
+            plan = make_plan(cfg, mode="train", fsdp=self.tc.fsdp)
+            # init on device with the final shardings (jit init → no host
+            # round-trip; at 671B scale this is mandatory)
+            axes_box = {}
+
+            def _init_p(k):
+                p, ax = params_lib.init_params(cfg, k, dtype)
+                axes_box["ax"] = ax
+                return p
+
+            jax.eval_shape(_init_p, key)
+            axes = axes_box["ax"]
+            self.param_shardings = sharding_for_tree(axes, plan, mesh)
+            init = jax.jit(
+                lambda k: params_lib.init_params(cfg, k, dtype)[0],
+                out_shardings=self.param_shardings)
+            self.params = init(key)
+        else:
+            self.params, _ = params_lib.init_params(cfg, key, dtype)
+            self.param_shardings = None
+
+        self.opt_state = adamw_init(self.params, self.opt_cfg)
+        self.ef = (compress_init(self.params)
+                   if self.hp.compress_pod else None)
+        self.step = 0
+
+        # data loader with batch sharding
+        if mesh is not None:
+            bspecs = batch_specs(self.ctx.batch_axes, mesh,
+                                 {"tokens": ("batch", "seq"),
+                                  "labels": ("batch", "seq")})
+        else:
+            bspecs = None
+        self.loader = make_batch_loader(self.data_cfg, sharding=bspecs)
+
+        step_fn = build_train_step(cfg, self.ctx, self.opt_cfg, self.hp)
+        if mesh is not None:
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def _state_tree(self):
+        t = {"params": self.params, "opt": self.opt_state}
+        if self.ef is not None:
+            t["ef"] = self.ef
+        return t
+
+    def save(self, blocking: bool = False):
+        self.ckpt.save(self.step, self._state_tree(),
+                       extra={"step": self.step,
+                              "arch": self.cfg.name,
+                              "data_seed": self.data_cfg.seed},
+                       blocking=blocking)
+
+    def restore_latest(self) -> bool:
+        """Elastic restore: loads the newest checkpoint onto the *current*
+        mesh (which may differ from the writer's).  Returns True if one
+        was found."""
+        if latest_step(self.tc.ckpt_dir) is None:
+            return False
+        shardings = None
+        if self.param_shardings is not None:
+            opt_sh = {
+                "m": self.param_shardings, "v": self.param_shardings,
+                "step": NamedSharding(self.mesh, P()),
+            }
+            if self.opt_cfg.quantize_moments:
+                # QTensor leaves (codes/scales) don't mirror param shapes;
+                # replicate them (they're 4× smaller than fp32 moments).
+                opt_sh = jax.tree.map(
+                    lambda _: NamedSharding(self.mesh, P()), self.opt_state)
+            shardings = {"params": self.param_shardings, "opt": opt_sh}
+            if self.ef is not None:
+                shardings["ef"] = self.param_shardings
+        tree, extra, step = self.ckpt.restore_latest(
+            self._state_tree(), shardings=shardings)
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.ef = tree.get("ef", self.ef)
+        self.step = int(extra.get("step", step))
+        self.tc.log(f"[trainer] restored step {self.step} from checkpoint")
+        return True
+
+    # ------------------------------------------------------------------
+    def train_steps(self, n: int, *, failure_hook: Optional[Callable] = None):
+        """Run ``n`` steps from the current position (one restart body)."""
+        for _ in range(n):
+            batch = self.loader(self.step)
+            t0 = time.monotonic()
+            if self.ef is None:
+                self.params, self.opt_state, metrics = self._jit_step(
+                    self.params, self.opt_state, batch)
+            else:
+                self.params, self.opt_state, metrics, self.ef = \
+                    self._jit_step(self.params, self.opt_state, batch,
+                                   self.ef)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            self.step += 1
+            self.monitor.record(self.step, dt)
+            if self.hb:
+                self.hb.beat(self.step)
+                self.hb.check()
+            if self.step % self.tc.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.metrics_history.append({"step": self.step, **m})
+                self.tc.log(f"[trainer] step {self.step} "
+                            f"loss {m['loss']:.4f} "
+                            f"gnorm {m.get('grad_norm', 0):.3f} {dt*1e3:.0f} ms")
+            if self.step % self.tc.ckpt_every == 0:
+                self.save()
+            if failure_hook is not None:
+                failure_hook(self)
+        self.ckpt.wait()
+
+    def run(self, total_steps: int, **kw):
+        """Restart loop: survive PeerFailure / injected faults by reloading
+        the newest checkpoint and continuing."""
+        self.restore_latest()
+        restarts = 0
+        while self.step < total_steps:
+            try:
+                self.train_steps(total_steps - self.step, **kw)
+            except PeerFailure as e:
+                restarts += 1
+                self.tc.log(f"[trainer] {e}; restart {restarts}")
+                if restarts > self.tc.max_restarts:
+                    raise
+                self.ckpt.wait()
+                if not self.restore_latest():
+                    self.tc.log("[trainer] no checkpoint; restarting fresh")
+        self.save(blocking=True)
+        return self.metrics_history

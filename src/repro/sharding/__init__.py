@@ -1,0 +1,20 @@
+"""Sharding: logical-axis → mesh-axis rules engine (mesh-level TLP).
+
+This is the mesh-level half of the targetDP TLP mapping (DESIGN.md §2):
+the paper partitions lattice sites between threads; here the token/weight
+lattices are partitioned between chips.  Rules are *data*, not code, so a
+parallelism plan is a config artifact the §Perf loop can hillclimb.
+"""
+from .rules import (
+    Plan,
+    logical_axis_sizes,
+    make_plan,
+    sharding_for_tree,
+    spec_for_axes,
+    batch_specs,
+)
+
+__all__ = [
+    "Plan", "logical_axis_sizes", "make_plan", "sharding_for_tree",
+    "spec_for_axes", "batch_specs",
+]

@@ -1,0 +1,198 @@
+"""Logical-axis → mesh-axis rules engine with divisibility fallbacks.
+
+``init_params`` returns twin pytrees ``(params, axes)`` where every leaf of
+``axes`` names the logical axes of the matching ``params`` leaf (see
+:mod:`repro.models.params`).  A :class:`Plan` is an *ordered* rule table
+``logical axis → candidate mesh axes``; :func:`spec_for_axes` walks a
+tensor's logical axes left-to-right, assigning to each the first candidate
+mesh axis that
+
+  * is not already used by another dim of the same tensor, and
+  * divides the *unit count* of that logical axis evenly (a head axis
+    shards by whole heads, an expert axis by whole experts, ...).
+
+Anything that fails both candidates falls back to replication — the engine
+never errors on an "awkward" config (kv_heads=10 on a 16-way model axis
+simply replicates the KV projections, as DESIGN.md §5 documents per arch).
+
+Plans are plain data so the §Perf hillclimb can mutate them (e.g. move
+``experts`` from replicated to ``("data",)``) and re-lower.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# logical-axis unit counts
+# ---------------------------------------------------------------------------
+
+def logical_axis_sizes(cfg: ModelConfig) -> dict[str, int]:
+    """Shardable *unit count* per logical axis.
+
+    For fused axes (``heads_x_dim`` = n_heads·head_dim) the unit count is
+    the number of semantic units (heads), not the dim extent: sharding must
+    place whole heads on a chip or attention reshapes stop being local.
+    """
+    sizes: dict[str, int] = {
+        "d_model": cfg.d_model,
+        "vocab": cfg.padded_vocab,
+        "d_ff": max(cfg.d_ff, 1),
+    }
+    if cfg.attn is not None:
+        sizes["heads_x_dim"] = cfg.attn.n_heads
+        sizes["kv_x_dim"] = cfg.attn.n_kv_heads
+        sizes["head_dim"] = 1          # never sharded (unit 1 → only TP=1)
+        sizes["heads"] = cfg.attn.n_heads
+    if cfg.mla is not None:
+        sizes["lora"] = 1              # LoRA ranks stay replicated
+    if cfg.moe is not None:
+        sizes["experts"] = cfg.moe.num_experts
+        # expert FFN width (the d_ff axis on expert tensors) — the dense
+        # d_ff and expert d_ff share the logical name; take the gcd so one
+        # rule covers both.
+        import math
+        sizes["d_ff"] = math.gcd(max(cfg.d_ff, cfg.moe.d_expert),
+                                 cfg.moe.d_expert)
+    if cfg.ssm is not None:
+        d_inner = cfg.ssm.expand * cfg.d_model
+        import math
+        sizes["d_ff"] = math.gcd(sizes["d_ff"], d_inner) if cfg.d_ff else d_inner
+        if cfg.ssm.kind == "mamba2":
+            sizes["heads"] = d_inner // cfg.ssm.head_dim
+    sizes["layers"] = 1                # scan-stack dim: never sharded
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Plan:
+    """An ordered rule table.  ``rules[logical] = (mesh axis candidates)``."""
+    rules: tuple[tuple[str, tuple[str, ...]], ...]
+    axis_sizes: Mapping[str, int]
+    name: str = "custom"
+
+    def candidates(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return ()
+
+
+def make_plan(cfg: ModelConfig, *, mode: str = "train",
+              fsdp: bool = True, moe_impl: str = "ragged",
+              extra_rules: Sequence[tuple[str, tuple[str, ...]]] = (),
+              data_axes: tuple[str, ...] = ("data",)) -> Plan:
+    """Default parallelism plan for an architecture.
+
+    * ``train``: TP over ``model`` (heads/d_ff/vocab), optional ZeRO-3-style
+      FSDP of ``d_model`` over ``data`` (GSPMD re-gathers per scan step —
+      the all-gather is the explicit FSDP collective).  Expert tensors get
+      *both*: ``d_model`` over data + ``d_ff`` over model, which is what
+      makes the 671B config fit (DESIGN.md §6).
+    * ``serve``: weights must additionally spread over ``data`` (no
+      optimizer state to displace them); experts shard over ``data`` as
+      whole experts, with d_ff over ``model``.
+    * ``moe_impl="a2a"``: experts ride the model axis as whole experts
+      (tokens travel instead of a d_model-wide psum).
+    """
+    d = tuple(data_axes)
+    rules: list[tuple[str, tuple[str, ...]]] = list(extra_rules)
+
+    if moe_impl == "a2a":
+        rules.append(("experts", ("model",)))
+    elif mode == "serve":
+        rules.append(("experts", d))
+    else:
+        rules.append(("experts", d if fsdp else ()))
+
+    rules += [
+        ("vocab", ("model",)),
+        ("heads_x_dim", ("model",)),
+        ("kv_x_dim", ("model",)),
+        ("heads", ("model",)),
+        ("d_ff", ("model",)),
+    ]
+    if mode == "serve":
+        rules.append(("d_model", d))
+    elif fsdp:
+        rules.append(("d_model", d))
+    return Plan(rules=tuple(rules), axis_sizes=logical_axis_sizes(cfg),
+                name=f"{mode}:{'fsdp' if fsdp else 'tp'}:{moe_impl}")
+
+
+# ---------------------------------------------------------------------------
+# spec resolution
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_axes(axes: Optional[tuple], plan: Plan, mesh: Mesh) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    if axes is None:
+        return P()
+    msizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    out = []
+    for logical in axes:
+        assigned = None
+        if logical is not None and logical != "layers":
+            units = plan.axis_sizes.get(logical, 1)
+            for cand in plan.candidates(logical):
+                if cand in used or cand not in msizes:
+                    continue
+                if units % msizes[cand] == 0 and msizes[cand] > 1:
+                    assigned = cand
+                    used.add(cand)
+                    break
+        out.append(assigned)
+    # trim trailing Nones (cosmetic; jax treats them identically)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for_tree(axes_tree, plan: Plan, mesh: Mesh):
+    """Map the twin ``axes`` pytree to a pytree of NamedShardings."""
+    def leaf(ax):
+        return NamedSharding(mesh, spec_for_axes(ax, plan, mesh))
+    return jax.tree.map(leaf, axes_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# activation / batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_axes: tuple[str, ...], mesh: Mesh,
+                spec_map: Mapping[str, tuple] ) -> dict:
+    """NamedShardings for a batch dict.
+
+    ``spec_map`` gives per-key logical dims, e.g. ``{"tokens": ("batch",
+    "seq")}``; only ``"batch"`` is sharded (over ``batch_axes``), everything
+    else replicates.  Sequence stays unsharded at the boundary — interior
+    sequence parallelism is introduced by constraints/shard_map, not input
+    layout.
+    """
+    ba = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def to_spec(dims: tuple) -> NamedSharding:
+        parts = [ba if d == "batch" and ba else None for d in dims]
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return {k: to_spec(v) for k, v in spec_map.items()}

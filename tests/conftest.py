@@ -1,0 +1,18 @@
+"""Shared test config.
+
+Tests run on the default 1-CPU-device jax (never set
+xla_force_host_platform_device_count here — the dry-run owns that flag).
+Multi-device behaviour is tested via subprocesses (test_distributed.py).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

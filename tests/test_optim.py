@@ -1,0 +1,102 @@
+"""Optimizer substrate: AdamW math, 8-bit moments, schedule, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                         dequantize_blockwise, quantize_blockwise,
+                         warmup_cosine)
+from repro.optim.quant import QTensor
+
+
+class TestQuant:
+    @pytest.mark.parametrize("n,block", [(1000, 128), (256, 256), (7, 4)])
+    def test_roundtrip_error_bounded(self, n, block, rng):
+        """Global elementwise bound: |x − deq(quant(x))| ≤ max|x|/127
+        (each block's error is ≤ its own absmax/127 ≤ the global one)."""
+        x = jnp.asarray(rng.normal(size=(n,)) * 3, jnp.float32)
+        q = quantize_blockwise(x, block)
+        xr = dequantize_blockwise(q, x.shape)
+        bound = float(jnp.abs(x).max()) / 127.0 * 1.01 + 1e-9
+        assert float(jnp.abs(x - xr).max()) <= bound
+
+    def test_zero_block(self):
+        q = quantize_blockwise(jnp.zeros((64,)), 32)
+        assert float(jnp.abs(dequantize_blockwise(q, (64,))).max()) == 0.0
+
+    def test_shapes(self):
+        """Codes keep the tensor's shape (sharding-transparent layout)."""
+        q = quantize_blockwise(jnp.ones((10, 7)), 16)
+        assert q.codes.shape == (10, 7) and q.scale.shape == (10, 1)
+        q2 = quantize_blockwise(jnp.ones((4, 600)), 256)
+        assert q2.codes.shape == (4, 600) and q2.scale.shape == (4, 3)
+
+
+class TestAdamW:
+    def _setup(self, quant):
+        params = {"w": jnp.ones((16, 16)), "b": jnp.zeros((16,))}
+        grads = {"w": jnp.full((16, 16), 0.5), "b": jnp.full((16,), 0.5)}
+        cfg = AdamWConfig(lr=1e-2, quantize_moments=quant, quant_block=32,
+                          weight_decay=0.0, clip_norm=0.0)
+        return params, grads, cfg
+
+    def test_first_step_is_lr_sized(self):
+        params, grads, cfg = self._setup(False)
+        st = adamw_init(params, cfg)
+        p2, st2, m = adamw_update(params, grads, st, cfg)
+        # bias-corrected first Adam step ≈ -lr·sign(g)
+        np.testing.assert_allclose(p2["w"], 1.0 - 1e-2, rtol=1e-3)
+        assert int(st2["step"]) == 1
+
+    def test_quantized_tracks_fp32(self):
+        """8-bit moments stay within a few % of the fp32 trajectory."""
+        paths = {}
+        for quant in (False, True):
+            params, grads, cfg = self._setup(quant)
+            st = adamw_init(params, cfg)
+            p = params
+            for i in range(10):
+                g = jax.tree.map(
+                    lambda x: x * (1.0 + 0.1 * np.sin(i)), grads)
+                p, st, _ = adamw_update(p, g, st, cfg)
+            paths[quant] = p
+        np.testing.assert_allclose(paths[True]["w"], paths[False]["w"],
+                                   rtol=0.05, atol=5e-3)
+
+    def test_clipping(self):
+        params, grads, cfg = self._setup(False)
+        cfg2 = AdamWConfig(lr=1e-2, clip_norm=0.1, weight_decay=0.0)
+        st = adamw_init(params, cfg2)
+        _, _, metrics = adamw_update(params, grads, st, cfg2)
+        assert float(metrics["grad_norm"]) > 0.1  # reported pre-clip
+
+    def test_weight_decay_only_matrices(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        cfg = AdamWConfig(lr=1.0, weight_decay=0.5, clip_norm=0.0)
+        st = adamw_init(params, cfg)
+        p2, _, _ = adamw_update(params, zero_g, st, cfg)
+        assert float(p2["w"][0, 0]) < 1.0          # decayed
+        np.testing.assert_allclose(p2["b"], 1.0)   # vectors not decayed
+
+
+class TestSchedule:
+    def test_warmup_then_decay(self):
+        lr = warmup_cosine(jnp.array([0, 10, 20, 60, 100]),
+                           peak_lr=1e-3, warmup_steps=20, total_steps=100)
+        lr = np.asarray(lr)
+        assert lr[0] == 0.0
+        assert lr[1] == pytest.approx(5e-4)
+        assert lr[2] == pytest.approx(1e-3)
+        assert lr[3] < lr[2]
+        assert lr[4] == pytest.approx(1e-4, rel=1e-3)  # min_ratio·peak
+
+
+class TestGlobalNorm:
+    def test_matches_numpy(self, rng):
+        tree = {"a": jnp.asarray(rng.normal(size=(8, 3)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(5,)), jnp.float32)}
+        want = np.sqrt(sum((np.asarray(v) ** 2).sum()
+                           for v in jax.tree.leaves(tree)))
+        np.testing.assert_allclose(global_norm(tree), want, rtol=1e-6)

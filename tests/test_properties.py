@@ -1,0 +1,187 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core as tdp
+from repro.core import Field, Lattice
+from repro.kernels import ref
+from repro.models.config import plan_layer_groups, repeat_program, BLOCK_TYPES
+from repro.optim import dequantize_blockwise, quantize_blockwise
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def lattice_and_vvl(draw):
+    dims = draw(st.lists(st.integers(2, 9), min_size=1, max_size=3))
+    vvl = draw(st.sampled_from([4, 8, 16, 32]))
+    return Lattice(tuple(dims)), vvl
+
+
+class TestTdpProperties:
+    @SET
+    @given(lattice_and_vvl(), st.floats(-3, 3))
+    def test_launch_padding_never_pollutes(self, lat_vvl, a):
+        """Padding sites must never leak into outputs for ANY lattice/VVL."""
+        lat, vvl = lat_vvl
+
+        @tdp.site_kernel
+        def affine(x, a=1.0):
+            return a * x + 1.0
+
+        rng = np.random.default_rng(lat.nsites)
+        x = jnp.asarray(rng.normal(size=(2, lat.nsites)), jnp.float32)
+        y = tdp.launch(affine, lat, [x], consts={"a": a}, vvl=vvl)
+        np.testing.assert_allclose(y, a * x + 1.0, rtol=1e-5, atol=1e-5)
+
+    @SET
+    @given(lattice_and_vvl())
+    def test_reduce_sum_matches_numpy(self, lat_vvl):
+        lat, vvl = lat_vvl
+
+        @tdp.site_kernel
+        def ident(x):
+            return x
+
+        rng = np.random.default_rng(lat.nsites + 1)
+        x = jnp.asarray(rng.normal(size=(3, lat.nsites)), jnp.float32)
+        got = tdp.reduce(ident, lat, [x], op="sum", vvl=vvl)
+        np.testing.assert_allclose(got, np.asarray(x).sum(-1), rtol=1e-4)
+
+    @SET
+    @given(st.integers(1, 64), st.integers(1, 5))
+    def test_masked_copy_partition(self, nsites, ncomp):
+        """Masked copy of M ∪ masked copy of ¬M == full copy."""
+        from repro.core import (copy_from_target_masked, copy_to_target)
+        lat = Lattice((nsites,))
+        rng = np.random.default_rng(nsites * ncomp)
+        f = Field(lat, ncomp, np.float32)
+        f.data[...] = rng.normal(size=f.array_shape)
+        t = copy_to_target(f)
+        mask = rng.random(nsites) < 0.5
+        a = Field(lat, ncomp, np.float32)
+        copy_from_target_masked(t, mask, a)
+        copy_from_target_masked(t, ~mask, a)
+        np.testing.assert_allclose(a.data, f.data, rtol=1e-6)
+
+
+class TestAttentionProperties:
+    @SET
+    @given(st.integers(2, 24), st.integers(1, 4), st.booleans())
+    def test_causality(self, s, h, use_window):
+        """Output at position t never depends on inputs at positions > t."""
+        rng = np.random.default_rng(s * h)
+        q = jnp.asarray(rng.normal(size=(1, h, s, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, h, s, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, h, s, 8)), jnp.float32)
+        window = 4 if use_window else 0
+        base = ref.attention_ref(q, k, v, causal=True, window=window)
+        t = s // 2
+        k2 = k.at[:, :, t + 1:].set(99.0)
+        v2 = v.at[:, :, t + 1:].set(-99.0)
+        pert = ref.attention_ref(q, k2, v2, causal=True, window=window)
+        np.testing.assert_allclose(base[:, :, :t + 1], pert[:, :, :t + 1],
+                                   rtol=1e-5, atol=1e-5)
+
+    @SET
+    @given(st.integers(8, 64), st.sampled_from([4, 8, 16]))
+    def test_chunked_equals_ref_any_blocking(self, s, bq):
+        rng = np.random.default_rng(s + bq)
+        q = jnp.asarray(rng.normal(size=(1, 2, s, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 2, s, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 2, s, 8)), jnp.float32)
+        a = ref.attention_ref(q, k, v, causal=True)
+        b = ref.attention_chunked_ref(q, k, v, causal=True, block_q=bq)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    @SET
+    @given(st.floats(1.0, 100.0))
+    def test_softcap_bounds_scores(self, cap):
+        """Softcapped attention == attention over tanh-bounded scores; the
+        output stays a convex combination of V rows."""
+        rng = np.random.default_rng(int(cap * 7))
+        q = jnp.asarray(10 * rng.normal(size=(1, 1, 8, 4)), jnp.float32)
+        k = jnp.asarray(10 * rng.normal(size=(1, 1, 8, 4)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 1, 8, 4)), jnp.float32)
+        out = ref.attention_ref(q, k, v, causal=False, softcap=float(cap))
+        vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+        assert (np.asarray(out) >= vmin - 1e-5).all()
+        assert (np.asarray(out) <= vmax + 1e-5).all()
+
+
+class TestQuantProperties:
+    @SET
+    @given(st.integers(1, 500), st.sampled_from([16, 64, 256]),
+           st.floats(1e-3, 1e3))
+    def test_error_bound(self, n, block, scale):
+        """Global bound: |x - deq(quant(x))| ≤ max|x|/127 elementwise
+        (each block's error ≤ its own absmax/127 ≤ the global one)."""
+        rng = np.random.default_rng(n + block)
+        x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+        xr = dequantize_blockwise(quantize_blockwise(x, block), x.shape)
+        bound = float(jnp.abs(x).max()) / 127.0 * 1.01 + 1e-9
+        assert float(jnp.abs(x - xr).max()) <= bound
+
+
+class TestLayerProgramProperties:
+    @SET
+    @given(st.lists(st.sampled_from(["attn", "local", "mamba2"]),
+                    min_size=1, max_size=6),
+           st.integers(1, 80))
+    def test_groups_always_cover(self, pattern, n):
+        prog = repeat_program(tuple(pattern), n)
+        rebuilt = []
+        for unit, k in plan_layer_groups(prog):
+            rebuilt.extend(list(unit) * k)
+        assert tuple(rebuilt) == prog
+
+
+class TestMoEProperties:
+    @SET
+    @given(st.integers(2, 32), st.integers(2, 8), st.integers(1, 4))
+    def test_capacity_equals_dense_when_generous(self, t, e, k):
+        """cap ≥ T ⇒ dropless ⇒ exactly the dense one-hot computation."""
+        if k > e:
+            k = e
+        from repro.models.moe import _apply_experts_capacity
+        from repro.models.config import (ModelConfig, AttnConfig, MoEConfig,
+                                         repeat_program)
+        from repro.models.context import ExecContext
+        cfg = ModelConfig(
+            name="p", d_model=8, n_layers=1, vocab_size=32, d_ff=16,
+            layer_program=("attn_moe",), attn=AttnConfig(1, 1, 8),
+            moe=MoEConfig(num_experts=e, top_k=k, d_expert=8))
+        rng = np.random.default_rng(t * e + k)
+        xs = jnp.asarray(rng.normal(size=(t, 8)), jnp.float32)
+        e_ids = jnp.asarray(rng.integers(0, e, (t,)), jnp.int32)
+        p = {"w_up": jnp.asarray(rng.normal(size=(e, 8, 8)), jnp.float32),
+             "w_gate": jnp.asarray(rng.normal(size=(e, 8, 8)), jnp.float32),
+             "w_down": jnp.asarray(rng.normal(size=(e, 8, 8)), jnp.float32)}
+        got = _apply_experts_capacity(xs, e_ids, jnp.ones((t,), bool), p,
+                                      cfg, ExecContext(), cap=t)
+        # dense reference
+        we = np.asarray(p["w_up"])[np.asarray(e_ids)]
+        wg = np.asarray(p["w_gate"])[np.asarray(e_ids)]
+        wd = np.asarray(p["w_down"])[np.asarray(e_ids)]
+        up = np.einsum("td,tdf->tf", np.asarray(xs), we)
+        gate = np.einsum("td,tdf->tf", np.asarray(xs), wg)
+        act = gate * (1 / (1 + np.exp(-gate))) * up
+        want = np.einsum("tf,tfd->td", act, wd)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-4)
+
+
+class TestDataProperties:
+    @SET
+    @given(st.integers(0, 1000), st.integers(2, 16))
+    def test_any_slice_matches_full(self, step, batch):
+        from repro.data import SyntheticConfig, batch_for_step
+        cfg = SyntheticConfig(vocab_size=50, seq_len=8, global_batch=batch,
+                              seed=3)
+        full = batch_for_step(cfg, step)
+        lo = batch // 3
+        hi = max(lo + 1, 2 * batch // 3)
+        part = batch_for_step(cfg, step, lo=lo, hi=hi)
+        np.testing.assert_array_equal(full["tokens"][lo:hi], part["tokens"])

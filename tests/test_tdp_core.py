@@ -1,0 +1,223 @@
+"""targetDP core: lattice, fields, memory model, execution model.
+
+These pin the paper's contract: single-source site kernels, SoA layout,
+VVL chunking, host/target memory distinction, masked transfers, constants,
+reductions (the paper's §V extension).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as tdp
+from repro.core import (Field, Lattice, TargetConst, copy_from_target,
+                        copy_from_target_masked, copy_to_target,
+                        copy_to_target_masked, sync_target, target_free,
+                        target_malloc, token_lattice)
+
+
+@tdp.site_kernel
+def scale(field, a=1.0):
+    return a * field
+
+
+@tdp.site_kernel
+def saxpy(x, y, a=1.0):
+    return a * x + y
+
+
+@tdp.site_kernel
+def two_out(x):
+    return 2.0 * x, x * x
+
+
+class TestLattice:
+    def test_basic(self):
+        lat = Lattice((4, 6, 8))
+        assert lat.nsites == 192
+        assert lat.nsites_with_halo == 192
+
+    def test_halo(self):
+        lat = Lattice((4, 4, 4), halo=1)
+        assert lat.halo_shape == (6, 6, 6)
+        assert lat.nsites_with_halo == 216
+
+    def test_vvl_padding(self):
+        lat = Lattice((10,))
+        assert lat.padded_nsites(4) == 12
+        assert lat.nchunks(4) == 3
+        assert lat.padded_nsites(10) == 10
+
+    def test_token_lattice(self):
+        lat = token_lattice(8, 128)
+        assert lat.nsites == 1024 and lat.halo == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Lattice(())
+        with pytest.raises(ValueError):
+            Lattice((0, 4))
+        with pytest.raises(ValueError):
+            Lattice((4,), halo=-1)
+
+
+class TestField:
+    def test_layouts_roundtrip(self, rng):
+        lat = Lattice((4, 4))
+        f = Field(lat, ncomp=3, dtype=np.float32)
+        f.data[...] = rng.normal(size=f.array_shape)
+        g = f.to_layout("aos")
+        assert g.array_shape == (16, 3)
+        np.testing.assert_array_equal(g.to_layout("soa").data, f.data)
+
+    def test_interior_view(self):
+        lat = Lattice((2, 2), halo=1)
+        f = Field(lat, ncomp=1)
+        f.grid_view()[0, 1:3, 1:3] = 7.0
+        assert (f.interior() == 7.0).all()
+        assert f.interior().shape == (1, 2, 2)
+        assert f.data.sum() == 4 * 7.0
+
+
+class TestMemoryModel:
+    def test_malloc_and_free(self):
+        arr = target_malloc((3, 64))
+        assert arr.shape == (3, 64) and float(arr.sum()) == 0.0
+        target_free(arr)
+        with pytest.raises(RuntimeError):
+            _ = np.asarray(arr)
+
+    def test_copy_roundtrip(self, rng):
+        lat = Lattice((8, 8))
+        f = Field(lat, 3, np.float32)
+        f.data[...] = rng.normal(size=f.array_shape)
+        t = copy_to_target(f)
+        back = copy_from_target(t, Field(lat, 3, np.float32))
+        np.testing.assert_allclose(back.data, f.data)
+
+    def test_masked_roundtrip(self, rng):
+        """pack → copy → unpack == direct subset copy (paper §III-B)."""
+        lat = Lattice((16,))
+        f = Field(lat, 2, np.float32)
+        f.data[...] = rng.normal(size=f.array_shape)
+        t = copy_to_target(f)
+        mask = np.zeros(16, bool)
+        mask[[1, 5, 6, 11]] = True
+
+        host_new = Field(lat, 2, np.float32)
+        copy_from_target_masked(t, mask, host_new)
+        np.testing.assert_allclose(host_new.data[:, mask], f.data[:, mask])
+        assert (host_new.data[:, ~mask] == 0).all()
+
+        # upload a modified subset
+        f2 = f.copy()
+        f2.data[:, mask] = -1.0
+        t2 = copy_to_target_masked(t, f2, mask)
+        got = copy_from_target(t2)
+        assert (got[:, mask] == -1.0).all()
+        np.testing.assert_allclose(got[:, ~mask], f.data[:, ~mask])
+
+    def test_masked_empty(self):
+        lat = Lattice((4,))
+        t = target_malloc((1, 4))
+        out = copy_from_target_masked(t, np.zeros(4, bool))
+        assert out.shape == (1, 0)
+
+    def test_target_const_hashing(self):
+        a = TargetConst(np.arange(3.0))
+        b = TargetConst(np.arange(3.0))
+        c = TargetConst(np.arange(4.0))
+        assert a == b and hash(a) == hash(b) and a != c
+
+    def test_sync(self):
+        x = jnp.ones((4,))
+        sync_target(x)
+        sync_target()
+
+
+class TestExecution:
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("vvl", [8, 32, 128])
+    def test_scale_all_backends_vvls(self, backend, vvl, rng):
+        """Single source × {backends} × {VVLs} — the paper's Fig. 1 axes."""
+        lat = Lattice((6, 7))  # 42 sites: not a VVL multiple → padding path
+        x = jnp.asarray(rng.normal(size=(3, lat.nsites)), jnp.float32)
+        y = tdp.launch(scale, lat, [x], consts={"a": 2.5}, vvl=vvl,
+                       backend=backend)
+        np.testing.assert_allclose(y, 2.5 * x, rtol=1e-6)
+
+    def test_multi_input(self, rng):
+        lat = Lattice((32,))
+        x = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+        out = tdp.launch(saxpy, lat, [x, y], consts={"a": 3.0}, vvl=8)
+        # rtol covers FMA-vs-separate rounding differences across fusions
+        np.testing.assert_allclose(out, 3.0 * x + y, rtol=1e-5, atol=1e-6)
+
+    def test_multi_output(self, rng):
+        lat = Lattice((16,))
+        x = jnp.asarray(rng.normal(size=(1, 16)), jnp.float32)
+        a, b = tdp.launch(two_out, lat, [x], out_ncomp=(1, 1), vvl=8)
+        np.testing.assert_allclose(a, 2 * x, rtol=1e-6)
+        np.testing.assert_allclose(b, x * x, rtol=1e-6)
+
+    def test_site_index_kernel(self):
+        @tdp.site_kernel
+        def pos(x, site_idx):
+            return x + site_idx[None, :].astype(jnp.float32)
+
+        lat = Lattice((10,))
+        x = jnp.zeros((1, 10))
+        y = tdp.launch(pos, lat, [x], vvl=4, with_site_index=True)
+        np.testing.assert_allclose(y[0], np.arange(10.0))
+
+    def test_target_const_array(self, rng):
+        @tdp.site_kernel
+        def project(x, w):
+            return jnp.einsum("c,cv->v", w, x)[None]
+
+        lat = Lattice((12,))
+        x = jnp.asarray(rng.normal(size=(3, 12)), jnp.float32)
+        w = TargetConst(np.array([1.0, -1.0, 0.5], np.float32))
+        y = tdp.launch(project, lat, [x], out_ncomp=1,
+                       consts={"w": w}, vvl=4)
+        np.testing.assert_allclose(
+            y[0], (np.asarray(x) * np.array([1, -1, .5])[:, None]).sum(0),
+            rtol=1e-6)
+
+    def test_validation_errors(self):
+        lat = Lattice((8,))
+        x = jnp.zeros((1, 8))
+        with pytest.raises(ValueError):
+            tdp.launch(scale, lat, [], vvl=4)
+        with pytest.raises(ValueError):
+            tdp.launch(scale, lat, [jnp.zeros((1, 9))], vvl=4)
+        with pytest.raises(ValueError):
+            tdp.launch(scale, lat, [x], backend="cuda")
+        with pytest.raises(ValueError):
+            tdp.launch(scale, None, [jnp.zeros((8,))])
+
+    @pytest.mark.parametrize("op", ["sum", "max", "min"])
+    def test_reduce(self, op, rng):
+        lat = Lattice((5, 7))  # 35 sites → padding must not pollute result
+        x = jnp.asarray(rng.normal(size=(2, 35)), jnp.float32)
+        got = tdp.reduce(scale, lat, [x], consts={"a": 1.0}, op=op, vvl=16)
+        want = getattr(np, op)(np.asarray(x), axis=-1)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_reduce_interpret_backend(self, rng):
+        lat = Lattice((33,))
+        x = jnp.asarray(rng.normal(size=(1, 33)), jnp.float32)
+        got = tdp.reduce(scale, lat, [x], consts={"a": 2.0}, op="sum",
+                         vvl=16, backend="pallas_interpret")
+        np.testing.assert_allclose(got, 2 * np.asarray(x).sum(-1), rtol=1e-5)
+
+    def test_default_vvl_switch(self):
+        old = tdp.default_vvl()
+        try:
+            tdp.set_default_vvl(64)
+            assert tdp.default_vvl() == 64
+            with pytest.raises(ValueError):
+                tdp.set_default_vvl(0)
+        finally:
+            tdp.set_default_vvl(old)
