@@ -12,6 +12,10 @@ Paper artefacts reproduced:
   (GPU).
 * **Masked transfers** (`bench_masked_copy`): §III-B's compressed copies
   vs full-lattice copies at several subset densities.
+* **Fused stream+collide** (`bench_fused_step`): the follow-up paper's
+  (1609.01479) fusion claim — one stencil launch per LB timestep
+  (stream → ∇φ → collide, no intermediate full-lattice arrays) vs the
+  unfused moment/stencil/collide/stream pipeline, per-site wall cost.
 * **LM token throughput** (`bench_lm_step`): the token-lattice pointwise
   family (rmsnorm / gated-act) through the same tdp backends — the
   framework-integration claim (DESIGN.md §4).
@@ -169,6 +173,46 @@ def bench_masked_copy(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# fused vs unfused LB timestep (stencil-aware launch)
+# ---------------------------------------------------------------------------
+
+def bench_fused_step(quick=False):
+    from repro.lb.params import LBParams
+    from repro.lb.sim import BinaryFluidSim
+
+    grid = (16, 16, 16) if quick else (24, 24, 24)
+    n = int(np.prod(grid))
+    p = LBParams(A=0.125, B=0.125, kappa=0.02)
+
+    # Time the jitted hot-loop body of each regime: the whole unfused
+    # timestep (moments → stencil → collide → stream, 4 launches) vs the
+    # single fused stencil launch that replaces it.
+    sim_u = BinaryFluidSim(grid, params=p)
+    sim_f = BinaryFluidSim(grid, params=p, fused=True)
+    st = sim_u.init_spinodal(seed=0, noise=0.05)
+    wf, wg = sim_f._collide_fn(st.f, st.g)       # pre-stream fused state
+
+    rows, rec = [], {"grid": grid, "variants": {}}
+    base_t = None
+    for label, key, fn, args in (
+        ("unfused pipeline", "unfused", sim_u._step_fn, (st.f, st.g)),
+        ("fused stream+collide", "fused", sim_f._fused_fn, (wf, wg)),
+    ):
+        t = _time(fn, *args)
+        per_site_ns = t / n * 1e9
+        rec["variants"][key] = {"t_s": t, "ns_per_site_step": per_site_ns}
+        if base_t is None:
+            base_t = t
+        rows.append((label, f"{t*1e3:.2f}", f"{per_site_ns:.1f}",
+                     f"{n/t/1e6:.1f}", f"{base_t/t:.2f}×"))
+    RESULTS["fused_step"] = rec
+    return _table(
+        f"Fused vs unfused LB timestep, {grid} lattice ({n} sites)",
+        rows, ["implementation", "ms/step", "ns/site·step", "Msites/s",
+               "speedup"])
+
+
+# ---------------------------------------------------------------------------
 # LM pointwise family through tdp backends
 # ---------------------------------------------------------------------------
 
@@ -207,6 +251,7 @@ BENCHES = {
     "fig1": bench_fig1,
     "vvl": bench_vvl,
     "masked_copy": bench_masked_copy,
+    "fused_step": bench_fused_step,
     "lm_step": bench_lm_step,
 }
 

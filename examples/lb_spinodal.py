@@ -23,11 +23,15 @@ def main():
     ap.add_argument("--backend", default="xla",
                     choices=("xla", "pallas_interpret"))
     ap.add_argument("--vvl", type=int, default=128)
+    ap.add_argument("--fused", action="store_true",
+                    help="single fused stream+gradient+collide stencil "
+                         "launch per step (same trajectory)")
     args = ap.parse_args()
 
     params = LBParams(A=0.125, B=0.125, kappa=0.02)
     sim = BinaryFluidSim((args.grid,) * 3, params=params,
-                         backend=args.backend, vvl=args.vvl)
+                         backend=args.backend, vvl=args.vvl,
+                         fused=args.fused)
     state = sim.init_spinodal(seed=0, noise=0.05)
 
     obs0 = sim.observables(state)

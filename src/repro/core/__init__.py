@@ -11,7 +11,15 @@ Public surface (paper → here):
   (``TARGET_LAUNCH`` + ``TARGET_TLP``/``TARGET_ILP`` with tunable VVL),
   :func:`reduce` (the paper's §V planned extension).
 """
-from .lattice import Lattice, token_lattice
+from .lattice import (
+    D3Q19_VELOCITIES,
+    Lattice,
+    Stencil,
+    STENCIL_D3Q19_PULL,
+    STENCIL_GRAD_6PT,
+    STENCIL_GRAD_19PT,
+    token_lattice,
+)
 from .field import Field, field_like
 from .memory import (
     TargetConst,
@@ -28,6 +36,7 @@ from .memory import (
 from .execute import (
     default_vvl,
     launch,
+    launch_stencil,
     reduce,
     set_default_vvl,
     site_kernel,
@@ -35,6 +44,8 @@ from .execute import (
 
 __all__ = [
     "Lattice", "token_lattice", "Field", "field_like",
+    "Stencil", "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",
+    "D3Q19_VELOCITIES", "launch_stencil",
     "TargetConst", "copy_constant_to_target",
     "copy_to_target", "copy_from_target",
     "copy_to_target_masked", "copy_from_target_masked",

@@ -1,0 +1,78 @@
+"""JAX version compatibility shims.
+
+The framework targets the modern JAX surface (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.make_mesh`` with ``axis_types``,
+``jax.lax.ragged_dot_general``); older runtimes (0.4.x, as baked into this
+container) expose the same functionality under different names:
+
+* ``jax.shard_map``            → ``jax.experimental.shard_map.shard_map``
+  (``check_vma`` was ``check_rep``; ``axis_names={a}`` — manual over the
+  named axes only — was the complement set ``auto=all_axes - {a}``).
+* ``jax.make_mesh(axis_types=...)`` → same call without ``axis_types``
+  (all axes were implicitly Auto under GSPMD).
+
+Every in-repo call site goes through this module, so the rest of the code
+reads as if it were written against one JAX.  Keep the shims *thin*: each
+wrapper maps arguments, it never reimplements semantics.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """``jax.shard_map`` on new JAX; the experimental equivalent on 0.4.x.
+
+    ``axis_names``: the mesh axes the body is *manual* over (``None`` →
+    all of them).  ``check_vma`` maps onto old-JAX ``check_rep`` and
+    keeps the modern default (True) — call sites opt out explicitly.
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kw: dict[str, Any] = dict(mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
+
+def supports_partial_manual() -> bool:
+    """Whether shard_map may be manual over a *subset* of mesh axes.
+
+    Old XLA builds (paired with 0.4.x jax) hit a partitioner CHECK
+    (``sharding.IsManualSubgroup()``) when auto-sharded ops appear inside a
+    partially-manual region; callers fall back to fully-manual bodies.
+    """
+    return _HAS_NEW_SHARD_MAP
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis inside a manual region
+    (``jax.lax.axis_size`` on new JAX; the axis-env frame on 0.4.x)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.core as _core
+    return int(_core.axis_frame(axis_name))
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` with all-Auto (or all-Explicit) axis types where the
+    runtime supports typed mesh axes; the untyped GSPMD mesh otherwise."""
+    if _HAS_AXIS_TYPE:
+        t = (jax.sharding.AxisType.Explicit if explicit
+             else jax.sharding.AxisType.Auto)
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(t,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

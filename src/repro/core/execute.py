@@ -27,7 +27,7 @@ from typing import Callable, Mapping, Sequence
 import jax
 import jax.numpy as jnp
 
-from .lattice import Lattice
+from .lattice import Lattice, Stencil
 from .memory import TargetConst
 
 # Default VVL: one full TPU vector register row of lanes.  The paper tunes
@@ -94,18 +94,27 @@ def _normalize_out_ncomp(out_ncomp, inputs) -> tuple[int, ...]:
 # jnp executor ("C implementation")
 # ---------------------------------------------------------------------------
 
+def pad_sites(x: jax.Array, vvl: int) -> jax.Array:
+    """Zero-pad the trailing site axis up to a VVL multiple (paper §III-C:
+    the TLP loop strides in whole chunks).  Shared by every executor —
+    padded lanes are sliced away after the launch, so kernels may produce
+    garbage (even NaN) there."""
+    n = x.shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    if n_pad == n:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
+    return jnp.pad(x, widths)
+
+
 def _xla_launch(kernel, vvl: int, with_site_index: bool, n_out: int,
                 consts: dict, inputs: Sequence[jax.Array]):
     n = inputs[0].shape[-1]
     n_pad = -(-n // vvl) * vvl
     nchunks = n_pad // vvl
 
-    def pad(x):
-        if n_pad == n:
-            return x
-        return jnp.pad(x, ((0, 0), (0, n_pad - n)))
-
-    chunked = [pad(x).reshape(x.shape[0], nchunks, vvl) for x in inputs]
+    chunked = [pad_sites(x, vvl).reshape(x.shape[0], nchunks, vvl)
+               for x in inputs]
 
     body = functools.partial(kernel, **consts) if consts else kernel
     if with_site_index:
@@ -183,6 +192,187 @@ def launch(kernel: Callable, lattice: Lattice | None, inputs: Sequence[jax.Array
     out_spec = _normalize_out_ncomp(out_ncomp, inputs)
     key = _consts_cache_key(consts or {})
     return _build_launch(kernel, vvl, backend, with_site_index, out_spec, key)(*inputs)
+
+
+# ---------------------------------------------------------------------------
+# stencil launch — halo-aware site kernels (paper §III-B meets §III-C)
+# ---------------------------------------------------------------------------
+#
+# A *stencil* site kernel receives, for each input field that carries a
+# Stencil descriptor, a ``(noffsets, ncomp, VVL)`` chunk: slot i holds the
+# field at ``site + stencil.offsets[i]`` for every site lane of the chunk.
+# Inputs without a stencil stay pointwise ``(ncomp, VVL)``.  The gather is
+# periodic (roll) along dimensions with no halo and window-sliced along
+# dimensions where the caller supplies ghost planes (the mesh-sharded path:
+# ``ppermute`` halo exchange fills the ghost planes, this launch consumes
+# them) — the JAX restatement of targetDP's masked-copy halo machinery.
+
+
+def _normalize_stencils(stencil, n_inputs) -> tuple:
+    if isinstance(stencil, Stencil):
+        return (stencil,) * n_inputs
+    stencils = tuple(stencil)
+    if len(stencils) != n_inputs:
+        raise ValueError(
+            f"got {len(stencils)} stencils for {n_inputs} inputs")
+    if not any(s is not None for s in stencils):
+        raise ValueError("launch_stencil needs at least one Stencil; "
+                         "use launch() for pointwise kernels")
+    return stencils
+
+
+def _normalize_halo(halo, ndim) -> tuple[int, ...]:
+    if halo is None:
+        return (0,) * ndim
+    if isinstance(halo, int):
+        return (int(halo),) * ndim
+    h = tuple(int(x) for x in halo)
+    if len(h) != ndim:
+        raise ValueError(f"halo {h} does not match lattice ndim {ndim}")
+    return h
+
+
+def gather_neighbors(x: jax.Array, shape: tuple[int, ...],
+                     halo: tuple[int, ...], stencil: Stencil) -> jax.Array:
+    """``(ncomp, nsites_ext)`` → ``(noffsets, ncomp, nsites)`` neighbour
+    stack over the interior sites.
+
+    Dimensions with ``halo[d] == 0`` wrap periodically (``roll``); those
+    with ``halo[d] > 0`` read the caller-supplied ghost planes (offset
+    window into the extended extent).
+    """
+    ext = tuple(s + 2 * h for s, h in zip(shape, halo))
+    grid = x.reshape(x.shape[0], *ext)
+    n = _prod_shape(shape)
+    planes = []
+    for off in stencil.offsets:
+        g = grid
+        for d, o in enumerate(off):
+            ax = d + 1
+            if halo[d]:
+                g = jax.lax.slice_in_dim(g, halo[d] + o,
+                                         halo[d] + o + shape[d], axis=ax)
+            elif o:
+                g = jnp.roll(g, -o, axis=ax)
+        planes.append(g.reshape(x.shape[0], n))
+    return jnp.stack(planes)
+
+
+def _prod_shape(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _stencil_xla_launch(kernel, vvl: int, n_out: int, consts: dict,
+                        gathered: Sequence[jax.Array]):
+    """vmap the kernel over VVL chunks of pre-gathered neighbour stacks.
+
+    ``gathered``: per input either ``(noffsets, ncomp, n)`` (stencil) or
+    ``(ncomp, n)`` (pointwise).
+    """
+    n = gathered[0].shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    nchunks = n_pad // vvl
+
+    chunks = [pad_sites(x, vvl).reshape(*x.shape[:-1], nchunks, vvl)
+              for x in gathered]
+    body = functools.partial(kernel, **consts) if consts else kernel
+    in_axes = tuple(x.ndim - 2 for x in chunks)
+    outs = jax.vmap(body, in_axes=in_axes,
+                    out_axes=1 if n_out == 1 else (1,) * n_out)(*chunks)
+    outs = (outs,) if n_out == 1 else tuple(outs)
+    flat = tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
+    return flat[0] if n_out == 1 else flat
+
+
+@functools.lru_cache(maxsize=4096)
+def _build_stencil_launch(kernel, vvl: int, backend: Backend,
+                          out_ncomp: tuple[int, ...], const_key,
+                          lattice: Lattice, halo: tuple[int, ...],
+                          stencils: tuple) -> Callable:
+    consts = _unwrap_consts(dict(const_key))
+    n_out = len(out_ncomp)
+    shape = lattice.shape
+
+    def run(*inputs):
+        gathered = [
+            x if s is None else gather_neighbors(x, shape, halo, s)
+            for x, s in zip(inputs, stencils)
+        ]
+        if backend == "xla":
+            return _stencil_xla_launch(kernel, vvl, n_out, consts, gathered)
+        from repro.kernels import tdp_stencil  # lazy: Pallas import
+        return tdp_stencil.pallas_stencil_launch(
+            kernel, vvl, out_ncomp, consts,
+            backend == "pallas_interpret", gathered)
+
+    return jax.jit(run)
+
+
+def launch_stencil(kernel: Callable, lattice: Lattice,
+                   inputs: Sequence[jax.Array], *,
+                   stencil: Stencil | Sequence[Stencil | None],
+                   out_ncomp: int | Sequence[int] | None = None,
+                   consts: Mapping[str, object] | None = None,
+                   vvl: int | None = None,
+                   backend: Backend = "xla",
+                   halo: int | Sequence[int] | None = None):
+    """Launch a stencil site kernel over the lattice interior.
+
+    Args:
+      kernel: site kernel.  For each input with a stencil it receives a
+        ``(noffsets, ncomp_i, VVL)`` neighbour chunk (slot order =
+        ``stencil.offsets``); pointwise inputs stay ``(ncomp_i, VVL)``.
+      lattice: the grid (required — neighbour geometry needs the shape).
+      inputs: SoA arrays.  Stencil-carrying inputs span the *extended*
+        extent ``prod(shape[d] + 2·halo[d])`` (ghost planes filled by the
+        caller when ``halo[d] > 0``); pointwise inputs span the interior.
+      stencil: one :class:`Stencil` for all inputs, or a per-input sequence
+        (``None`` → pointwise input).
+      out_ncomp / consts / vvl / backend: as :func:`launch`.
+      halo: per-dimension ghost width already present in the stencil
+        inputs.  ``0`` (default) → that dimension wraps periodically.
+        Must cover the stencil radius wherever non-zero.
+
+    Returns interior-extent outputs ``(ncomp_out, lattice.nsites)``.
+    """
+    if backend not in _VALID_BACKENDS:
+        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {backend!r}")
+    if lattice is None:
+        raise ValueError("launch_stencil requires a lattice")
+    inputs = tuple(inputs)
+    if not inputs:
+        raise ValueError("launch_stencil requires at least one input field")
+    if any(x.ndim != 2 for x in inputs):
+        raise ValueError("inputs must be SoA arrays of shape (ncomp, nsites)")
+    stencils = _normalize_stencils(stencil, len(inputs))
+    h = _normalize_halo(halo, lattice.ndim)
+    n_ext = _prod_shape(tuple(s + 2 * hh for s, hh in zip(lattice.shape, h)))
+    for x, s in zip(inputs, stencils):
+        want = n_ext if s is not None else lattice.nsites
+        if int(x.shape[-1]) != want:
+            raise ValueError(
+                f"input extent {x.shape[-1]} != expected {want} "
+                f"({'extended' if s is not None else 'interior'}; "
+                f"shape={lattice.shape}, halo={h})")
+        if s is not None:
+            if s.ndim != lattice.ndim:
+                raise ValueError(
+                    f"stencil {s.name!r} is {s.ndim}-D on a "
+                    f"{lattice.ndim}-D lattice")
+            for d, r in enumerate(s.radius_per_dim()):
+                if h[d] and h[d] < r:
+                    raise ValueError(
+                        f"halo {h[d]} in dim {d} < stencil {s.name!r} "
+                        f"radius {r}")
+    vvl = vvl or _DEFAULT_VVL
+    out_spec = _normalize_out_ncomp(out_ncomp, inputs)
+    key = _consts_cache_key(consts or {})
+    fn = _build_stencil_launch(kernel, vvl, backend, out_spec, key,
+                               lattice, h, stencils)
+    return fn(*inputs)
 
 
 # ---------------------------------------------------------------------------

@@ -89,3 +89,106 @@ class Lattice:
 def token_lattice(batch: int, seq: int) -> Lattice:
     """The LM token lattice: one site per (batch, position) pair."""
     return Lattice(shape=(batch, seq), halo=0)
+
+
+# ---------------------------------------------------------------------------
+# stencils — first-class neighbourhood descriptors
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Stencil:
+    """A static set of neighbour offsets a site kernel reads.
+
+    ``launch_stencil`` gathers, for every input field carrying a stencil,
+    one ``(noffsets, ncomp, VVL)`` chunk per site chunk: slot ``i`` holds
+    the field value at ``site + offsets[i]``.  Offsets are ordered — kernels
+    address slots by :meth:`index` (resolved at trace time, so the lookup
+    costs nothing at run time).
+
+    The descriptor is the single source of truth for the halo the launch
+    needs (:attr:`radius`) and for the VMEM footprint of the Pallas
+    executor (one block row per offset).
+    """
+
+    name: str
+    offsets: tuple[tuple[int, ...], ...]
+
+    def __post_init__(self):
+        offs = tuple(tuple(int(c) for c in o) for o in self.offsets)
+        if not offs:
+            raise ValueError("stencil needs at least one offset")
+        ndims = {len(o) for o in offs}
+        if len(ndims) != 1:
+            raise ValueError(f"offsets disagree on dimensionality: {offs}")
+        if len(set(offs)) != len(offs):
+            raise ValueError(f"duplicate offsets in stencil {self.name!r}")
+        object.__setattr__(self, "offsets", offs)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.offsets[0])
+
+    @property
+    def noffsets(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def radius(self) -> int:
+        """Max |offset| component — the halo width the stencil needs."""
+        return max(abs(c) for o in self.offsets for c in o)
+
+    def radius_per_dim(self) -> tuple[int, ...]:
+        return tuple(max(abs(o[d]) for o in self.offsets)
+                     for d in range(self.ndim))
+
+    def index(self, offset) -> int:
+        """Slot of ``offset`` in the gathered neighbour axis."""
+        key = tuple(int(c) for c in offset)
+        try:
+            return self.offsets.index(key)
+        except ValueError:
+            raise KeyError(
+                f"offset {key} not in stencil {self.name!r}") from None
+
+    def compose(self, other: "Stencil", name: str | None = None) -> "Stencil":
+        """Minkowski sum: every ``a + b`` offset, deduplicated.
+
+        Composition is how fused multi-stage stencils are built: a pull
+        stream (offsets ``-c_q``) composed with a gradient star gives the
+        neighbourhood of gradient-of-streamed-field in one launch.
+        """
+        seen, offs = set(), []
+        for a in self.offsets:
+            for b in other.offsets:
+                o = tuple(x + y for x, y in zip(a, b))
+                if o not in seen:
+                    seen.add(o)
+                    offs.append(o)
+        return Stencil(name or f"{self.name}*{other.name}", tuple(offs))
+
+
+def _d3q19_velocities() -> tuple[tuple[int, int, int], ...]:
+    """The D3Q19 velocity set (rest, 6 axis vectors, 12 face diagonals) —
+    canonical integer form; ``repro.kernels.lb_collision.CV`` is its float
+    counterpart (asserted equal there)."""
+    axis = [(1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1),
+            (0, 0, -1)]
+    diag = [(1, 1, 0), (1, -1, 0), (-1, 1, 0), (-1, -1, 0),
+            (1, 0, 1), (1, 0, -1), (-1, 0, 1), (-1, 0, -1),
+            (0, 1, 1), (0, 1, -1), (0, -1, 1), (0, -1, -1)]
+    return tuple([(0, 0, 0)] + axis + diag)
+
+
+D3Q19_VELOCITIES: tuple[tuple[int, int, int], ...] = _d3q19_velocities()
+
+#: Pull-scheme streaming: slot q holds the neighbour at ``-c_q``, i.e. the
+#: upstream site whose population arrives here (f_q(x) ← f_q(x - c_q)).
+STENCIL_D3Q19_PULL = Stencil(
+    "d3q19_pull", tuple(tuple(-c for c in o) for o in D3Q19_VELOCITIES))
+
+#: 6-point nearest-neighbour gradient star (+ centre): slot 0 is the site
+#: itself, slots 1.. are (+x, -x, +y, -y, +z, -z).
+STENCIL_GRAD_6PT = Stencil("grad_6pt", tuple(D3Q19_VELOCITIES[:7]))
+
+#: 19-point isotropic gradient neighbourhood (centre + 18 D3Q19 neighbours).
+STENCIL_GRAD_19PT = Stencil("grad_19pt", D3Q19_VELOCITIES)

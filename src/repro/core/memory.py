@@ -187,7 +187,11 @@ class TargetConst:
 
     def __init__(self, value: Any):
         arr = np.asarray(value)
-        self.value = jnp.asarray(arr)
+        # Keep the host (numpy) array: constructing a device array here
+        # would, under an active jit trace, capture a tracer that outlives
+        # the trace (launch closures are cached across traces).  jnp ops
+        # consume numpy constants transparently at trace time.
+        self.value = arr
         self._key = (arr.shape, str(arr.dtype), arr.tobytes())
 
     def __hash__(self):

@@ -39,6 +39,29 @@ def lb_collision(f, g, phi, gradphi, del2phi, *, backend="xla", vvl=128, **phys)
     return _ref.lb_collision_ref(f, g, phi, gradphi, del2phi, **phys)
 
 
+def lb_fused_step(f, g, *, grid_shape, halo=0, backend="xla", vvl=128,
+                  **phys):
+    """One fused stream→gradient→collide step over SoA arrays (19, nsites).
+
+    ``f``/``g`` are *pre-stream* populations over ``grid_shape`` (extended
+    by ``halo`` ghost planes per dimension where non-zero — the sharded
+    path; 0 → fully periodic).  Returns the next pre-stream state over the
+    interior.  Single source across backends via ``launch_stencil``.
+    """
+    from repro.core import Lattice, TargetConst, launch_stencil
+    from repro.lb import stencil as _lbst   # lazy: avoids kernels↔lb cycle
+
+    _check(backend)
+    lat = Lattice(tuple(int(s) for s in grid_shape))
+    consts = dict(w=TargetConst(_lb.WEIGHTS.astype(f.dtype)),
+                  c=TargetConst(_lb.CV.astype(f.dtype)), **phys)
+    return launch_stencil(
+        _lbst.fused_site_kernel, lat, [f, g],
+        stencil=(_lbst.STENCIL_D3Q19_PULL, _lbst.STENCIL_FUSED_G),
+        out_ncomp=(_lb.NVEL, _lb.NVEL), consts=consts, vvl=vvl,
+        backend=backend, halo=halo)
+
+
 def rmsnorm(x, weight, *, backend="xla", vvl=256, eps=1e-6, scale_offset=0.0):
     if _check(backend):
         return _rn.rmsnorm_pallas(x, weight, vvl=vvl, eps=eps,

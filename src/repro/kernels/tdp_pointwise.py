@@ -30,9 +30,19 @@ from jax.experimental import pallas as pl
 
 
 def vmem_bytes_estimate(in_ncomp: Sequence[int], out_ncomp: Sequence[int],
-                        vvl: int, itemsize: int = 4) -> int:
-    """Static VMEM footprint of one grid step (inputs + outputs)."""
-    return sum(in_ncomp) * vvl * itemsize + sum(out_ncomp) * vvl * itemsize
+                        vvl: int, in_noffsets: Sequence[int] | None = None,
+                        itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step (inputs + outputs).
+
+    ``in_noffsets[i]``: neighbour count of input i — 1 (default) for
+    pointwise inputs, ``stencil.noffsets`` for stencil inputs (the halo
+    rows each add a block row; see docs/stencil.md).  The stencil executor
+    (:mod:`repro.kernels.tdp_stencil`) re-exports this single rule.
+    """
+    if in_noffsets is None:
+        in_noffsets = [1] * len(in_ncomp)
+    in_rows = sum(int(o) * int(c) for o, c in zip(in_noffsets, in_ncomp))
+    return (in_rows + sum(out_ncomp)) * vvl * itemsize
 
 
 def _canonicalize_consts(consts: dict):
@@ -61,17 +71,14 @@ def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,
                   out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
                   inputs: tuple[jax.Array, ...]):
     """Launch ``kernel`` over the site axis with VVL-sized VMEM blocks."""
+    from repro.core.execute import pad_sites
+
     n = inputs[0].shape[-1]
     n_pad = -(-n // vvl) * vvl
     nchunks = n_pad // vvl
     dtype = inputs[0].dtype
 
-    def pad(x):
-        if n_pad == n:
-            return x
-        return jnp.pad(x, ((0, 0), (0, n_pad - n)))
-
-    padded = tuple(pad(x) for x in inputs)
+    padded = tuple(pad_sites(x, vvl) for x in inputs)
     scalar_consts, array_consts = _canonicalize_consts(consts)
     const_names = list(array_consts)
     const_vals = [array_consts[k][1] for k in const_names]

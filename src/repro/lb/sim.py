@@ -6,9 +6,17 @@ One timestep:
   3. collision:     targetDP kernel (f, g, φ, ∇φ, ∇²φ) → (f', g')   ← hot spot
   4. streaming:     f'_q(x+c_q) ← f'_q(x)            (shift + halo)
 
-Runs single-device (roll-based periodic) or mesh-sharded (slab decomposition
-along X under ``shard_map`` with ``ppermute`` halo exchange).  The collision
-backend/VVL are launch-time switches — the paper's portability contract.
+Runs single-device (periodic stencil gather) or mesh-sharded (slab
+decomposition along X under ``shard_map`` with ``ppermute`` halo exchange).
+The collision backend/VVL are launch-time switches — the paper's
+portability contract.
+
+With ``fused=True`` the hot loop is a *single* stencil launch per step
+(stream → φ moments → ∇φ/∇²φ → collide; no intermediate full-lattice
+arrays): the iterated state is the pre-stream populations w = collide(u),
+since (stream∘collide)ⁿ = stream ∘ (collide∘stream)ⁿ⁻¹ ∘ collide — the
+first collide and last stream run once as separate launches, so fused and
+unfused trajectories match state-for-state.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.kernels import ops
 from repro.kernels.lb_collision import NVEL, WEIGHTS
 from . import stencil
@@ -55,13 +64,14 @@ class BinaryFluidSim:
     def __init__(self, grid_shape=(32, 32, 32), params: LBParams | None = None,
                  *, backend: str = "xla", vvl: int = 128,
                  mesh: Mesh | None = None, shard_axis: str = "data",
-                 dtype=jnp.float32):
+                 fused: bool = False, dtype=jnp.float32):
         self.grid_shape = tuple(int(s) for s in grid_shape)
         self.params = params or LBParams()
         self.backend = backend
         self.vvl = vvl
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.fused = fused
         self.dtype = dtype
         if mesh is not None:
             nsh = mesh.shape[shard_axis]
@@ -69,7 +79,17 @@ class BinaryFluidSim:
                 raise ValueError(
                     f"X extent {self.grid_shape[0]} not divisible by "
                     f"mesh axis {shard_axis}={nsh}")
+            if fused and self.grid_shape[0] // nsh < 2:
+                # the width-2 ghost exchange reads from the nearest
+                # neighbour only — each slab must hold the full halo
+                raise ValueError(
+                    f"fused sharding needs a local X slab >= 2 planes; "
+                    f"got {self.grid_shape[0]}/{nsh} = "
+                    f"{self.grid_shape[0] // nsh}")
         self._step_fn = self._build_step()
+        if fused:
+            self._collide_fn, self._fused_fn, self._stream_fn = \
+                self._build_fused()
 
     # -- initialisation ----------------------------------------------------
 
@@ -127,26 +147,115 @@ class BinaryFluidSim:
             return stencil.stream_sharded(f, axis), stencil.stream_sharded(g, axis)
 
         spec = P(None, axis, None, None)
-        shmapped = jax.shard_map(step_sharded, mesh=self.mesh,
+        shmapped = compat.shard_map(step_sharded, mesh=self.mesh,
                                  in_specs=(spec, spec), out_specs=(spec, spec))
         return jax.jit(shmapped)
 
+    def _build_fused(self):
+        """(collide, fused, stream) jitted fns for the fused regime.
+
+        The hot loop iterates the *pre-stream* state w = collide(u):
+        n unfused steps (stream∘collide)ⁿ equal stream ∘ fusedⁿ⁻¹ ∘ collide,
+        where ``fused`` is one stencil launch (stream → ∇φ → collide, no
+        intermediate full-lattice arrays).
+        """
+        params, backend, vvl = self.params, self.backend, self.vvl
+        gs = self.grid_shape
+        n = int(np.prod(gs))
+
+        def fused_local(f, g):
+            fo, go = ops.lb_fused_step(
+                f.reshape(NVEL, n), g.reshape(NVEL, n), grid_shape=gs,
+                backend=backend, vvl=vvl, **params.as_kwargs())
+            return fo.reshape(NVEL, *gs), go.reshape(NVEL, *gs)
+
+        def collide_local(f, g):
+            phi = g.sum(0)
+            gradphi, del2phi = stencil.gradients(phi)
+            return _collide_flat(f, g, phi, gradphi, del2phi,
+                                 params=params, backend=backend, vvl=vvl)
+
+        def stream_local(f, g):
+            return stencil.stream(f), stencil.stream(g)
+
+        if self.mesh is None:
+            return (jax.jit(collide_local), jax.jit(fused_local),
+                    jax.jit(stream_local))
+
+        axis = self.shard_axis
+
+        def fused_sharded(f, g):
+            # 2-plane ppermute halo exchange feeds the radius-2 composed
+            # stencil's ghost planes (halo window along the slab axis).
+            fe = stencil._extend_x(f, axis, 2)
+            ge = stencil._extend_x(g, axis, 2)
+            local = f.shape[1:]
+            fo, go = ops.lb_fused_step(
+                fe.reshape(NVEL, -1), ge.reshape(NVEL, -1),
+                grid_shape=local, halo=(2, 0, 0), backend=backend, vvl=vvl,
+                **params.as_kwargs())
+            return fo.reshape(NVEL, *local), go.reshape(NVEL, *local)
+
+        def collide_sharded(f, g):
+            phi = g.sum(0)
+            gradphi, del2phi = stencil.gradients_sharded(phi, axis)
+            return _collide_flat(f, g, phi, gradphi, del2phi,
+                                 params=params, backend=backend, vvl=vvl)
+
+        def stream_sharded(f, g):
+            return (stencil.stream_sharded(f, axis),
+                    stencil.stream_sharded(g, axis))
+
+        spec = P(None, axis, None, None)
+
+        def shmap(fn):
+            return jax.jit(compat.shard_map(
+                fn, mesh=self.mesh, in_specs=(spec, spec),
+                out_specs=(spec, spec)))
+
+        return shmap(collide_sharded), shmap(fused_sharded), \
+            shmap(stream_sharded)
+
     def step(self, state: LBState, nsteps: int = 1) -> LBState:
         f, g = state.f, state.g
-        for _ in range(nsteps):
-            f, g = self._step_fn(f, g)
+        if nsteps <= 0:
+            return state
+        if self.fused:
+            f, g = self._collide_fn(f, g)
+            for _ in range(nsteps - 1):
+                f, g = self._fused_fn(f, g)
+            f, g = self._stream_fn(f, g)
+        else:
+            for _ in range(nsteps):
+                f, g = self._step_fn(f, g)
         return LBState(f, g, state.step + nsteps)
 
     def run_scanned(self, state: LBState, nsteps: int) -> LBState:
         """nsteps under one jitted lax.scan (for benchmarking)."""
-        fn = self._step_fn
+        if nsteps <= 0:
+            return state
+        if self.fused:
+            collide, fused, stream_ = \
+                self._collide_fn, self._fused_fn, self._stream_fn
 
-        @jax.jit
-        def many(f, g):
-            def body(carry, _):
-                return fn(*carry), None
-            (f, g), _ = jax.lax.scan(body, (f, g), None, length=nsteps)
-            return f, g
+            @jax.jit
+            def many(f, g):
+                f, g = collide(f, g)
+
+                def body(carry, _):
+                    return fused(*carry), None
+                (f, g), _ = jax.lax.scan(body, (f, g), None,
+                                         length=nsteps - 1)
+                return stream_(f, g)
+        else:
+            fn = self._step_fn
+
+            @jax.jit
+            def many(f, g):
+                def body(carry, _):
+                    return fn(*carry), None
+                (f, g), _ = jax.lax.scan(body, (f, g), None, length=nsteps)
+                return f, g
 
         f, g = many(state.f, state.g)
         return LBState(f, g, state.step + nsteps)

@@ -1,19 +1,33 @@
-"""Finite-difference stencils and streaming for the 3-D lattice.
+"""Stencils and streaming for the 3-D lattice, on the targetDP stencil layer.
+
+The neighbourhood math is declared once as :class:`repro.core.Stencil`
+descriptors and executed by :func:`repro.core.launch_stencil` — the same
+single-source site kernels run on the jnp and Pallas executors (paper
+portability contract, extended from pointwise to stencil-shaped kernels).
 
 Two execution regimes, one math:
 
-* **single-device** — periodic shifts via ``jnp.roll`` (the whole lattice is
-  local);
+* **single-device** — fully periodic; the stencil gather wraps every
+  dimension (``halo=0``);
 * **mesh-sharded** — slab decomposition along X over a named mesh axis;
-  the one-plane halo travels by ``lax.ppermute`` (the JAX-native analogue
-  of Ludwig's MPI halo swap; the paper's masked-copy machinery packs the
-  boundary subset).  Used inside ``shard_map`` by :mod:`repro.lb.sim`.
+  ghost planes travel by ``lax.ppermute`` (the JAX-native analogue of
+  Ludwig's MPI halo swap; the paper's masked-copy machinery packs the
+  boundary subset) and feed the stencil's ``halo=(h,0,0)`` window mode.
+  Used inside ``shard_map`` by :mod:`repro.lb.sim`.
 
-Gradients use the 6-point nearest-neighbour stencil:
+Gradients use the 6-point nearest-neighbour star:
   ∇φ_d  = (φ(+e_d) - φ(-e_d)) / 2
   ∇²φ   = Σ_d (φ(+e_d) + φ(-e_d)) - 6 φ
-(adequate for the symmetric benchmark; the 19-point isotropic variant drops
-in site-locally and is left as a config switch.)
+(adequate for the symmetric benchmark; ``STENCIL_GRAD_19PT`` declares the
+19-point isotropic neighbourhood for a drop-in variant.)
+
+The **fused step** (:func:`fused_site_kernel`) is the paper-successor's
+(1609.01479) key optimisation: one stencil launch computes
+stream → φ moments → ∇φ/∇²φ → binary collision with *no* intermediate
+full-lattice arrays.  Its g-field neighbourhood is the Minkowski
+composition ``grad6 ∘ d3q19-pull`` (radius 2) — each site reads the
+pre-stream populations that determine φ at itself and its six gradient
+neighbours.
 """
 from __future__ import annotations
 
@@ -21,86 +35,190 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.lb_collision import CV, NVEL
+from repro.core import (
+    Lattice,
+    STENCIL_D3Q19_PULL,
+    STENCIL_GRAD_6PT,
+    STENCIL_GRAD_19PT,  # noqa: F401 — re-exported config switch
+    compat,
+    launch_stencil,
+)
+from repro.kernels.lb_collision import CV, NVEL, collision_site_kernel
 
 # grid arrays are (ncomp, X, Y, Z); spatial axes are 1, 2, 3
 _SPATIAL = (1, 2, 3)
 
+_CVI = CV.astype(int)
+
+# slot of the upstream neighbour -c_q in the pull stencil (== q by
+# construction; resolved through Stencil.index so the kernels stay correct
+# under any offset ordering)
+_PULL_IDX = tuple(STENCIL_D3Q19_PULL.index(tuple(-_CVI[q]))
+                  for q in range(NVEL))
+
+# gradient star directions, in STENCIL_GRAD_6PT slot order:
+# (centre, +x, -x, +y, -y, +z, -z)
+_DIRS = STENCIL_GRAD_6PT.offsets
+
+#: g-field neighbourhood of the fused step: populations at d - c_q for every
+#: gradient direction d and velocity c_q (radius 2).
+STENCIL_FUSED_G = STENCIL_GRAD_6PT.compose(STENCIL_D3Q19_PULL, name="fused_g")
+
+# _FUSED_G_IDX[d][q]: slot of offset (dirs[d] - c_q) in STENCIL_FUSED_G —
+# where population q that will stream onto site+dirs[d] sits pre-stream.
+_FUSED_G_IDX = tuple(
+    tuple(STENCIL_FUSED_G.index(tuple(np.add(d, -_CVI[q])))
+          for q in range(NVEL))
+    for d in _DIRS)
+
 
 # ---------------------------------------------------------------------------
-# single-device (fully periodic, roll-based)
+# site kernels (single source; static slot indices — Pallas-legal)
 # ---------------------------------------------------------------------------
 
-def gradients(phi: jax.Array) -> tuple[jax.Array, jax.Array]:
+def stream_site_kernel(f_nb):
+    """Pull streaming over one chunk: ``f_nb (19, 19, V)`` neighbour stack
+    (slot i = populations at site + pull offset i) → streamed ``(19, V)``."""
+    return jnp.stack([f_nb[_PULL_IDX[q], q] for q in range(NVEL)])
+
+
+def _grad6_from_p(p):
+    """∇φ (3, V) and ∇²φ (V,) from φ at the 7 grad-star slots (p[0] =
+    centre, then +x,-x,+y,-y,+z,-z).  One accumulation order, shared by the
+    plain and fused kernels — it must stay bit-identical between them (and
+    with the historical roll-based implementation) for the fused==unfused
+    trajectory guarantee."""
+    grad = 0.5 * jnp.stack([p[1] - p[2], p[3] - p[4], p[5] - p[6]])
+    lap = -6.0 * p[0]
+    lap = lap + p[1] + p[2]
+    lap = lap + p[3] + p[4]
+    lap = lap + p[5] + p[6]
+    return grad, lap
+
+
+def grad6_site_kernel(phi_nb):
+    """6-point ∇φ and ∇²φ over one chunk: ``phi_nb (7, 1, V)`` →
+    ``((3, V), (1, V))``."""
+    grad, lap = _grad6_from_p(phi_nb[:, 0])
+    return grad, lap[None]
+
+
+def fused_site_kernel(f_nb, g_nb, *, w=None, c=None, A=0.0625, B=0.0625,
+                      kappa=0.04, tau=1.0, tau_phi=1.0, gamma=1.0):
+    """Fused stream → moments → gradients → binary collision, one chunk.
+
+    Args:
+      f_nb: (19, 19, V) fluid populations at the pull offsets.
+      g_nb: (noffsets, 19, V) order-parameter populations at the composed
+        ``STENCIL_FUSED_G`` offsets.
+      w, c, A..gamma: the collision TARGET_CONSTs (see
+        :func:`repro.kernels.lb_collision.collision_site_kernel`).
+
+    Returns post-collision ``(f', g')`` chunks, both (19, V) — the
+    *pre-stream* state of the next step.
+    """
+    f_s = jnp.stack([f_nb[_PULL_IDX[q], q] for q in range(NVEL)])
+    g_s = jnp.stack([g_nb[_FUSED_G_IDX[0][q], q] for q in range(NVEL)])
+
+    # φ of the streamed g at the site and its 6 gradient neighbours —
+    # φ(x+d) = Σ_q g(x + d - c_q); never materialised outside the chunk.
+    def phi_at(d):
+        acc = g_nb[_FUSED_G_IDX[d][0], 0]
+        for q in range(1, NVEL):
+            acc = acc + g_nb[_FUSED_G_IDX[d][q], q]
+        return acc
+
+    p = [phi_at(d) for d in range(len(_DIRS))]         # 7 × (V,)
+    grad, lap = _grad6_from_p(p)
+    return collision_site_kernel(
+        f_s, g_s, p[0][None], grad, lap[None], w=w, c=c, A=A, B=B,
+        kappa=kappa, tau=tau, tau_phi=tau_phi, gamma=gamma)
+
+
+fused_site_kernel.__tdp_site_kernel__ = True
+
+
+# ---------------------------------------------------------------------------
+# grid-level wrappers (single device: fully periodic)
+# ---------------------------------------------------------------------------
+
+def gradients(phi: jax.Array, *, backend: str = "xla",
+              vvl: int | None = None) -> tuple[jax.Array, jax.Array]:
     """∇φ and ∇²φ of a scalar grid ``(X, Y, Z)`` → ``(3, X, Y, Z)``, ``(X, Y, Z)``."""
-    grads = []
-    lap = -6.0 * phi
-    for ax in range(3):
-        plus = jnp.roll(phi, -1, axis=ax)
-        minus = jnp.roll(phi, 1, axis=ax)
-        grads.append(0.5 * (plus - minus))
-        lap = lap + plus + minus
-    return jnp.stack(grads), lap
+    gs = phi.shape
+    lat = Lattice(gs)
+    grad, lap = launch_stencil(
+        grad6_site_kernel, lat, [phi.reshape(1, lat.nsites)],
+        stencil=STENCIL_GRAD_6PT, out_ncomp=(3, 1), backend=backend, vvl=vvl)
+    return grad.reshape(3, *gs), lap.reshape(gs)
 
 
-def stream(dist: jax.Array) -> jax.Array:
+def stream(dist: jax.Array, *, backend: str = "xla",
+           vvl: int | None = None) -> jax.Array:
     """Periodic streaming of ``(19, X, Y, Z)``: f_q(x) ← f_q(x - c_q)."""
-    shifted = [
-        jnp.roll(dist[q], shift=tuple(int(c) for c in CV[q]), axis=(0, 1, 2))
-        for q in range(NVEL)
-    ]
-    return jnp.stack(shifted)
+    gs = dist.shape[1:]
+    lat = Lattice(gs)
+    out = launch_stencil(
+        stream_site_kernel, lat, [dist.reshape(NVEL, lat.nsites)],
+        stencil=STENCIL_D3Q19_PULL, out_ncomp=NVEL, backend=backend, vvl=vvl)
+    return out.reshape(NVEL, *gs)
 
 
 # ---------------------------------------------------------------------------
 # mesh-sharded (slab decomposition along X; call inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _exchange_x_halo(arr: jax.Array, axis_name: str) -> tuple[jax.Array, jax.Array]:
-    """Return (left_halo, right_halo) planes for a local block ``(..., Xl, Y, Z)``.
+def _exchange_x_halo(arr: jax.Array, axis_name: str, width: int = 1
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Return (left, right) ghost blocks of ``width`` X-planes for a local
+    slab ``(..., Xl, Y, Z)``.
 
-    left_halo  = left neighbour's last plane  (global periodic wrap),
-    right_halo = right neighbour's first plane.
-    Only the single boundary plane is communicated — the masked-copy idea:
-    the transfer set is the boundary subset, never the bulk.
+    left  = left neighbour's last ``width`` planes (global periodic wrap),
+    right = right neighbour's first ``width`` planes.
+    Only the boundary planes are communicated — the masked-copy idea: the
+    transfer set is the boundary subset, never the bulk.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     fwd = [(i, (i + 1) % n) for i in range(n)]   # data flows rank i → i+1
     bwd = [(i, (i - 1) % n) for i in range(n)]
-    last = arr[..., -1:, :, :]
-    first = arr[..., :1, :, :]
-    left_halo = jax.lax.ppermute(last, axis_name, fwd)    # from left neighbour
-    right_halo = jax.lax.ppermute(first, axis_name, bwd)  # from right neighbour
-    return left_halo, right_halo
+    last = arr[..., -width:, :, :]
+    first = arr[..., :width, :, :]
+    left = jax.lax.ppermute(last, axis_name, fwd)    # from left neighbour
+    right = jax.lax.ppermute(first, axis_name, bwd)  # from right neighbour
+    return left, right
 
 
-def gradients_sharded(phi: jax.Array, axis_name: str) -> tuple[jax.Array, jax.Array]:
+def _extend_x(arr: jax.Array, axis_name: str, width: int) -> jax.Array:
+    """Local slab ``(ncomp, Xl, Y, Z)`` → ``(ncomp, Xl+2·width, Y, Z)`` with
+    exchanged ghost planes."""
+    lh, rh = _exchange_x_halo(arr, axis_name, width)
+    return jnp.concatenate([lh, arr, rh], axis=1)
+
+
+def gradients_sharded(phi: jax.Array, axis_name: str, *,
+                      backend: str = "xla", vvl: int | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
     """Sharded version of :func:`gradients`; ``phi`` is the local X-slab."""
-    lh, rh = _exchange_x_halo(phi[None], axis_name)
-    ext = jnp.concatenate([lh[0], phi, rh[0]], axis=0)     # (Xl+2, Y, Z)
-    xl = phi.shape[0]
-    grads = [0.5 * (ext[2:xl + 2] - ext[0:xl])]            # d/dx via halo
-    lap = ext[2:xl + 2] + ext[0:xl] - 6.0 * phi
-    for ax in (1, 2):                                      # y, z stay periodic-local
-        plus = jnp.roll(phi, -1, axis=ax)
-        minus = jnp.roll(phi, 1, axis=ax)
-        grads.append(0.5 * (plus - minus))
-        lap = lap + plus + minus
-    return jnp.stack(grads), lap
+    ext = _extend_x(phi[None], axis_name, 1)           # (1, Xl+2, Y, Z)
+    lat = Lattice(phi.shape)
+    grad, lap = launch_stencil(
+        grad6_site_kernel, lat, [ext.reshape(1, -1)],
+        stencil=STENCIL_GRAD_6PT, out_ncomp=(3, 1), backend=backend,
+        vvl=vvl, halo=(1, 0, 0))
+    return grad.reshape(3, *phi.shape), lap.reshape(phi.shape)
 
 
-def stream_sharded(dist: jax.Array, axis_name: str) -> jax.Array:
+def stream_sharded(dist: jax.Array, axis_name: str, *,
+                   backend: str = "xla", vvl: int | None = None) -> jax.Array:
     """Sharded streaming of the local slab ``(19, Xl, Y, Z)``."""
-    lh, rh = _exchange_x_halo(dist, axis_name)
-    ext = jnp.concatenate([lh, dist, rh], axis=1)          # (19, Xl+2, Y, Z)
-    xl = dist.shape[1]
-    out = []
-    for q in range(NVEL):
-        cx, cy, cz = (int(c) for c in CV[q])
-        # f_new[x] = f_old[x - cx]  → ext slice starting at 1 - cx
-        sl = jax.lax.slice_in_dim(ext[q], 1 - cx, 1 - cx + xl, axis=0)
-        out.append(jnp.roll(sl, shift=(cy, cz), axis=(1, 2)))
-    return jnp.stack(out)
+    ext = _extend_x(dist, axis_name, 1)                # (19, Xl+2, Y, Z)
+    gs = dist.shape[1:]
+    lat = Lattice(gs)
+    out = launch_stencil(
+        stream_site_kernel, lat, [ext.reshape(NVEL, -1)],
+        stencil=STENCIL_D3Q19_PULL, out_ncomp=NVEL, backend=backend,
+        vvl=vvl, halo=(1, 0, 0))
+    return out.reshape(NVEL, *gs)
 
 
 def halo_plane_mask(shape: tuple[int, int, int]) -> np.ndarray:

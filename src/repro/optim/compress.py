@@ -26,6 +26,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 
 def compress_init(grads):
     """Zero error-feedback buffers, twin to the grad tree (fp32)."""
@@ -48,7 +50,7 @@ def compressed_psum_mean(grads, error, axis: str, *, block: int = 1024):
 
     Returns ``(mean fp32 grads, new error buffers)``.
     """
-    npods = jax.lax.axis_size(axis)
+    npods = compat.axis_size(axis)
 
     def one(g, e):
         x = g.astype(jnp.float32) + e

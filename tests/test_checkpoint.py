@@ -103,8 +103,8 @@ class TestElasticRestore:
         the layout decision is restore-time, not save-time."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         save_checkpoint(str(tmp_path), 1, tree)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((1, 1), ("data", "model"))
         sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
         got, _, _ = restore_checkpoint(str(tmp_path), tree, shardings=sh)
         assert got["params"]["w"].sharding.mesh.shape["data"] == 1

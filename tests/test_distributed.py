@@ -17,6 +17,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # multi-device subprocess scenarios
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -134,9 +136,10 @@ def body(g_l, e_l):
     red, new_e = compressed_psum_mean({"w": g_l["w"]}, {"w": e_l["w"]}, "pod")
     return red["w"], new_e["w"]
 
-fn = jax.shard_map(body, mesh=mesh,
-                   in_specs=({"w": P("pod")}, {"w": P()}),
-                   out_specs=(P(), P()), axis_names={"pod"}, check_vma=False)
+from repro.core import compat
+fn = compat.shard_map(body, mesh=mesh,
+                      in_specs=({"w": P("pod")}, {"w": P()}),
+                      out_specs=(P(), P()), check_vma=False)
 red, err = jax.jit(fn)(g, e)
 exact = g["w"].mean(0)
 rel = float(jnp.abs(red - exact).max() / jnp.abs(exact).max())
@@ -161,6 +164,24 @@ b = s_sh.step(st1, 5)
 np.testing.assert_allclose(np.asarray(a.f), np.asarray(b.f), rtol=1e-4, atol=1e-6)
 np.testing.assert_allclose(np.asarray(a.g), np.asarray(b.g), rtol=1e-4, atol=1e-6)
 print("LB_HALO_OK")
+""")
+
+    def test_lb_fused_sharded_sim_matches_local(self):
+        """Fused stream+collide under slab decomposition: the 2-plane
+        ppermute halo exchange feeds the radius-2 composed stencil."""
+        run_sub(PRELUDE + """
+from repro.lb.sim import BinaryFluidSim
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((8,), ("data",))
+s_loc = BinaryFluidSim((16, 8, 8))
+s_sh = BinaryFluidSim((16, 8, 8), mesh=mesh, shard_axis="data", fused=True)
+st0 = s_loc.init_spinodal(seed=1)
+st1 = s_sh.init_spinodal(seed=1)
+a = s_loc.step(st0, 5)
+b = s_sh.step(st1, 5)
+np.testing.assert_allclose(np.asarray(a.f), np.asarray(b.f), rtol=2e-4, atol=2e-6)
+np.testing.assert_allclose(np.asarray(a.g), np.asarray(b.g), rtol=2e-4, atol=2e-6)
+print("LB_FUSED_HALO_OK")
 """)
 
     def test_trainer_on_mesh_with_compression(self):

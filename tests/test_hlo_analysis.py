@@ -69,6 +69,7 @@ class TestTraffic:
 
 
 class TestMultiDevice:
+    @pytest.mark.slow
     def test_collectives_counted_and_classified(self):
         import subprocess, sys, os, textwrap
         code = textwrap.dedent("""
@@ -77,8 +78,8 @@ class TestMultiDevice:
             import jax, jax.numpy as jnp
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.launch.hlo_analysis import analyze
-            mesh = jax.make_mesh((2, 4), ("pod", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((2, 4), ("pod", "model"))
             def f(x, w):
                 return x @ w
             xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)

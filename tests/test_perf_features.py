@@ -105,9 +105,8 @@ class TestSeqParallelGating:
         assert not attention._use_seq_parallel(ExecContext(), a, 64)
 
     def test_disabled_when_heads_divide(self):
-        import jax as j
-        mesh = j.make_mesh((1, 1), ("data", "model"),
-                           axis_types=(j.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((1, 1), ("data", "model"))
         ctx = ExecContext(mesh=mesh, batch_axes=("data",),
                           model_axis="model", attn_impl="chunked")
         a = AttnConfig(n_heads=4, n_kv_heads=4, head_dim=16)

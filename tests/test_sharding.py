@@ -107,8 +107,8 @@ class TestDevicePlacement:
         import jax
         from repro.models import params as params_lib
         from repro.sharding import sharding_for_tree
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((1, 1), ("data", "model"))
         cfg = C.get_smoke("granite_moe_1b_a400m")
         params, axes = params_lib.init_params(cfg, jax.random.PRNGKey(0))
         sh = sharding_for_tree(axes, make_plan(cfg), mesh)
