@@ -89,13 +89,16 @@ def bench_fig1(quick=False):
         lambda *a: baseline.collide_aos(*a, p)), f_aos, g_aos, phi[0],
         gp_aos, d2[0])
 
+    from repro import tdp
+
     best = {}
     for backend in ("xla", "pallas_interpret"):
         vvls = (64, 128) if quick else (32, 64, 128, 256, 512)
         times = {}
         for vvl in vvls:
-            fn = jax.jit(lambda *a, v=vvl, b=backend: ops.lb_collision(
-                *a, backend=b, vvl=v, **p.as_kwargs()))
+            tgt = tdp.Target(backend, vvl=vvl)
+            fn = jax.jit(lambda *a, t=tgt: ops.lb_collision(
+                *a, target=t, **p.as_kwargs()))
             times[vvl] = _time(fn, f, g, phi, gp, d2)
         best[backend] = min(times.items(), key=lambda kv: kv[1])
         RESULTS[f"fig1_vvl_{backend}"] = times
@@ -186,9 +189,12 @@ def bench_fused_step(quick=False):
 
     # Time the jitted hot-loop body of each regime: the whole unfused
     # timestep (moments → stencil → collide → stream, 4 launches) vs the
-    # single fused stencil launch that replaces it.
+    # fused stencil launch(es) that replace it — one_launch (radius-2
+    # composed gather) and two_launch (streamed-φ intermediate, the
+    # gather-footprint fix).
     sim_u = BinaryFluidSim(grid, params=p)
-    sim_f = BinaryFluidSim(grid, params=p, fused=True)
+    sim_f = BinaryFluidSim(grid, params=p, fused="one_launch")
+    sim_f2 = BinaryFluidSim(grid, params=p, fused="two_launch")
     st = sim_u.init_spinodal(seed=0, noise=0.05)
     wf, wg = sim_f._collide_fn(st.f, st.g)       # pre-stream fused state
 
@@ -196,7 +202,9 @@ def bench_fused_step(quick=False):
     base_t = None
     for label, key, fn, args in (
         ("unfused pipeline", "unfused", sim_u._step_fn, (st.f, st.g)),
-        ("fused stream+collide", "fused", sim_f._fused_fn, (wf, wg)),
+        ("fused (one launch)", "fused", sim_f._fused_fn, (wf, wg)),
+        ("fused (two launches, φ intermediate)", "fused_two",
+         sim_f2._fused_fn, (wf, wg)),
     ):
         t = _time(fn, *args)
         per_site_ns = t / n * 1e9
@@ -226,17 +234,18 @@ def bench_lm_step(quick=False):
     w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
     u = jnp.asarray(rng.normal(size=(tokens, d)), jnp.float32)
 
+    from repro import tdp
+
     rows = []
     for name, fn in (
-        ("rmsnorm", lambda b, v: jax.jit(
-            lambda xx: ops.rmsnorm(xx, w, backend=b, vvl=v))),
-        ("swiglu", lambda b, v: jax.jit(
-            lambda xx: ops.gated_act(xx, u, kind="swiglu", backend=b,
-                                     vvl=v))),
+        ("rmsnorm", lambda t: jax.jit(
+            lambda xx: ops.rmsnorm(xx, w, target=t))),
+        ("swiglu", lambda t: jax.jit(
+            lambda xx: ops.gated_act(xx, u, kind="swiglu", target=t))),
     ):
         for backend in ("xla", "pallas_interpret"):
             vvl = 256
-            t = _time(fn(backend, vvl), x)
+            t = _time(fn(tdp.Target(backend, vvl=vvl)), x)
             rows.append((name, backend, vvl, f"{t*1e3:.3f}",
                          f"{tokens/t/1e6:.1f}"))
     RESULTS["lm_pointwise"] = True

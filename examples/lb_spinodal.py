@@ -11,6 +11,7 @@ import argparse
 import sys, os, time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import tdp
 from repro.lb.params import LBParams
 from repro.lb.sim import BinaryFluidSim
 
@@ -21,16 +22,19 @@ def main():
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--chunk", type=int, default=50)
     ap.add_argument("--backend", default="xla",
-                    choices=("xla", "pallas_interpret"))
+                    choices=("xla", "pallas", "pallas_interpret"))
     ap.add_argument("--vvl", type=int, default=128)
-    ap.add_argument("--fused", action="store_true",
-                    help="single fused stream+gradient+collide stencil "
-                         "launch per step (same trajectory)")
+    ap.add_argument("--fused", nargs="?", const="one_launch", default=False,
+                    choices=("one_launch", "two_launch"),
+                    help="fused stream+gradient+collide stencil launch(es) "
+                         "per step (same trajectory): one_launch = radius-2 "
+                         "composed stencil; two_launch = streamed-phi "
+                         "intermediate (lower gather footprint)")
     args = ap.parse_args()
 
     params = LBParams(A=0.125, B=0.125, kappa=0.02)
     sim = BinaryFluidSim((args.grid,) * 3, params=params,
-                         backend=args.backend, vvl=args.vvl,
+                         target=tdp.Target(args.backend, vvl=args.vvl),
                          fused=args.fused)
     state = sim.init_spinodal(seed=0, noise=0.05)
 

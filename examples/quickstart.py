@@ -6,8 +6,10 @@ Mirrors the paper's host-side call sequence:
     → scale TARGET_LAUNCH(N) (t_field) → syncTarget
     → copyFromTarget → targetFree
 
-but through the JAX realisation, and runs it on both executors (the
-paper's C-vs-CUDA build switch is our ``backend=`` argument).
+but through the declarative JAX realisation: the kernel's field roles are
+declared once with ``@tdp.kernel`` and the paper's C-vs-CUDA build switch
+is an exchangeable ``tdp.Target`` descriptor dispatched through the
+executor registry — swap the Target, keep the kernel.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,14 +18,15 @@ import numpy as np
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro import core as tdp
+from repro import tdp
 from repro.core import (Field, Lattice, copy_constant_to_target,
                         copy_from_target, copy_to_target, sync_target,
                         target_free)
 
 
-# 1. a site kernel, written once (TARGET_ENTRY + TARGET_TLP/ILP body)
-@tdp.site_kernel
+# 1. a site kernel, written once, with its launch roles declared up front
+#    (TARGET_ENTRY + field declarations; the body is TARGET_TLP/ILP-shaped)
+@tdp.kernel(fields=[tdp.field(3)], out=3, consts=["a"])
 def scale(field, a=1.0):
     """The paper's example: scale a 3-vector field by a constant."""
     return a * field
@@ -41,24 +44,36 @@ def main():
     t_field = copy_to_target(host, dtype=np.float32)
     a = copy_constant_to_target(2.0)          # TARGET_CONST
 
-    # 4. launch on both executors; tune VVL exactly like the paper tunes
-    #    VVL=8 (AVX) / VVL=2 (K40)
+    # 4. launch under several Targets; tune VVL exactly like the paper
+    #    tunes VVL=8 (AVX) / VVL=2 (K40)
     for backend in ("xla", "pallas_interpret"):
         for vvl in (64, 128, 256):
-            out = tdp.launch(scale, lattice, [t_field],
-                             consts={"a": a}, vvl=vvl, backend=backend)
+            target = tdp.Target(backend, vvl=vvl)
+            out = tdp.launch(scale, target, t_field,
+                             lattice=lattice, a=a)
             sync_target(out)
             got = copy_from_target(out)
             assert np.allclose(got, 2.0 * np.asarray(t_field)), (backend, vvl)
-        print(f"[quickstart] backend={backend:17s} OK (VVL swept 64/128/256)")
+        print(f"[quickstart] target={backend:17s} OK (VVL swept 64/128/256)")
 
     # 5. reductions — the paper's §V planned extension, implemented
     total = tdp.reduce(scale, lattice, [t_field], consts={"a": 1.0},
                        op="sum")
     print(f"[quickstart] reduce(sum) per component: {np.asarray(total)}")
 
+    # 6. the registry is open: one register_executor call adds a new
+    #    architecture, no core changes (here: a whole-lattice toy executor)
+    def whole_lattice_executor(plan, gathered):
+        vals = plan.kernel(*gathered, **plan.consts)
+        return vals if isinstance(vals, tuple) else (vals,)
+
+    tdp.register_executor("toy", whole_lattice_executor)
+    out = tdp.launch(scale, tdp.Target("toy"), t_field, a=a)
+    assert np.allclose(copy_from_target(out), 2.0 * np.asarray(t_field))
+    print(f"[quickstart] registered executors: {tdp.list_executors()}")
+
     target_free(t_field)
-    print("[quickstart] single source ran on both executors — done")
+    print("[quickstart] single source ran on every executor — done")
 
 
 if __name__ == "__main__":

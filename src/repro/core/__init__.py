@@ -3,13 +3,21 @@
 Public surface (paper → here):
 
 * lattice/fields: :class:`Lattice`, :class:`Field` (SoA mandated, AoS kept
-  as the measurable baseline layout).
+  as the measurable baseline layout), :class:`Stencil` neighbourhoods.
 * memory model: :func:`target_malloc`, :func:`copy_to_target`,
   :func:`copy_from_target`, masked variants, :class:`TargetConst`,
   :func:`sync_target`.
-* execution model: :func:`site_kernel` (``TARGET_ENTRY``), :func:`launch`
-  (``TARGET_LAUNCH`` + ``TARGET_TLP``/``TARGET_ILP`` with tunable VVL),
+* execution model (declarative): :class:`KernelSpec` + :func:`kernel`
+  (``TARGET_ENTRY`` with declared field roles), :class:`Target` (the
+  build switch as an exchangeable descriptor), :func:`tdp_launch`
+  (``TARGET_LAUNCH`` + ``TARGET_TLP``/``TARGET_ILP`` with tunable VVL)
+  dispatching through :func:`register_executor`'s table, and
   :func:`reduce` (the paper's §V planned extension).
+* legacy surface: :func:`site_kernel`, :func:`launch`,
+  :func:`launch_stencil` (deprecation shims over ``tdp_launch``).
+
+The ergonomic import is ``from repro import tdp`` — see
+:mod:`repro.tdp` and docs/targetdp_api.md.
 """
 from .lattice import (
     D3Q19_VELOCITIES,
@@ -33,12 +41,21 @@ from .memory import (
     target_malloc,
     target_malloc_like,
 )
+from .target import Target, as_target, default_vvl, set_default_vvl
+from .spec import FieldSpec, KernelSpec, kernel
+from .registry import (
+    get_executor,
+    list_executors,
+    register_executor,
+    registry_version,
+    unregister_executor,
+)
+from .api import LaunchPlan, gather_neighbors, pad_sites
+from .api import launch as tdp_launch
 from .execute import (
-    default_vvl,
     launch,
     launch_stencil,
     reduce,
-    set_default_vvl,
     site_kernel,
 )
 
@@ -51,4 +68,9 @@ __all__ = [
     "copy_to_target_masked", "copy_from_target_masked",
     "sync_target", "target_free", "target_malloc", "target_malloc_like",
     "site_kernel", "launch", "reduce", "default_vvl", "set_default_vvl",
+    # declarative API
+    "Target", "as_target", "FieldSpec", "KernelSpec", "kernel",
+    "tdp_launch", "LaunchPlan", "gather_neighbors", "pad_sites",
+    "register_executor", "unregister_executor", "get_executor",
+    "list_executors", "registry_version",
 ]

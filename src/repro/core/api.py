@@ -1,0 +1,363 @@
+"""The unified targetDP launch: ``tdp.launch(spec, target, *arrays)``.
+
+One entry point replaces the old ``launch``/``launch_stencil`` fork: the
+:class:`~repro.core.spec.KernelSpec` declares *what* (kernel body, field
+roles, stencils, outputs), the :class:`~repro.core.target.Target`
+declares *where/how* (executor, VVL, tuning), and this module owns the
+single shared path every launch takes:
+
+1. **validation** — field roles vs array ranks/extents, stencil geometry
+   vs lattice + halo, const names;
+2. **const unwrapping** — ``TargetConst`` → raw values, content-hashed
+   into the cache key;
+3. **plan caching** — compiled closures keyed on
+   ``(spec, target, resolved VVL, lattice, halo, out, consts, registry
+   version)``, so a mutated default VVL or a re-registered executor can
+   never hit a stale closure;
+4. **neighbour gathering** — the periodic-roll / ghost-window prologue,
+   shared by every executor;
+5. **dispatch** — through the executor registry
+   (:mod:`repro.core.registry`).
+
+Built-in executors registered here: ``"xla"`` (vmap over VVL chunks — the
+paper's C build), ``"pallas"`` and ``"pallas_interpret"`` (explicit VMEM
+tiling — the CUDA build; imported lazily so the core stays importable
+without Pallas).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .lattice import Lattice, Stencil
+from .memory import TargetConst
+from .registry import get_executor, register_executor, registry_version
+from .spec import FieldSpec, KernelSpec
+from .target import Target, as_target
+
+
+# ---------------------------------------------------------------------------
+# shared helpers (padding, gathering, const handling)
+# ---------------------------------------------------------------------------
+
+def pad_sites(x: jax.Array, vvl: int) -> jax.Array:
+    """Zero-pad the trailing site axis up to a VVL multiple (paper §III-C:
+    the TLP loop strides in whole chunks).  Shared by every executor —
+    padded lanes are sliced away after the launch, so kernels may produce
+    garbage (even NaN) there."""
+    n = x.shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    if n_pad == n:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
+    return jnp.pad(x, widths)
+
+
+def _prod_shape(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def gather_neighbors(x: jax.Array, shape: tuple[int, ...],
+                     halo: tuple[int, ...], stencil: Stencil) -> jax.Array:
+    """``(ncomp, nsites_ext)`` → ``(noffsets, ncomp, nsites)`` neighbour
+    stack over the interior sites.
+
+    Dimensions with ``halo[d] == 0`` wrap periodically (``roll``); those
+    with ``halo[d] > 0`` read the caller-supplied ghost planes (offset
+    window into the extended extent).
+    """
+    ext = tuple(s + 2 * h for s, h in zip(shape, halo))
+    grid = x.reshape(x.shape[0], *ext)
+    n = _prod_shape(shape)
+    planes = []
+    for off in stencil.offsets:
+        g = grid
+        for d, o in enumerate(off):
+            ax = d + 1
+            if halo[d]:
+                g = jax.lax.slice_in_dim(g, halo[d] + o,
+                                         halo[d] + o + shape[d], axis=ax)
+            elif o:
+                g = jnp.roll(g, -o, axis=ax)
+        planes.append(g.reshape(x.shape[0], n))
+    return jnp.stack(planes)
+
+
+def _unwrap_consts(consts: Mapping[str, object]) -> dict:
+    out = {}
+    for k, v in consts.items():
+        out[k] = v.value if isinstance(v, TargetConst) else v
+    return out
+
+
+def _consts_cache_key(consts: Mapping[str, object]):
+    items = []
+    for k in sorted(consts):
+        v = consts[k]
+        if isinstance(v, TargetConst):
+            items.append((k, v))
+        elif isinstance(v, (int, float, bool, str)):
+            items.append((k, v))
+        else:
+            # Fall back to content hashing through TargetConst semantics.
+            items.append((k, TargetConst(v)))
+    return tuple(items)
+
+
+def _normalize_halo(halo, ndim) -> tuple[int, ...]:
+    if halo is None:
+        return (0,) * ndim
+    if isinstance(halo, int):
+        return (int(halo),) * ndim
+    h = tuple(int(x) for x in halo)
+    if len(h) != ndim:
+        raise ValueError(f"halo {h} does not match lattice ndim {ndim}")
+    return h
+
+
+# ---------------------------------------------------------------------------
+# launch plan — what an executor receives
+# ---------------------------------------------------------------------------
+
+class LaunchPlan:
+    """Everything an executor needs to map one kernel over site chunks.
+
+    Built (and cached) by :func:`launch`; executors are called as
+    ``executor(plan, gathered)`` where ``gathered`` holds one array per
+    field — ``(ncomp, n)`` pointwise or ``(noffsets, ncomp, n)`` stencil.
+    """
+
+    __slots__ = ("kernel", "name", "vvl", "out_ncomp", "consts",
+                 "with_site_index", "interpret", "target")
+
+    def __init__(self, *, kernel, name, vvl, out_ncomp, consts,
+                 with_site_index, interpret, target):
+        self.kernel = kernel
+        self.name = name
+        self.vvl = vvl
+        self.out_ncomp = out_ncomp
+        self.consts = consts
+        self.with_site_index = with_site_index
+        self.interpret = interpret
+        self.target = target
+
+    def __repr__(self):
+        return (f"LaunchPlan({self.name!r}, executor={self.target.executor!r}"
+                f", vvl={self.vvl}, out={self.out_ncomp})")
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def _validate_arrays(spec: KernelSpec, arrays, lattice, halo):
+    if len(arrays) != len(spec.fields):
+        raise ValueError(
+            f"kernel {spec.name!r} declares {len(spec.fields)} field(s) "
+            f"but got {len(arrays)} array(s)")
+    for i, (x, fs) in enumerate(zip(arrays, spec.fields)):
+        if getattr(x, "ndim", None) != 2:
+            raise ValueError(
+                f"{fs.label(i)} of kernel {spec.name!r} has role "
+                f"{fs.role!r} and must be an SoA array of shape "
+                f"(ncomp, nsites); got rank "
+                f"{getattr(x, 'ndim', '?')} array")
+        if fs.ncomp is not None and int(x.shape[0]) != fs.ncomp:
+            raise ValueError(
+                f"{fs.label(i)} of kernel {spec.name!r} declares "
+                f"ncomp={fs.ncomp} but the array has {x.shape[0]} "
+                f"component(s)")
+
+    if spec.has_stencil:
+        if lattice is None:
+            raise ValueError(
+                f"kernel {spec.name!r} has stencil input(s) but the launch "
+                f"is missing a lattice (neighbour geometry needs the shape)")
+        h = _normalize_halo(halo, lattice.ndim)
+        n_ext = _prod_shape(tuple(s + 2 * hh
+                                  for s, hh in zip(lattice.shape, h)))
+        for i, (x, fs) in enumerate(zip(arrays, spec.fields)):
+            s = fs.stencil
+            want = n_ext if s is not None else lattice.nsites
+            if int(x.shape[-1]) != want:
+                raise ValueError(
+                    f"{fs.label(i)} extent {x.shape[-1]} != expected {want} "
+                    f"({'extended' if s is not None else 'interior'}; "
+                    f"shape={lattice.shape}, halo={h})")
+            if s is None:
+                continue
+            if s.ndim != lattice.ndim:
+                raise ValueError(
+                    f"stencil {s.name!r} is {s.ndim}-D on a "
+                    f"{lattice.ndim}-D lattice")
+            for d, r in enumerate(s.radius_per_dim()):
+                if h[d] and h[d] < r:
+                    raise ValueError(
+                        f"halo {h[d]} in dim {d} < stencil {s.name!r} "
+                        f"radius {r}")
+            if fs.halo == "periodic" and any(h):
+                raise ValueError(
+                    f"{fs.label(i)} declares halo policy 'periodic' but "
+                    f"the launch supplies ghost planes (halo={h})")
+            if fs.halo == "ghost" and not all(
+                    h[d] >= r for d, r in enumerate(s.radius_per_dim())
+                    if r):
+                raise ValueError(
+                    f"{fs.label(i)} declares halo policy 'ghost' but the "
+                    f"launch halo {h} does not cover stencil "
+                    f"{s.name!r} radius {s.radius_per_dim()}")
+        return h
+
+    # pure pointwise launch
+    if halo is not None:
+        hseq = (halo,) if isinstance(halo, int) else tuple(halo)
+        if any(int(x) for x in hseq):
+            raise ValueError("halo is only meaningful for stencil launches")
+    nsite_set = {int(x.shape[-1]) for x in arrays}
+    if len(nsite_set) != 1:
+        raise ValueError(f"inputs disagree on site extent: "
+                         f"{sorted(nsite_set)}")
+    if lattice is not None:
+        n = nsite_set.pop()
+        if n not in (lattice.nsites, lattice.nsites_with_halo):
+            raise ValueError(
+                f"site extent {n} matches neither interior "
+                f"({lattice.nsites}) nor halo-padded "
+                f"({lattice.nsites_with_halo}) lattice")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the launch itself
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=4096)
+def _build_plan(spec: KernelSpec, target: Target, vvl: int,
+                out_ncomp: tuple[int, ...], lattice: Lattice | None,
+                halo: tuple[int, ...] | None, const_key, _registry_version):
+    consts = _unwrap_consts(dict(const_key))
+    executor = get_executor(target.executor)
+    plan = LaunchPlan(kernel=spec.fn, name=spec.name, vvl=vvl,
+                      out_ncomp=out_ncomp, consts=consts,
+                      with_site_index=spec.site_index,
+                      interpret=target.interpret, target=target)
+    stencils = spec.stencils
+    shape = lattice.shape if lattice is not None else None
+    n_out = len(out_ncomp)
+
+    def run(*arrays):
+        gathered = tuple(
+            x if s is None else gather_neighbors(x, shape, halo, s)
+            for x, s in zip(arrays, stencils))
+        outs = executor(plan, gathered)
+        outs = (outs,) if not isinstance(outs, (tuple, list)) else tuple(outs)
+        if len(outs) != n_out:
+            raise ValueError(
+                f"executor {target.executor!r} returned {len(outs)} "
+                f"output(s) for kernel {spec.name!r}; plan declares "
+                f"{n_out}")
+        return outs[0] if n_out == 1 else outs
+
+    return jax.jit(run)
+
+
+def launch(spec: KernelSpec, target: Target | str | None = None, /,
+           *arrays, lattice: Lattice | None = None,
+           halo: int | Sequence[int] | None = None,
+           consts: Mapping[str, object] | None = None, **kw_consts):
+    """Launch a declared kernel over the lattice (``TARGET_LAUNCH``).
+
+    Args:
+      spec: the :class:`KernelSpec` (build with ``@tdp.kernel`` or the
+        constructor).
+      target: a :class:`Target`, a backend-name string (coerced through
+        :func:`~repro.core.target.as_target`), or ``None`` for the xla
+        default.
+      *arrays: one SoA target array per declared field — ``(ncomp,
+        nsites)``; stencil fields span the halo-extended extent when
+        ``halo`` is non-zero.
+      lattice: grid descriptor.  Required when any field carries a
+        stencil; optional (validation only) for pointwise launches.
+      halo: per-dimension ghost width already present in stencil inputs
+        (``0`` → periodic wrap).
+      consts / **kw_consts: ``TARGET_CONST`` parameters (``TargetConst``
+        or scalars), closed over at jit time.  ``lattice``, ``halo`` and
+        ``consts`` are reserved keyword names — pass consts with those
+        names through the ``consts=`` mapping.
+
+    Returns one ``(ncomp_o, nsites)`` array per declared output (a bare
+    array for single-output kernels).
+    """
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(
+            f"tdp.launch expects a KernelSpec as first argument, got "
+            f"{type(spec).__name__}; build one with @tdp.kernel / "
+            f"tdp.KernelSpec (the legacy launch(kernel, lattice, inputs) "
+            f"signature lives in repro.core.launch)")
+    tgt = as_target(target)
+    get_executor(tgt.executor)  # fail fast on unknown executor names
+    arrays = tuple(arrays)
+    if not arrays:
+        raise ValueError("launch requires at least one input field")
+    all_consts = dict(consts or {})
+    all_consts.update(kw_consts)
+    if spec.consts is not None:
+        unknown = sorted(set(all_consts) - set(spec.consts))
+        if unknown:
+            raise ValueError(
+                f"kernel {spec.name!r} does not declare const(s) "
+                f"{unknown}; declared: {sorted(spec.consts)}")
+    h = _validate_arrays(spec, arrays, lattice, halo)
+    vvl = tgt.resolve_vvl()
+    out_ncomp = spec.out if spec.out is not None else (int(arrays[0].shape[0]),)
+    key = _consts_cache_key(all_consts)
+    fn = _build_plan(spec, tgt, vvl, out_ncomp, lattice, h, key,
+                     registry_version())
+    return fn(*arrays)
+
+
+# ---------------------------------------------------------------------------
+# built-in executors
+# ---------------------------------------------------------------------------
+
+def xla_executor(plan: LaunchPlan, gathered):
+    """The "C implementation": vmap the kernel body over VVL-sized chunks
+    (TLP = the chunk loop, fused and threaded by XLA; ILP = jnp ops
+    vectorised over the trailing VVL axis).  Handles pointwise chunks,
+    stencil neighbour stacks, and the site-index role uniformly."""
+    vvl = plan.vvl
+    n = gathered[0].shape[-1]
+    n_pad = -(-n // vvl) * vvl
+    nchunks = n_pad // vvl
+
+    chunks = [pad_sites(x, vvl).reshape(*x.shape[:-1], nchunks, vvl)
+              for x in gathered]
+    body = (functools.partial(plan.kernel, **plan.consts)
+            if plan.consts else plan.kernel)
+    in_axes = [x.ndim - 2 for x in chunks]
+    if plan.with_site_index:
+        chunks.append(jnp.arange(n_pad, dtype=jnp.int32).reshape(nchunks,
+                                                                 vvl))
+        in_axes.append(0)
+    n_out = len(plan.out_ncomp)
+    outs = jax.vmap(body, in_axes=tuple(in_axes),
+                    out_axes=1 if n_out == 1 else (1,) * n_out)(*chunks)
+    outs = (outs,) if n_out == 1 else tuple(outs)
+    return tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
+
+
+def _pallas_executor(plan: LaunchPlan, gathered):
+    # Lazy import: the core stays importable without Pallas.
+    from repro.kernels.tdp_pointwise import pallas_execute
+    return pallas_execute(plan, gathered)
+
+
+register_executor("xla", xla_executor)
+register_executor("pallas", _pallas_executor)
+register_executor("pallas_interpret", _pallas_executor)

@@ -1,85 +1,50 @@
-"""targetDP execution model: single-source site kernels, TLP × ILP, VVL.
+"""Legacy targetDP launch surface + reductions.
 
-Paper §III-C, restated for TPU/JAX:
+The execution model itself (single-source site kernels, TLP × ILP, VVL,
+executor dispatch) now lives in the declarative API:
 
-* A **site kernel** is written once, against *chunk* arrays of shape
-  ``(ncomp, VVL)`` — ``VVL`` (virtual vector length) is the tunable innermost
-  extent the paper strip-mines out of the site loop (``TARGET_ILP``).
-* **TLP**: the loop over chunks (``TARGET_TLP``).  On the jnp executor it is
-  a ``vmap`` over the chunk axis (XLA fuses and threads it); on the Pallas
-  executor it is the ``pallas_call`` grid; one level up, the site axis is
-  sharded over the device mesh by the caller (``shard_map``/``jit``) — the
-  analogue of the paper's MPI level.
-* **ILP**: inside a chunk, every op is vectorised over the trailing ``VVL``
-  axis — VPU lanes on TPU (the analogue of AVX lanes / per-thread ILP).
-* **Single source**: the same kernel body runs under both executors; the
-  ``backend=`` switch is the paper's C-vs-CUDA build switch.
+* :mod:`repro.core.spec`     — ``KernelSpec`` / ``FieldSpec`` (*what*)
+* :mod:`repro.core.target`   — ``Target`` descriptor (*where/how*)
+* :mod:`repro.core.registry` — pluggable executor table
+* :mod:`repro.core.api`      — the single ``tdp.launch(spec, target,
+  *arrays)`` entry point with the shared validation / padding / const /
+  gather / plan-cache path
 
-The Pallas executor lives in :mod:`repro.kernels.tdp_pointwise` (explicit
-``BlockSpec`` VMEM tiling, block extent = VVL); it is imported lazily so the
-core stays importable without Pallas.
+This module keeps the original ``launch(kernel, lattice, inputs)`` and
+``launch_stencil(...)`` signatures as thin deprecation shims over that
+entry point (so pre-redesign callers keep working), plus :func:`reduce`
+(the paper's §V planned extension) and :func:`site_kernel`.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable, Mapping, Sequence
 
-import jax
 import jax.numpy as jnp
 
+from . import api as _api
+from .api import (  # noqa: F401 — re-exported for executor modules
+    gather_neighbors,
+    pad_sites,
+)
 from .lattice import Lattice, Stencil
-from .memory import TargetConst
-
-# Default VVL: one full TPU vector register row of lanes.  The paper tunes
-# VVL per architecture (8 on AVX, 2 on K40); benchmarks/run.py sweeps it here.
-_DEFAULT_VVL = 128
-
-Backend = str  # "xla" | "pallas" | "pallas_interpret"
-_VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
-
-
-def default_vvl() -> int:
-    return _DEFAULT_VVL
-
-
-def set_default_vvl(vvl: int) -> None:
-    global _DEFAULT_VVL
-    if vvl <= 0:
-        raise ValueError("vvl must be positive")
-    _DEFAULT_VVL = int(vvl)
+from .spec import FieldSpec, KernelSpec
+from .target import as_target, default_vvl, set_default_vvl  # noqa: F401
 
 
 def site_kernel(fn: Callable) -> Callable:
     """Mark ``fn`` as a targetDP site kernel (``TARGET_ENTRY``).
 
-    ``fn(*chunks, **consts)`` receives one ``(ncomp_i, VVL)`` array per input
-    field (plus ``site_idx`` of shape ``(VVL,)`` if requested at launch) and
-    returns one ``(ncomp_o, VVL)`` array or a tuple of them.  The body must
-    be pure jnp — that is what makes it single-source across executors.
+    ``fn(*chunks, **consts)`` receives one ``(ncomp_i, VVL)`` array per
+    input field (plus ``site_idx`` of shape ``(VVL,)`` if requested at
+    launch) and returns one ``(ncomp_o, VVL)`` array or a tuple of them.
+    The body must be pure jnp — that is what makes it single-source across
+    executors.  For the declarative form (roles declared up front) use
+    :func:`repro.core.spec.kernel` instead.
     """
     fn.__tdp_site_kernel__ = True
     return fn
-
-
-def _unwrap_consts(consts: Mapping[str, object]) -> dict:
-    out = {}
-    for k, v in consts.items():
-        out[k] = v.value if isinstance(v, TargetConst) else v
-    return out
-
-
-def _consts_cache_key(consts: Mapping[str, object]):
-    items = []
-    for k in sorted(consts):
-        v = consts[k]
-        if isinstance(v, TargetConst):
-            items.append((k, v))
-        elif isinstance(v, (int, float, bool, str)):
-            items.append((k, v))
-        else:
-            # Fall back to content hashing through TargetConst semantics.
-            items.append((k, TargetConst(v)))
-    return tuple(items)
 
 
 def _normalize_out_ncomp(out_ncomp, inputs) -> tuple[int, ...]:
@@ -90,122 +55,34 @@ def _normalize_out_ncomp(out_ncomp, inputs) -> tuple[int, ...]:
     return tuple(int(c) for c in out_ncomp)
 
 
-# ---------------------------------------------------------------------------
-# jnp executor ("C implementation")
-# ---------------------------------------------------------------------------
-
-def pad_sites(x: jax.Array, vvl: int) -> jax.Array:
-    """Zero-pad the trailing site axis up to a VVL multiple (paper §III-C:
-    the TLP loop strides in whole chunks).  Shared by every executor —
-    padded lanes are sliced away after the launch, so kernels may produce
-    garbage (even NaN) there."""
-    n = x.shape[-1]
-    n_pad = -(-n // vvl) * vvl
-    if n_pad == n:
-        return x
-    widths = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
-    return jnp.pad(x, widths)
-
-
-def _xla_launch(kernel, vvl: int, with_site_index: bool, n_out: int,
-                consts: dict, inputs: Sequence[jax.Array]):
-    n = inputs[0].shape[-1]
-    n_pad = -(-n // vvl) * vvl
-    nchunks = n_pad // vvl
-
-    chunked = [pad_sites(x, vvl).reshape(x.shape[0], nchunks, vvl)
-               for x in inputs]
-
-    body = functools.partial(kernel, **consts) if consts else kernel
-    if with_site_index:
-        site_idx = jnp.arange(n_pad, dtype=jnp.int32).reshape(nchunks, vvl)
-        outs = jax.vmap(body, in_axes=(1,) * len(chunked) + (0,),
-                        out_axes=1 if n_out == 1 else (1,) * n_out)(*chunked, site_idx)
-    else:
-        outs = jax.vmap(body, in_axes=1,
-                        out_axes=1 if n_out == 1 else (1,) * n_out)(*chunked)
-    outs = (outs,) if n_out == 1 else tuple(outs)
-    flat = tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
-    return flat[0] if n_out == 1 else flat
+def _as_fn(kernel):
+    return kernel.fn if isinstance(kernel, KernelSpec) else kernel
 
 
 # ---------------------------------------------------------------------------
-# launch ("TARGET_LAUNCH") — dispatches on backend, jit-cached
+# deprecation shims — delegate to tdp.launch (repro.core.api.launch)
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=4096)
-def _build_launch(kernel, vvl: int, backend: Backend, with_site_index: bool,
-                  out_ncomp: tuple[int, ...], const_key) -> Callable:
-    consts = _unwrap_consts(dict(const_key))
-    n_out = len(out_ncomp)
-
-    if backend == "xla":
-        fn = functools.partial(_xla_launch, kernel, vvl, with_site_index, n_out, consts)
-    else:
-        from repro.kernels import tdp_pointwise  # lazy: Pallas import
-        fn = functools.partial(
-            tdp_pointwise.pallas_launch, kernel, vvl, with_site_index,
-            out_ncomp, consts, backend == "pallas_interpret")
-    return jax.jit(lambda *xs: fn(xs))
-
-
-def launch(kernel: Callable, lattice: Lattice | None, inputs: Sequence[jax.Array], *,
+def launch(kernel: Callable, lattice: Lattice | None,
+           inputs: Sequence, *,
            out_ncomp: int | Sequence[int] | None = None,
            consts: Mapping[str, object] | None = None,
            vvl: int | None = None,
-           backend: Backend = "xla",
+           backend: str = "xla",
            with_site_index: bool = False):
-    """Launch a site kernel over the lattice (``kernel TARGET_LAUNCH(N) (...)``).
-
-    Args:
-      kernel: a :func:`site_kernel` function.
-      lattice: optional lattice descriptor (used for validation only; the
-        site extent is taken from the input arrays, which may include halo).
-      inputs: SoA target arrays, each ``(ncomp_i, nsites)``.  targetDP
-        *requires* SoA (paper §III-B); pass ``Field.to_layout("soa")`` data.
-      out_ncomp: component count(s) of the output(s); defaults to input 0's.
-      consts: ``TARGET_CONST`` parameters (``TargetConst`` or scalars) —
-        closed over at jit time.
-      vvl: virtual vector length (ILP extent).  Default 128 (TPU lane row).
-      backend: ``"xla"`` (jnp executor), ``"pallas"`` (TPU VMEM tiling) or
-        ``"pallas_interpret"`` (Pallas semantics on CPU, for validation).
-      with_site_index: pass global site indices ``(vvl,)`` as the last
-        positional argument (e.g. position-dependent kernels like RoPE).
-    """
-    if backend not in _VALID_BACKENDS:
-        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {backend!r}")
+    """Deprecated: use ``tdp.launch(KernelSpec, Target, *arrays)``."""
+    warnings.warn(
+        "launch(kernel, lattice, inputs, backend=...) is deprecated; "
+        "declare a KernelSpec and call tdp.launch(spec, Target(...), "
+        "*arrays) — see docs/targetdp_api.md",
+        DeprecationWarning, stacklevel=2)
     inputs = tuple(inputs)
     if not inputs:
         raise ValueError("launch requires at least one input field")
-    nsite_set = {int(x.shape[-1]) for x in inputs}
-    if len(nsite_set) != 1:
-        raise ValueError(f"inputs disagree on site extent: {sorted(nsite_set)}")
-    if any(x.ndim != 2 for x in inputs):
-        raise ValueError("inputs must be SoA arrays of shape (ncomp, nsites)")
-    if lattice is not None:
-        n = nsite_set.pop()
-        if n not in (lattice.nsites, lattice.nsites_with_halo):
-            raise ValueError(
-                f"site extent {n} matches neither interior ({lattice.nsites}) "
-                f"nor halo-padded ({lattice.nsites_with_halo}) lattice")
-    vvl = vvl or _DEFAULT_VVL
-    out_spec = _normalize_out_ncomp(out_ncomp, inputs)
-    key = _consts_cache_key(consts or {})
-    return _build_launch(kernel, vvl, backend, with_site_index, out_spec, key)(*inputs)
-
-
-# ---------------------------------------------------------------------------
-# stencil launch — halo-aware site kernels (paper §III-B meets §III-C)
-# ---------------------------------------------------------------------------
-#
-# A *stencil* site kernel receives, for each input field that carries a
-# Stencil descriptor, a ``(noffsets, ncomp, VVL)`` chunk: slot i holds the
-# field at ``site + stencil.offsets[i]`` for every site lane of the chunk.
-# Inputs without a stencil stay pointwise ``(ncomp, VVL)``.  The gather is
-# periodic (roll) along dimensions with no halo and window-sliced along
-# dimensions where the caller supplies ghost planes (the mesh-sharded path:
-# ``ppermute`` halo exchange fills the ghost planes, this launch consumes
-# them) — the JAX restatement of targetDP's masked-copy halo machinery.
+    spec = KernelSpec(_as_fn(kernel), fields=(FieldSpec(),) * len(inputs),
+                      out=out_ncomp, site_index=with_site_index)
+    return _api.launch(spec, as_target(backend, vvl=vvl), *inputs,
+                       lattice=lattice, consts=consts)
 
 
 def _normalize_stencils(stencil, n_inputs) -> tuple:
@@ -221,158 +98,31 @@ def _normalize_stencils(stencil, n_inputs) -> tuple:
     return stencils
 
 
-def _normalize_halo(halo, ndim) -> tuple[int, ...]:
-    if halo is None:
-        return (0,) * ndim
-    if isinstance(halo, int):
-        return (int(halo),) * ndim
-    h = tuple(int(x) for x in halo)
-    if len(h) != ndim:
-        raise ValueError(f"halo {h} does not match lattice ndim {ndim}")
-    return h
-
-
-def gather_neighbors(x: jax.Array, shape: tuple[int, ...],
-                     halo: tuple[int, ...], stencil: Stencil) -> jax.Array:
-    """``(ncomp, nsites_ext)`` → ``(noffsets, ncomp, nsites)`` neighbour
-    stack over the interior sites.
-
-    Dimensions with ``halo[d] == 0`` wrap periodically (``roll``); those
-    with ``halo[d] > 0`` read the caller-supplied ghost planes (offset
-    window into the extended extent).
-    """
-    ext = tuple(s + 2 * h for s, h in zip(shape, halo))
-    grid = x.reshape(x.shape[0], *ext)
-    n = _prod_shape(shape)
-    planes = []
-    for off in stencil.offsets:
-        g = grid
-        for d, o in enumerate(off):
-            ax = d + 1
-            if halo[d]:
-                g = jax.lax.slice_in_dim(g, halo[d] + o,
-                                         halo[d] + o + shape[d], axis=ax)
-            elif o:
-                g = jnp.roll(g, -o, axis=ax)
-        planes.append(g.reshape(x.shape[0], n))
-    return jnp.stack(planes)
-
-
-def _prod_shape(shape) -> int:
-    out = 1
-    for s in shape:
-        out *= int(s)
-    return out
-
-
-def _stencil_xla_launch(kernel, vvl: int, n_out: int, consts: dict,
-                        gathered: Sequence[jax.Array]):
-    """vmap the kernel over VVL chunks of pre-gathered neighbour stacks.
-
-    ``gathered``: per input either ``(noffsets, ncomp, n)`` (stencil) or
-    ``(ncomp, n)`` (pointwise).
-    """
-    n = gathered[0].shape[-1]
-    n_pad = -(-n // vvl) * vvl
-    nchunks = n_pad // vvl
-
-    chunks = [pad_sites(x, vvl).reshape(*x.shape[:-1], nchunks, vvl)
-              for x in gathered]
-    body = functools.partial(kernel, **consts) if consts else kernel
-    in_axes = tuple(x.ndim - 2 for x in chunks)
-    outs = jax.vmap(body, in_axes=in_axes,
-                    out_axes=1 if n_out == 1 else (1,) * n_out)(*chunks)
-    outs = (outs,) if n_out == 1 else tuple(outs)
-    flat = tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
-    return flat[0] if n_out == 1 else flat
-
-
-@functools.lru_cache(maxsize=4096)
-def _build_stencil_launch(kernel, vvl: int, backend: Backend,
-                          out_ncomp: tuple[int, ...], const_key,
-                          lattice: Lattice, halo: tuple[int, ...],
-                          stencils: tuple) -> Callable:
-    consts = _unwrap_consts(dict(const_key))
-    n_out = len(out_ncomp)
-    shape = lattice.shape
-
-    def run(*inputs):
-        gathered = [
-            x if s is None else gather_neighbors(x, shape, halo, s)
-            for x, s in zip(inputs, stencils)
-        ]
-        if backend == "xla":
-            return _stencil_xla_launch(kernel, vvl, n_out, consts, gathered)
-        from repro.kernels import tdp_stencil  # lazy: Pallas import
-        return tdp_stencil.pallas_stencil_launch(
-            kernel, vvl, out_ncomp, consts,
-            backend == "pallas_interpret", gathered)
-
-    return jax.jit(run)
-
-
 def launch_stencil(kernel: Callable, lattice: Lattice,
-                   inputs: Sequence[jax.Array], *,
+                   inputs: Sequence, *,
                    stencil: Stencil | Sequence[Stencil | None],
                    out_ncomp: int | Sequence[int] | None = None,
                    consts: Mapping[str, object] | None = None,
                    vvl: int | None = None,
-                   backend: Backend = "xla",
+                   backend: str = "xla",
                    halo: int | Sequence[int] | None = None):
-    """Launch a stencil site kernel over the lattice interior.
-
-    Args:
-      kernel: site kernel.  For each input with a stencil it receives a
-        ``(noffsets, ncomp_i, VVL)`` neighbour chunk (slot order =
-        ``stencil.offsets``); pointwise inputs stay ``(ncomp_i, VVL)``.
-      lattice: the grid (required — neighbour geometry needs the shape).
-      inputs: SoA arrays.  Stencil-carrying inputs span the *extended*
-        extent ``prod(shape[d] + 2·halo[d])`` (ghost planes filled by the
-        caller when ``halo[d] > 0``); pointwise inputs span the interior.
-      stencil: one :class:`Stencil` for all inputs, or a per-input sequence
-        (``None`` → pointwise input).
-      out_ncomp / consts / vvl / backend: as :func:`launch`.
-      halo: per-dimension ghost width already present in the stencil
-        inputs.  ``0`` (default) → that dimension wraps periodically.
-        Must cover the stencil radius wherever non-zero.
-
-    Returns interior-extent outputs ``(ncomp_out, lattice.nsites)``.
-    """
-    if backend not in _VALID_BACKENDS:
-        raise ValueError(f"backend must be one of {_VALID_BACKENDS}, got {backend!r}")
-    if lattice is None:
-        raise ValueError("launch_stencil requires a lattice")
+    """Deprecated: use ``tdp.launch`` with stencil-carrying ``FieldSpec``s."""
+    warnings.warn(
+        "launch_stencil(...) is deprecated; declare stencil fields on a "
+        "KernelSpec and call tdp.launch(spec, Target(...), *arrays) — "
+        "see docs/targetdp_api.md",
+        DeprecationWarning, stacklevel=2)
     inputs = tuple(inputs)
     if not inputs:
         raise ValueError("launch_stencil requires at least one input field")
-    if any(x.ndim != 2 for x in inputs):
-        raise ValueError("inputs must be SoA arrays of shape (ncomp, nsites)")
+    if lattice is None:
+        raise ValueError("launch_stencil requires a lattice")
     stencils = _normalize_stencils(stencil, len(inputs))
-    h = _normalize_halo(halo, lattice.ndim)
-    n_ext = _prod_shape(tuple(s + 2 * hh for s, hh in zip(lattice.shape, h)))
-    for x, s in zip(inputs, stencils):
-        want = n_ext if s is not None else lattice.nsites
-        if int(x.shape[-1]) != want:
-            raise ValueError(
-                f"input extent {x.shape[-1]} != expected {want} "
-                f"({'extended' if s is not None else 'interior'}; "
-                f"shape={lattice.shape}, halo={h})")
-        if s is not None:
-            if s.ndim != lattice.ndim:
-                raise ValueError(
-                    f"stencil {s.name!r} is {s.ndim}-D on a "
-                    f"{lattice.ndim}-D lattice")
-            for d, r in enumerate(s.radius_per_dim()):
-                if h[d] and h[d] < r:
-                    raise ValueError(
-                        f"halo {h[d]} in dim {d} < stencil {s.name!r} "
-                        f"radius {r}")
-    vvl = vvl or _DEFAULT_VVL
-    out_spec = _normalize_out_ncomp(out_ncomp, inputs)
-    key = _consts_cache_key(consts or {})
-    fn = _build_stencil_launch(kernel, vvl, backend, out_spec, key,
-                               lattice, h, stencils)
-    return fn(*inputs)
+    spec = KernelSpec(_as_fn(kernel),
+                      fields=tuple(FieldSpec(stencil=s) for s in stencils),
+                      out=out_ncomp)
+    return _api.launch(spec, as_target(backend, vvl=vvl), *inputs,
+                       lattice=lattice, halo=halo, consts=consts)
 
 
 # ---------------------------------------------------------------------------
@@ -392,7 +142,7 @@ def _masked_kernel(kernel: Callable, op: str) -> Callable:
 
     Cached per (kernel, op) so repeated ``reduce`` calls reuse one jitted
     launch instead of recompiling (the wrapper's identity is the cache key
-    inside :func:`_build_launch`).
+    inside the launch-plan cache).
     """
     _, ident = _REDUCERS[op]
 
@@ -409,26 +159,41 @@ def _masked_kernel(kernel: Callable, op: str) -> Callable:
     return masked
 
 
-def reduce(kernel: Callable, lattice: Lattice | None, inputs: Sequence[jax.Array], *,
+def reduce(kernel: Callable, lattice: Lattice | None,
+           inputs: Sequence, *,
            op: str = "sum",
            out_ncomp: int | Sequence[int] | None = None,
            consts: Mapping[str, object] | None = None,
            vvl: int | None = None,
-           backend: Backend = "xla") -> jax.Array:
+           backend: str | None = None,
+           target=None):
     """Map a site kernel over the lattice and reduce over sites.
 
     Returns ``(ncomp_out,)``.  Padding sites are masked with the reduction
     identity *after* mapping, so kernels need not behave on padded zeros.
+    Accepts a plain site kernel or a :class:`KernelSpec` (its body and
+    declared outputs are used); the target may be a ``Target`` or the
+    legacy ``backend=`` string.
     """
     if op not in _REDUCERS:
         raise ValueError(f"op must be one of {sorted(_REDUCERS)}")
     reducer, _ = _REDUCERS[op]
+    inputs = tuple(inputs)
+    if isinstance(kernel, KernelSpec):
+        if out_ncomp is None:
+            out_ncomp = kernel.out
+        kernel = kernel.fn
     n = int(inputs[0].shape[-1])
     all_consts = dict(consts or {})
     all_consts["_tdp_nsites"] = n
     out_spec = _normalize_out_ncomp(out_ncomp, inputs)
-    mapped = launch(_masked_kernel(kernel, op), lattice, inputs, out_ncomp=out_spec,
-                    consts=all_consts, vvl=vvl, backend=backend, with_site_index=True)
+    spec = KernelSpec(_masked_kernel(kernel, op),
+                      fields=(FieldSpec(),) * len(inputs),
+                      out=out_spec, site_index=True)
+    tgt = as_target(target if target is not None else (backend or "xla"),
+                    vvl=vvl)
+    mapped = _api.launch(spec, tgt, *inputs, lattice=lattice,
+                         consts=all_consts)
     mapped = (mapped,) if not isinstance(mapped, tuple) else mapped
     red = tuple(reducer(m, axis=-1) for m in mapped)
     return red[0] if len(red) == 1 else red

@@ -1,0 +1,81 @@
+"""Executor registry — the pluggable backend table behind ``tdp.launch``.
+
+An *executor* realises the paper's ``TARGET_TLP``/``TARGET_ILP`` loops for
+one architecture.  The core launch path (validation, padding, const
+unwrapping, neighbour gathering, plan caching) is executor-independent;
+an executor only maps a prepared plan over pre-gathered site arrays:
+
+    def my_executor(plan, gathered):
+        # plan:     repro.core.api.LaunchPlan (kernel, vvl, out_ncomp,
+        #           consts, with_site_index, interpret, target)
+        # gathered: one array per input field —
+        #           (ncomp, nsites_padded?) for pointwise fields,
+        #           (noffsets, ncomp, nsites) for stencil fields
+        # returns:  tuple of (ncomp_o, nsites) outputs, one per
+        #           plan.out_ncomp entry (a bare array is accepted for
+        #           single-output kernels)
+        ...
+
+    register_executor("my_backend", my_executor)
+    tdp.launch(spec, Target("my_backend"), *arrays)
+
+Registering a new architecture is *one* ``register_executor`` call — the
+ROADMAP's windowed-block stencil executor lands this way, not as a third
+fork of launch logic.  Registration bumps an internal version that is part
+of the plan cache key, so re-registering a name can never serve a stale
+compiled closure.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+_EXECUTORS: dict[str, Callable] = {}
+_VERSION = 0
+
+
+def register_executor(name: str, fn: Callable, *,
+                      overwrite: bool = False) -> None:
+    """Register ``fn`` as the executor behind ``Target(backend=name)``.
+
+    Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
+    """
+    global _VERSION
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"executor name must be a non-empty string, "
+                         f"got {name!r}")
+    if not callable(fn):
+        raise TypeError(f"executor must be callable, got {fn!r}")
+    if name in _EXECUTORS and not overwrite:
+        raise ValueError(
+            f"executor {name!r} is already registered; pass overwrite=True "
+            f"to replace it")
+    _EXECUTORS[name] = fn
+    _VERSION += 1
+
+
+def unregister_executor(name: str) -> None:
+    global _VERSION
+    if name not in _EXECUTORS:
+        raise ValueError(f"executor {name!r} is not registered "
+                         f"(have: {sorted(_EXECUTORS)})")
+    del _EXECUTORS[name]
+    _VERSION += 1
+
+
+def get_executor(name: str) -> Callable:
+    try:
+        return _EXECUTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor {name!r}; registered executors: "
+            f"{sorted(_EXECUTORS)}") from None
+
+
+def list_executors() -> tuple[str, ...]:
+    return tuple(sorted(_EXECUTORS))
+
+
+def registry_version() -> int:
+    """Monotonic counter bumped on every (un)registration — part of the
+    launch-plan cache key."""
+    return _VERSION

@@ -1,16 +1,24 @@
-"""jit'd public wrappers for the kernel layer, with a backend switch.
+"""jit'd public wrappers for the kernel layer, Target-dispatched.
 
-``backend`` values (the paper's build switch, runtime-selectable):
+Every op takes a ``target=`` — a :class:`repro.core.Target` descriptor
+(executor name, VVL, interpret flag, per-op ``tuning`` knobs) — the
+paper's build switch as an exchangeable value.  Backend-name strings are
+accepted only through the :func:`repro.core.as_target` coercion helper
+(``target="pallas"`` works; so does the legacy ``backend="pallas"``
+kwarg, which coerces through the same helper).  Builtin executor names:
+
   * ``"xla"``              — pure-jnp oracle path (CPU, dry-run, debugging)
   * ``"pallas"``           — Pallas TPU kernels (the deployment target)
   * ``"pallas_interpret"`` — Pallas semantics executed on CPU (validation)
 
-Every wrapper takes the same arguments on every backend — single source at
-the call site, exactly the paper's portability contract.
+Every wrapper takes the same arguments on every target — single source at
+the call site, exactly the paper's portability contract.  Per-op block
+sizes may ride in ``Target.tuning`` (e.g. ``Target("pallas",
+tuning={"block_f": 512})``) instead of being threaded by hand.
 """
 from __future__ import annotations
 
-import jax
+from repro.core import Target, as_target
 
 from . import flash_attention as _fa
 from . import lb_collision as _lb
@@ -22,76 +30,154 @@ from . import swiglu as _sg
 VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
 
 
-def _check(backend: str) -> bool:
-    if backend not in VALID_BACKENDS:
-        raise ValueError(f"backend must be one of {VALID_BACKENDS}, got {backend!r}")
-    return backend != "xla"
+def op_target(target: Target | str | None = None,
+              backend: str | None = None,
+              vvl: int | None = None, *,
+              default_vvl: int | None = None) -> Target:
+    """Resolve an op's target from the accepted spellings.
+
+    ``target=`` (Target or string, via :func:`as_target`) is the first-
+    class form; ``backend=``/``vvl=`` are the legacy kwargs.  Passing both
+    ``target`` and ``backend`` is an error.  ``default_vvl`` fills the
+    op's historical VVL default when neither the target nor ``vvl`` set
+    one.
+    """
+    if target is not None and backend is not None:
+        raise ValueError("pass either target= or the legacy backend=, "
+                         "not both")
+    t = as_target(target if target is not None else backend, vvl=vvl)
+    if t.vvl is None and default_vvl is not None:
+        t = t.with_(vvl=default_vvl)
+    return t
 
 
-def _interp(backend: str) -> bool:
-    return backend == "pallas_interpret"
+def _check_pallas(t: Target) -> bool:
+    """True → dispatch to the op's hand-written Pallas kernel."""
+    if t.executor not in VALID_BACKENDS:
+        raise ValueError(
+            f"this op only supports the builtin executors "
+            f"{VALID_BACKENDS}, got {t.executor!r}")
+    return t.backend != "xla"
 
 
-def lb_collision(f, g, phi, gradphi, del2phi, *, backend="xla", vvl=128, **phys):
-    if _check(backend):
-        return _lb.lb_collision_pallas(f, g, phi, gradphi, del2phi, vvl=vvl,
-                                       interpret=_interp(backend), **phys)
+def lb_collision(f, g, phi, gradphi, del2phi, *, target=None, backend=None,
+                 vvl=None, **phys):
+    t = op_target(target, backend, vvl, default_vvl=128)
+    if _check_pallas(t):
+        return _lb.lb_collision_pallas(f, g, phi, gradphi, del2phi,
+                                       vvl=t.vvl, interpret=t.interpret,
+                                       **phys)
     return _ref.lb_collision_ref(f, g, phi, gradphi, del2phi, **phys)
 
 
-def lb_fused_step(f, g, *, grid_shape, halo=0, backend="xla", vvl=128,
-                  **phys):
+def lb_fused_step(f, g, *, grid_shape, halo=0, mode="one_launch",
+                  target=None, backend=None, vvl=None, **phys):
     """One fused stream→gradient→collide step over SoA arrays (19, nsites).
 
     ``f``/``g`` are *pre-stream* populations over ``grid_shape`` (extended
     by ``halo`` ghost planes per dimension where non-zero — the sharded
     path; 0 → fully periodic).  Returns the next pre-stream state over the
-    interior.  Single source across backends via ``launch_stencil``.
+    interior.  Single source across targets via ``tdp.launch``.
+
+    ``mode`` selects the fusion strategy (both bit-for-bit the same math):
+
+    * ``"one_launch"`` — the whole step as one stencil launch over the
+      radius-2 composed g-neighbourhood (``STENCIL_FUSED_G``, 57·19
+      gathered rows).
+    * ``"two_launch"`` — ROADMAP stencil-memory stage (a): a first launch
+      streams g's moments into a **1-component** φ intermediate, then a
+      second launch (radius-1 stencils only) streams/collides reading φ
+      through the 7-point gradient star — the gathered-stack footprint
+      drops from ``(19 + 57)·19`` rows to ``2·19·19 + 7`` rows and no
+      ``(noffsets, ncomp, nsites)`` g-stack is ever materialised.
     """
-    from repro.core import Lattice, TargetConst, launch_stencil
+    from repro.core import Lattice, TargetConst, tdp_launch
+    from repro.core.api import _normalize_halo
     from repro.lb import stencil as _lbst   # lazy: avoids kernels↔lb cycle
 
-    _check(backend)
+    t = op_target(target, backend, vvl, default_vvl=128)
     lat = Lattice(tuple(int(s) for s in grid_shape))
     consts = dict(w=TargetConst(_lb.WEIGHTS.astype(f.dtype)),
                   c=TargetConst(_lb.CV.astype(f.dtype)), **phys)
-    return launch_stencil(
-        _lbst.fused_site_kernel, lat, [f, g],
-        stencil=(_lbst.STENCIL_D3Q19_PULL, _lbst.STENCIL_FUSED_G),
-        out_ncomp=(_lb.NVEL, _lb.NVEL), consts=consts, vvl=vvl,
-        backend=backend, halo=halo)
+    if mode == "one_launch":
+        return tdp_launch(_lbst.FUSED_SPEC, t, f, g, lattice=lat,
+                          halo=halo, consts=consts)
+    if mode != "two_launch":
+        raise ValueError(f"mode must be 'one_launch' or 'two_launch', "
+                         f"got {mode!r}")
+
+    h = _normalize_halo(halo, lat.ndim)
+    if any(hh and hh < 2 for hh in h):
+        raise ValueError(f"two_launch needs halo >= 2 where non-zero "
+                         f"(radius-2 dependency), got {h}")
+    # Launch A: streamed φ over the interior *plus one ghost ring* along
+    # halo'd dimensions — recomputed locally from the supplied ghost
+    # planes, so the intermediate needs no extra communication.
+    shape_a = tuple(s + 2 * (hh - 1) if hh else s
+                    for s, hh in zip(lat.shape, h))
+    halo_a = tuple(1 if hh else 0 for hh in h)
+    phis = tdp_launch(_lbst.PHI_STREAM_SPEC, t, g, lattice=Lattice(shape_a),
+                      halo=halo_a)
+    if any(h):
+        import jax
+
+        def trim(x, src_h):
+            # Trim a width-src_h ghost extension down to width 1 (all
+            # launch-B stencils are radius 1).
+            ext = tuple(s + 2 * hh for s, hh in zip(lat.shape, src_h))
+            grid = x.reshape(x.shape[0], *ext)
+            for d, hh in enumerate(src_h):
+                if hh > 1:
+                    grid = jax.lax.slice_in_dim(
+                        grid, hh - 1, hh + 1 + lat.shape[d], axis=d + 1)
+            return grid.reshape(x.shape[0], -1)
+
+        f, g = trim(f, h), trim(g, h)
+        phis = trim(phis, tuple(hh - 1 if hh else 0 for hh in h))
+    return tdp_launch(_lbst.FUSED_TWO_SPEC, t, f, g, phis, lattice=lat,
+                      halo=halo_a, consts=consts)
 
 
-def rmsnorm(x, weight, *, backend="xla", vvl=256, eps=1e-6, scale_offset=0.0):
-    if _check(backend):
-        return _rn.rmsnorm_pallas(x, weight, vvl=vvl, eps=eps,
+def rmsnorm(x, weight, *, target=None, backend=None, vvl=None, eps=1e-6,
+            scale_offset=0.0):
+    t = op_target(target, backend, vvl, default_vvl=256)
+    if _check_pallas(t):
+        return _rn.rmsnorm_pallas(x, weight, vvl=t.vvl, eps=eps,
                                   scale_offset=scale_offset,
-                                  interpret=_interp(backend))
+                                  interpret=t.interpret)
     return _ref.rmsnorm_ref(x, weight, eps=eps, scale_offset=scale_offset)
 
 
-def gated_act(u, v=None, *, kind="swiglu", backend="xla", vvl=256, block_f=512):
-    if _check(backend):
-        return _sg.gated_act_pallas(u, v, kind=kind, vvl=vvl, block_f=block_f,
-                                    interpret=_interp(backend))
+def gated_act(u, v=None, *, kind="swiglu", target=None, backend=None,
+              vvl=None, block_f=None):
+    t = op_target(target, backend, vvl, default_vvl=256)
+    if _check_pallas(t):
+        return _sg.gated_act_pallas(
+            u, v, kind=kind, vvl=t.vvl,
+            block_f=block_f if block_f is not None
+            else t.tune("block_f", 512),
+            interpret=t.interpret)
     return _ref.gated_act_ref(u, v, kind=kind)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                    scale=None, backend="xla", block_q=128, block_k=128,
-                    impl="ref", q_offset=0):
-    """``impl`` selects the xla-backend oracle: "ref" (whole-S² scores) or
+                    scale=None, target=None, backend=None, block_q=None,
+                    block_k=None, impl="ref", q_offset=0):
+    """``impl`` selects the xla-target oracle: "ref" (whole-S² scores) or
     "chunked" (q-block scan + flash backward, memory-bounded — the
     dry-run path).  ``q_offset``: global position of q[...,0,:] for
     sequence-parallel callers (chunked impl only)."""
-    if _check(backend):
+    t = op_target(target, backend)
+    block_q = block_q if block_q is not None else t.tune("block_q", 128)
+    block_k = block_k if block_k is not None else t.tune("block_k", 128)
+    if _check_pallas(t):
         if q_offset:
             raise NotImplementedError("q_offset on the Pallas path is a "
                                       "grid-offset BlockSpec change (TPU)")
         return _fa.flash_attention_pallas(
             q, k, v, causal=causal, window=window, softcap=softcap,
             scale=scale, block_q=block_q, block_k=block_k,
-            interpret=_interp(backend))
+            interpret=t.interpret)
     if impl == "chunked":
         return _ref.attention_chunked_ref(
             q, k, v, causal=causal, window=window, softcap=softcap,
@@ -102,9 +188,15 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                               softcap=softcap, scale=scale)
 
 
-def mamba_scan(x, dt, b, c, a, d, *, backend="xla", block_d=128, block_t=128):
-    if _check(backend):
-        return _ms.mamba_scan_pallas(x, dt, b, c, a, d, block_d=block_d,
-                                     block_t=block_t,
-                                     interpret=_interp(backend))
+def mamba_scan(x, dt, b, c, a, d, *, target=None, backend=None,
+               block_d=None, block_t=None):
+    t = op_target(target, backend)
+    if _check_pallas(t):
+        return _ms.mamba_scan_pallas(
+            x, dt, b, c, a, d,
+            block_d=block_d if block_d is not None
+            else t.tune("block_d", 128),
+            block_t=block_t if block_t is not None
+            else t.tune("block_t", 128),
+            interpret=t.interpret)
     return _ref.mamba_scan_ref(x, dt, b, c, a, d)

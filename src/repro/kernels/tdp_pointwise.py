@@ -6,22 +6,28 @@ sites (`TARGET_TLP`) and loops the innermost op over the chunk
 
 * the ``pallas_call`` **grid** plays the role of the CUDA thread grid: one
   grid step per VVL-chunk of sites;
-* each input/output block is an explicit VMEM tile of shape
-  ``(ncomp, VVL)`` — sites on the **lane** axis (SoA!), components on
-  sublanes, so every jnp op inside the kernel body vectorises over lanes
-  exactly as the strip-mined ILP loop vectorises over AVX lanes;
+* each input/output block is an explicit VMEM tile — ``(ncomp, VVL)`` for
+  pointwise fields, ``(noffsets, ncomp, VVL)`` for stencil fields (the
+  centre row plus one halo row per neighbour offset) — sites on the
+  **lane** axis (SoA!), components on sublanes, so every jnp op inside the
+  kernel body vectorises over lanes exactly as the strip-mined ILP loop
+  vectorises over AVX lanes;
 * ``VVL`` is the tunable block extent.  Multiples of 128 fill lane rows;
   larger values amortise HBM→VMEM latency (the paper's "m>1 can be faster"
   observation) at the cost of VMEM footprint:
-  ``vmem_bytes ≈ sum_i(ncomp_i * VVL * itemsize)`` which must stay ≲ 16 MiB.
+  ``vmem_bytes ≈ sum_i(noffsets_i * ncomp_i * VVL * itemsize)`` which must
+  stay ≲ 16 MiB (:func:`vmem_bytes_estimate`).
 
-``interpret=True`` runs the same kernel body on CPU for validation — this
-container has no TPU; tests exercise the Pallas path through interpret mode
-and assert allclose against the jnp executor (the "C implementation").
+:func:`pallas_execute` is the registry executor behind
+``Target("pallas")`` / ``Target("pallas", interpret=True)`` — registered
+by :mod:`repro.core.api`, dispatched through
+:func:`repro.core.registry.get_executor`.  ``interpret=True`` runs the
+same kernel body on CPU for validation — this container has no TPU; tests
+exercise the Pallas path through interpret mode and assert allclose
+against the jnp executor (the "C implementation").
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Sequence
 
 import jax
@@ -36,7 +42,7 @@ def vmem_bytes_estimate(in_ncomp: Sequence[int], out_ncomp: Sequence[int],
 
     ``in_noffsets[i]``: neighbour count of input i — 1 (default) for
     pointwise inputs, ``stencil.noffsets`` for stencil inputs (the halo
-    rows each add a block row; see docs/stencil.md).  The stencil executor
+    rows each add a block row; see docs/stencil.md).  The stencil module
     (:mod:`repro.kernels.tdp_stencil`) re-exports this single rule.
     """
     if in_noffsets is None:
@@ -67,22 +73,26 @@ def _canonicalize_consts(consts: dict):
     return scalars, arrays
 
 
-def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,
-                  out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
-                  inputs: tuple[jax.Array, ...]):
-    """Launch ``kernel`` over the site axis with VVL-sized VMEM blocks."""
-    from repro.core.execute import pad_sites
+def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
+                out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
+                gathered: Sequence[jax.Array], name: str):
+    """Map ``kernel`` over VVL site chunks with explicit VMEM blocks.
 
-    n = inputs[0].shape[-1]
+    ``gathered``: per input, ``(noffsets, ncomp, n)`` for stencil fields or
+    ``(ncomp, n)`` for pointwise ones — the output of the shared gather
+    prologue in :mod:`repro.core.api`.  Grid = one step per VVL chunk.
+    """
+    from repro.core.api import pad_sites
+
+    n = gathered[0].shape[-1]
     n_pad = -(-n // vvl) * vvl
     nchunks = n_pad // vvl
-    dtype = inputs[0].dtype
+    dtype = gathered[0].dtype
 
-    padded = tuple(pad_sites(x, vvl) for x in inputs)
+    padded = tuple(pad_sites(x, vvl) for x in gathered)
     scalar_consts, array_consts = _canonicalize_consts(consts)
     const_names = list(array_consts)
     const_vals = [array_consts[k][1] for k in const_names]
-    n_out = len(out_ncomp)
 
     def body(*refs):
         in_refs = refs[:len(padded)]
@@ -94,39 +104,56 @@ def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,
             # global site index of each lane in this chunk (TARGET_ILP offset
             # + baseIndex), computed from the grid position.
             base = pl.program_id(0) * vvl
-            site_idx = base + jax.lax.iota(jnp.int32, vvl)
-            chunks.append(site_idx)
+            chunks.append(base + jax.lax.iota(jnp.int32, vvl))
         kw = dict(scalar_consts)
-        for name, cref in zip(const_names, const_refs):
-            orig_shape, _ = array_consts[name]
-            kw[name] = cref[...].reshape(orig_shape)
+        for cname, cref in zip(const_names, const_refs):
+            orig_shape, _ = array_consts[cname]
+            kw[cname] = cref[...].reshape(orig_shape)
         vals = kernel(*chunks, **kw)
         vals = (vals,) if not isinstance(vals, tuple) else vals
         for r, v in zip(out_refs, vals):
             r[...] = v.astype(r.dtype)
 
-    grid = (nchunks,)
-    in_specs = [
-        pl.BlockSpec((x.shape[0], vvl), lambda i: (0, i)) for x in padded
-    ] + [
+    def site_spec(x):
+        if x.ndim == 3:       # (noffsets, ncomp, vvl) halo block
+            return pl.BlockSpec((x.shape[0], x.shape[1], vvl),
+                                lambda i: (0, 0, i))
+        return pl.BlockSpec((x.shape[0], vvl), lambda i: (0, i))
+
+    in_specs = [site_spec(x) for x in padded] + [
         pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in const_vals
     ]
-    out_specs = [
-        pl.BlockSpec((c, vvl), lambda i: (0, i)) for c in out_ncomp
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((c, n_pad), dtype) for c in out_ncomp
-    ]
+    out_specs = [pl.BlockSpec((c, vvl), lambda i: (0, i)) for c in out_ncomp]
+    out_shape = [jax.ShapeDtypeStruct((c, n_pad), dtype) for c in out_ncomp]
 
     outs = pl.pallas_call(
         body,
-        grid=grid,
+        grid=(nchunks,),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-        name=f"tdp_{getattr(kernel, '__name__', 'site_kernel')}_vvl{vvl}",
+        name=name,
     )(*padded, *const_vals)
 
-    outs = tuple(o[:, :n] for o in outs)
-    return outs[0] if n_out == 1 else outs
+    return tuple(o[:, :n] for o in outs)
+
+
+def pallas_execute(plan, gathered: Sequence[jax.Array]):
+    """Registry executor entry (see :mod:`repro.core.registry` for the
+    ``executor(plan, gathered)`` contract)."""
+    return _run_pallas(
+        plan.kernel, plan.vvl, plan.with_site_index, tuple(plan.out_ncomp),
+        plan.consts, plan.interpret, gathered,
+        name=f"tdp_{plan.name}_vvl{plan.vvl}")
+
+
+def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,
+                  out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
+                  inputs: tuple[jax.Array, ...]):
+    """Pre-registry entry point, kept for direct callers."""
+    outs = _run_pallas(
+        kernel, vvl, with_site_index, tuple(out_ncomp), consts, interpret,
+        inputs, name=f"tdp_{getattr(kernel, '__name__', 'site_kernel')}"
+                     f"_vvl{vvl}")
+    return outs[0] if len(outs) == 1 else outs

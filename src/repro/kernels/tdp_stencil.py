@@ -1,15 +1,15 @@
-"""Pallas executor for targetDP *stencil* site kernels.
+"""Pallas stencil support — re-exports of the unified Pallas executor.
 
-Extends the pointwise executor (:mod:`repro.kernels.tdp_pointwise`) to
-halo-aware kernels: every stencil-carrying input contributes a
+Since the executor-registry redesign the pointwise and stencil Pallas
+paths share one implementation (:func:`repro.kernels.tdp_pointwise
+.pallas_execute`): every stencil-carrying input simply contributes a
 ``(noffsets, ncomp, VVL)`` VMEM block per grid step — the centre row plus
-one halo row per neighbour offset, materialised into VMEM so the kernel
-body (the *same* single-source body the jnp executor vmaps) computes
-entirely on-chip.  The neighbour gather itself — periodic rolls and ghost-
-plane window slices — runs as XLA ops in the jitted prologue
-(:func:`repro.core.execute.gather_neighbors`); on TPU it fuses into the
-surrounding copy, and the pallas_call sees plain dense operands with a
-static leading offset axis.
+one halo row per neighbour offset — while pointwise inputs stay
+``(ncomp, VVL)``.  The neighbour gather itself (periodic rolls and ghost-
+plane window slices) runs as XLA ops in the jitted prologue
+(:func:`repro.core.api.gather_neighbors`, shared by *all* executors); on
+TPU it fuses into the surrounding copy, and the pallas_call sees plain
+dense operands with a static leading offset axis.
 
 VMEM budgeting (see docs/stencil.md): the pointwise rule
 ``sum_i(ncomp_i · VVL · itemsize)`` picks up a ``noffsets_i`` factor per
@@ -18,81 +18,35 @@ stencil input —
   ``vmem_bytes ≈ Σ_i noffsets_i · ncomp_i · VVL · b  +  Σ_o ncomp_o · VVL · b``
 
 which for the fused D3Q19 stream+collide launch (19·19 + 57·19 rows) caps
-VVL two binary orders below the pointwise collision kernel's sweet spot.
-:func:`vmem_bytes_estimate` computes the rule.
+VVL two binary orders below the pointwise collision kernel's sweet spot —
+the two-launch fused mode (``ops.lb_fused_step(mode="two_launch")``)
+exists to shrink exactly that stack.  :func:`vmem_bytes_estimate`
+computes the rule.
 """
 from __future__ import annotations
 
 from typing import Callable, Sequence
 
 import jax
-from jax.experimental import pallas as pl
 
-from .tdp_pointwise import _canonicalize_consts, vmem_bytes_estimate
+from .tdp_pointwise import (  # noqa: F401 — canonical implementations
+    pallas_execute,
+    vmem_bytes_estimate,
+)
 
-__all__ = ["pallas_stencil_launch", "vmem_bytes_estimate"]
+__all__ = ["pallas_stencil_launch", "pallas_execute", "vmem_bytes_estimate"]
 
 
 def pallas_stencil_launch(kernel: Callable, vvl: int,
                           out_ncomp: tuple[int, ...], consts: dict,
                           interpret: bool,
                           gathered: Sequence[jax.Array]):
-    """Map ``kernel`` over VVL site chunks of pre-gathered neighbour stacks.
+    """Pre-registry entry point, kept for direct callers: map ``kernel``
+    over VVL site chunks of pre-gathered neighbour stacks."""
+    from .tdp_pointwise import _run_pallas
 
-    ``gathered``: per input, ``(noffsets, ncomp, n)`` for stencil inputs or
-    ``(ncomp, n)`` for pointwise ones — the output of the shared gather
-    prologue.  Grid = one step per VVL chunk of interior sites.
-    """
-    from repro.core.execute import pad_sites
-
-    n = gathered[0].shape[-1]
-    n_pad = -(-n // vvl) * vvl
-    nchunks = n_pad // vvl
-    dtype = gathered[0].dtype
-
-    padded = tuple(pad_sites(x, vvl) for x in gathered)
-    scalar_consts, array_consts = _canonicalize_consts(consts)
-    const_names = list(array_consts)
-    const_vals = [array_consts[k][1] for k in const_names]
-    n_out = len(out_ncomp)
-
-    def body(*refs):
-        in_refs = refs[:len(padded)]
-        cref0 = len(padded)
-        const_refs = refs[cref0:cref0 + len(const_names)]
-        out_refs = refs[cref0 + len(const_names):]
-        chunks = [r[...] for r in in_refs]
-        kw = dict(scalar_consts)
-        for name, cref in zip(const_names, const_refs):
-            orig_shape, _ = array_consts[name]
-            kw[name] = cref[...].reshape(orig_shape)
-        vals = kernel(*chunks, **kw)
-        vals = (vals,) if not isinstance(vals, tuple) else vals
-        for r, v in zip(out_refs, vals):
-            r[...] = v.astype(r.dtype)
-
-    def site_spec(x):
-        if x.ndim == 3:       # (noffsets, ncomp, vvl) halo block
-            return pl.BlockSpec((x.shape[0], x.shape[1], vvl),
-                                lambda i: (0, 0, i))
-        return pl.BlockSpec((x.shape[0], vvl), lambda i: (0, i))
-
-    in_specs = [site_spec(x) for x in padded] + [
-        pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in const_vals
-    ]
-    out_specs = [pl.BlockSpec((c, vvl), lambda i: (0, i)) for c in out_ncomp]
-    out_shape = [jax.ShapeDtypeStruct((c, n_pad), dtype) for c in out_ncomp]
-
-    outs = pl.pallas_call(
-        body,
-        grid=(nchunks,),
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
+    outs = _run_pallas(
+        kernel, vvl, False, tuple(out_ncomp), consts, interpret, gathered,
         name=f"tdp_stencil_{getattr(kernel, '__name__', 'site_kernel')}"
-             f"_vvl{vvl}",
-    )(*padded, *const_vals)
-
-    outs = tuple(o[:, :n] for o in outs)
-    return outs[0] if n_out == 1 else outs
+             f"_vvl{vvl}")
+    return outs[0] if len(outs) == 1 else outs

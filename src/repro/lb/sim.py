@@ -8,19 +8,28 @@ One timestep:
 
 Runs single-device (periodic stencil gather) or mesh-sharded (slab
 decomposition along X under ``shard_map`` with ``ppermute`` halo exchange).
-The collision backend/VVL are launch-time switches — the paper's
-portability contract.
+The collision target (executor + VVL) is a launch-time
+:class:`repro.core.Target` switch — the paper's portability contract.
 
-With ``fused=True`` the hot loop is a *single* stencil launch per step
-(stream → φ moments → ∇φ/∇²φ → collide; no intermediate full-lattice
-arrays): the iterated state is the pre-stream populations w = collide(u),
-since (stream∘collide)ⁿ = stream ∘ (collide∘stream)ⁿ⁻¹ ∘ collide — the
-first collide and last stream run once as separate launches, so fused and
-unfused trajectories match state-for-state.
+``fused`` selects the hot-loop fusion strategy (all trajectories match
+state-for-state):
+
+* ``False`` — the 4-launch unfused pipeline above.
+* ``"one_launch"`` (or ``True``) — one stencil launch per step
+  (stream → φ moments → ∇φ/∇²φ → collide; no intermediate full-lattice
+  arrays), over the radius-2 composed g-neighbourhood.
+* ``"two_launch"`` — ROADMAP stencil-memory stage (a): launch A streams
+  g's moments into a 1-component φ intermediate, launch B (radius-1
+  stencils only) streams/collides against it — the gathered neighbour
+  stack shrinks from ``(19+57)·19`` to ``2·19·19 + 7`` rows.
+
+In every fused mode the iterated state is the pre-stream populations
+w = collide(u), since (stream∘collide)ⁿ = stream ∘ (collide∘stream)ⁿ⁻¹ ∘
+collide — the first collide and last stream run once as separate launches,
+so fused and unfused trajectories match state-for-state.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -28,11 +37,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import compat
+from repro.core import Target, compat
 from repro.kernels import ops
 from repro.kernels.lb_collision import NVEL, WEIGHTS
 from . import stencil
 from .params import LBParams
+
+_FUSED_MODES = (False, "one_launch", "two_launch")
 
 
 @dataclass
@@ -47,14 +58,14 @@ class LBState:
 
 
 def _collide_flat(f, g, phi, gradphi, del2phi, *, params: LBParams,
-                  backend: str, vvl: int):
+                  target: Target):
     """Flatten grids to SoA site arrays, run the collision kernel, restore."""
     gs = f.shape[1:]
     n = int(np.prod(gs))
     fo, go = ops.lb_collision(
         f.reshape(NVEL, n), g.reshape(NVEL, n), phi.reshape(1, n),
         gradphi.reshape(3, n), del2phi.reshape(1, n),
-        backend=backend, vvl=vvl, **params.as_kwargs())
+        target=target, **params.as_kwargs())
     return fo.reshape(NVEL, *gs), go.reshape(NVEL, *gs)
 
 
@@ -62,15 +73,30 @@ class BinaryFluidSim:
     """Spinodal-decomposition / droplet simulation of a binary mixture."""
 
     def __init__(self, grid_shape=(32, 32, 32), params: LBParams | None = None,
-                 *, backend: str = "xla", vvl: int = 128,
+                 *, target: Target | str | None = None,
+                 backend: str = "xla", vvl: int = 128,
                  mesh: Mesh | None = None, shard_axis: str = "data",
-                 fused: bool = False, dtype=jnp.float32):
+                 fused: bool | str = False, dtype=jnp.float32):
         self.grid_shape = tuple(int(s) for s in grid_shape)
         self.params = params or LBParams()
-        self.backend = backend
-        self.vvl = vvl
+        if target is None:
+            target = Target(backend, vvl=vvl, mesh=mesh,
+                            shard_axis=shard_axis if mesh is not None
+                            else None)
+        else:
+            target = ops.op_target(target, default_vvl=vvl)
+            if mesh is None:
+                mesh = target.mesh
+        self.target = target
+        self.backend = target.executor          # legacy introspection
+        self.vvl = target.resolve_vvl()
         self.mesh = mesh
         self.shard_axis = shard_axis
+        if fused is True:
+            fused = "one_launch"
+        if fused not in _FUSED_MODES:
+            raise ValueError(f"fused must be one of {_FUSED_MODES} (or "
+                             f"True ≡ 'one_launch'), got {fused!r}")
         self.fused = fused
         self.dtype = dtype
         if mesh is not None:
@@ -125,13 +151,13 @@ class BinaryFluidSim:
     # -- one timestep --------------------------------------------------------
 
     def _build_step(self):
-        params, backend, vvl = self.params, self.backend, self.vvl
+        params, target = self.params, self.target
 
         def step_local(f, g):
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients(phi)
             f, g = _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, backend=backend, vvl=vvl)
+                                 params=params, target=target)
             return stencil.stream(f), stencil.stream(g)
 
         if self.mesh is None:
@@ -143,7 +169,7 @@ class BinaryFluidSim:
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients_sharded(phi, axis)
             f, g = _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, backend=backend, vvl=vvl)
+                                 params=params, target=target)
             return stencil.stream_sharded(f, axis), stencil.stream_sharded(g, axis)
 
         spec = P(None, axis, None, None)
@@ -156,24 +182,25 @@ class BinaryFluidSim:
 
         The hot loop iterates the *pre-stream* state w = collide(u):
         n unfused steps (stream∘collide)ⁿ equal stream ∘ fusedⁿ⁻¹ ∘ collide,
-        where ``fused`` is one stencil launch (stream → ∇φ → collide, no
-        intermediate full-lattice arrays).
+        where ``fused`` is one (or two, in two_launch mode) stencil
+        launches with no intermediate full-lattice arrays beyond the
+        two_launch φ scalar.
         """
-        params, backend, vvl = self.params, self.backend, self.vvl
+        params, target, mode = self.params, self.target, self.fused
         gs = self.grid_shape
         n = int(np.prod(gs))
 
         def fused_local(f, g):
             fo, go = ops.lb_fused_step(
                 f.reshape(NVEL, n), g.reshape(NVEL, n), grid_shape=gs,
-                backend=backend, vvl=vvl, **params.as_kwargs())
+                mode=mode, target=target, **params.as_kwargs())
             return fo.reshape(NVEL, *gs), go.reshape(NVEL, *gs)
 
         def collide_local(f, g):
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients(phi)
             return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, backend=backend, vvl=vvl)
+                                 params=params, target=target)
 
         def stream_local(f, g):
             return stencil.stream(f), stencil.stream(g)
@@ -185,14 +212,16 @@ class BinaryFluidSim:
         axis = self.shard_axis
 
         def fused_sharded(f, g):
-            # 2-plane ppermute halo exchange feeds the radius-2 composed
-            # stencil's ghost planes (halo window along the slab axis).
+            # 2-plane ppermute halo exchange feeds the radius-2 ghost
+            # dependency (one_launch: the composed stencil's window;
+            # two_launch: launch A's +1 ring of streamed φ plus launch
+            # B's radius-1 stencils).
             fe = stencil._extend_x(f, axis, 2)
             ge = stencil._extend_x(g, axis, 2)
             local = f.shape[1:]
             fo, go = ops.lb_fused_step(
                 fe.reshape(NVEL, -1), ge.reshape(NVEL, -1),
-                grid_shape=local, halo=(2, 0, 0), backend=backend, vvl=vvl,
+                grid_shape=local, halo=(2, 0, 0), mode=mode, target=target,
                 **params.as_kwargs())
             return fo.reshape(NVEL, *local), go.reshape(NVEL, *local)
 
@@ -200,7 +229,7 @@ class BinaryFluidSim:
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients_sharded(phi, axis)
             return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, backend=backend, vvl=vvl)
+                                 params=params, target=target)
 
         def stream_sharded(f, g):
             return (stencil.stream_sharded(f, axis),

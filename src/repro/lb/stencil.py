@@ -1,9 +1,10 @@
 """Stencils and streaming for the 3-D lattice, on the targetDP stencil layer.
 
 The neighbourhood math is declared once as :class:`repro.core.Stencil`
-descriptors and executed by :func:`repro.core.launch_stencil` — the same
-single-source site kernels run on the jnp and Pallas executors (paper
-portability contract, extended from pointwise to stencil-shaped kernels).
+descriptors attached to :class:`repro.core.KernelSpec` field roles and
+executed by :func:`repro.tdp.launch` — the same single-source site
+kernels run on every registered executor (paper portability contract,
+extended from pointwise to stencil-shaped kernels).
 
 Two execution regimes, one math:
 
@@ -21,13 +22,16 @@ Gradients use the 6-point nearest-neighbour star:
 (adequate for the symmetric benchmark; ``STENCIL_GRAD_19PT`` declares the
 19-point isotropic neighbourhood for a drop-in variant.)
 
-The **fused step** (:func:`fused_site_kernel`) is the paper-successor's
+The **fused step** (:data:`FUSED_SPEC`) is the paper-successor's
 (1609.01479) key optimisation: one stencil launch computes
 stream → φ moments → ∇φ/∇²φ → binary collision with *no* intermediate
 full-lattice arrays.  Its g-field neighbourhood is the Minkowski
 composition ``grad6 ∘ d3q19-pull`` (radius 2) — each site reads the
 pre-stream populations that determine φ at itself and its six gradient
-neighbours.
+neighbours.  The **two-launch** variant (:data:`PHI_STREAM_SPEC` +
+:data:`FUSED_TWO_SPEC`) trades that 57-offset gather for a 1-component
+streamed-φ intermediate (ROADMAP stencil-memory stage (a)) while keeping
+the identical accumulation order — the trajectories match bit-for-bit.
 """
 from __future__ import annotations
 
@@ -36,12 +40,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    FieldSpec,
+    KernelSpec,
     Lattice,
     STENCIL_D3Q19_PULL,
     STENCIL_GRAD_6PT,
     STENCIL_GRAD_19PT,  # noqa: F401 — re-exported config switch
+    Target,
+    as_target,
     compat,
-    launch_stencil,
+    tdp_launch,
 )
 from repro.kernels.lb_collision import CV, NVEL, collision_site_kernel
 
@@ -71,6 +79,9 @@ _FUSED_G_IDX = tuple(
           for q in range(NVEL))
     for d in _DIRS)
 
+#: collision TARGET_CONST names shared by the fused specs
+_COLLISION_CONSTS = ("w", "c", "A", "B", "kappa", "tau", "tau_phi", "gamma")
+
 
 # ---------------------------------------------------------------------------
 # site kernels (single source; static slot indices — Pallas-legal)
@@ -85,9 +96,9 @@ def stream_site_kernel(f_nb):
 def _grad6_from_p(p):
     """∇φ (3, V) and ∇²φ (V,) from φ at the 7 grad-star slots (p[0] =
     centre, then +x,-x,+y,-y,+z,-z).  One accumulation order, shared by the
-    plain and fused kernels — it must stay bit-identical between them (and
-    with the historical roll-based implementation) for the fused==unfused
-    trajectory guarantee."""
+    plain, fused and two-launch kernels — it must stay bit-identical between
+    them (and with the historical roll-based implementation) for the
+    fused==unfused trajectory guarantee."""
     grad = 0.5 * jnp.stack([p[1] - p[2], p[3] - p[4], p[5] - p[6]])
     lap = -6.0 * p[0]
     lap = lap + p[1] + p[2]
@@ -138,29 +149,94 @@ def fused_site_kernel(f_nb, g_nb, *, w=None, c=None, A=0.0625, B=0.0625,
 fused_site_kernel.__tdp_site_kernel__ = True
 
 
+def streamed_phi_site_kernel(g_nb):
+    """Launch A of the two-launch fused step: φ of the *streamed* g at one
+    site, ``g_nb (19, 19, V)`` pull stack → ``(1, V)``.
+
+    Accumulates in ascending q order — the exact order
+    :func:`fused_site_kernel`'s ``phi_at`` uses, so both fused modes
+    produce bit-identical φ."""
+    acc = g_nb[_PULL_IDX[0], 0]
+    for q in range(1, NVEL):
+        acc = acc + g_nb[_PULL_IDX[q], q]
+    return acc[None]
+
+
+def fused_two_site_kernel(f_nb, g_nb, phis_nb, *, w=None, c=None, A=0.0625,
+                          B=0.0625, kappa=0.04, tau=1.0, tau_phi=1.0,
+                          gamma=1.0):
+    """Launch B of the two-launch fused step: stream + collide, reading the
+    pre-streamed φ intermediate through the 7-point gradient star.
+
+    Args:
+      f_nb / g_nb: (19, 19, V) populations at the pull offsets.
+      phis_nb: (7, 1, V) streamed-φ values at the gradient-star slots
+        (launch A's output) — replaces the one-launch kernel's 57-offset
+        g gather.
+    """
+    f_s = jnp.stack([f_nb[_PULL_IDX[q], q] for q in range(NVEL)])
+    g_s = jnp.stack([g_nb[_PULL_IDX[q], q] for q in range(NVEL)])
+    p = [phis_nb[i, 0] for i in range(len(_DIRS))]
+    grad, lap = _grad6_from_p(p)
+    return collision_site_kernel(
+        f_s, g_s, p[0][None], grad, lap[None], w=w, c=c, A=A, B=B,
+        kappa=kappa, tau=tau, tau_phi=tau_phi, gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# kernel specs — the declarative launch surface (what ops/sim dispatch on)
+# ---------------------------------------------------------------------------
+
+STREAM_SPEC = KernelSpec(
+    stream_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, stencil=STENCIL_D3Q19_PULL, name="f"),),
+    out=NVEL)
+
+GRAD6_SPEC = KernelSpec(
+    grad6_site_kernel,
+    fields=(FieldSpec(ncomp=1, stencil=STENCIL_GRAD_6PT, name="phi"),),
+    out=(3, 1))
+
+FUSED_SPEC = KernelSpec(
+    fused_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, stencil=STENCIL_D3Q19_PULL, name="f"),
+            FieldSpec(ncomp=NVEL, stencil=STENCIL_FUSED_G, name="g")),
+    out=(NVEL, NVEL), consts=_COLLISION_CONSTS)
+
+PHI_STREAM_SPEC = KernelSpec(
+    streamed_phi_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, stencil=STENCIL_D3Q19_PULL, name="g"),),
+    out=1)
+
+FUSED_TWO_SPEC = KernelSpec(
+    fused_two_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, stencil=STENCIL_D3Q19_PULL, name="f"),
+            FieldSpec(ncomp=NVEL, stencil=STENCIL_D3Q19_PULL, name="g"),
+            FieldSpec(ncomp=1, stencil=STENCIL_GRAD_6PT, name="phi_streamed")),
+    out=(NVEL, NVEL), consts=_COLLISION_CONSTS)
+
+
 # ---------------------------------------------------------------------------
 # grid-level wrappers (single device: fully periodic)
 # ---------------------------------------------------------------------------
 
-def gradients(phi: jax.Array, *, backend: str = "xla",
+def gradients(phi: jax.Array, *, target: Target | str | None = None,
               vvl: int | None = None) -> tuple[jax.Array, jax.Array]:
     """∇φ and ∇²φ of a scalar grid ``(X, Y, Z)`` → ``(3, X, Y, Z)``, ``(X, Y, Z)``."""
     gs = phi.shape
     lat = Lattice(gs)
-    grad, lap = launch_stencil(
-        grad6_site_kernel, lat, [phi.reshape(1, lat.nsites)],
-        stencil=STENCIL_GRAD_6PT, out_ncomp=(3, 1), backend=backend, vvl=vvl)
+    grad, lap = tdp_launch(GRAD6_SPEC, as_target(target, vvl=vvl),
+                           phi.reshape(1, lat.nsites), lattice=lat)
     return grad.reshape(3, *gs), lap.reshape(gs)
 
 
-def stream(dist: jax.Array, *, backend: str = "xla",
+def stream(dist: jax.Array, *, target: Target | str | None = None,
            vvl: int | None = None) -> jax.Array:
     """Periodic streaming of ``(19, X, Y, Z)``: f_q(x) ← f_q(x - c_q)."""
     gs = dist.shape[1:]
     lat = Lattice(gs)
-    out = launch_stencil(
-        stream_site_kernel, lat, [dist.reshape(NVEL, lat.nsites)],
-        stencil=STENCIL_D3Q19_PULL, out_ncomp=NVEL, backend=backend, vvl=vvl)
+    out = tdp_launch(STREAM_SPEC, as_target(target, vvl=vvl),
+                     dist.reshape(NVEL, lat.nsites), lattice=lat)
     return out.reshape(NVEL, *gs)
 
 
@@ -196,28 +272,26 @@ def _extend_x(arr: jax.Array, axis_name: str, width: int) -> jax.Array:
 
 
 def gradients_sharded(phi: jax.Array, axis_name: str, *,
-                      backend: str = "xla", vvl: int | None = None
+                      target: Target | str | None = None,
+                      vvl: int | None = None
                       ) -> tuple[jax.Array, jax.Array]:
     """Sharded version of :func:`gradients`; ``phi`` is the local X-slab."""
     ext = _extend_x(phi[None], axis_name, 1)           # (1, Xl+2, Y, Z)
     lat = Lattice(phi.shape)
-    grad, lap = launch_stencil(
-        grad6_site_kernel, lat, [ext.reshape(1, -1)],
-        stencil=STENCIL_GRAD_6PT, out_ncomp=(3, 1), backend=backend,
-        vvl=vvl, halo=(1, 0, 0))
+    grad, lap = tdp_launch(GRAD6_SPEC, as_target(target, vvl=vvl),
+                           ext.reshape(1, -1), lattice=lat, halo=(1, 0, 0))
     return grad.reshape(3, *phi.shape), lap.reshape(phi.shape)
 
 
 def stream_sharded(dist: jax.Array, axis_name: str, *,
-                   backend: str = "xla", vvl: int | None = None) -> jax.Array:
+                   target: Target | str | None = None,
+                   vvl: int | None = None) -> jax.Array:
     """Sharded streaming of the local slab ``(19, Xl, Y, Z)``."""
     ext = _extend_x(dist, axis_name, 1)                # (19, Xl+2, Y, Z)
     gs = dist.shape[1:]
     lat = Lattice(gs)
-    out = launch_stencil(
-        stream_site_kernel, lat, [ext.reshape(NVEL, -1)],
-        stencil=STENCIL_D3Q19_PULL, out_ncomp=NVEL, backend=backend,
-        vvl=vvl, halo=(1, 0, 0))
+    out = tdp_launch(STREAM_SPEC, as_target(target, vvl=vvl),
+                     ext.reshape(NVEL, -1), lattice=lat, halo=(1, 0, 0))
     return out.reshape(NVEL, *gs)
 
 

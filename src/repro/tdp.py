@@ -1,0 +1,85 @@
+"""The paper-facing targetDP API surface: ``from repro import tdp``.
+
+One kernel body, one launch syntax, retargeted by swapping the
+:class:`Target` descriptor — the paper's single-source contract as a
+module namespace::
+
+    from repro import tdp
+
+    @tdp.kernel(fields=[tdp.field(3)], out=3)
+    def scale(x, a=1.0):
+        return a * x
+
+    y = tdp.launch(scale, tdp.Target("pallas", vvl=256), x, a=2.0)
+
+Paper macro → API mapping (full table in docs/targetdp_api.md):
+
+==================  =====================================================
+paper               here
+==================  =====================================================
+``TARGET_ENTRY``    ``@tdp.kernel`` (or :func:`site_kernel` legacy form)
+``TARGET_LAUNCH``   :func:`tdp.launch` — ``launch(spec, target, *arrays)``
+``TARGET_TLP``      the executor's chunk loop (vmap / pallas grid)
+``TARGET_ILP``      the trailing VVL axis, ``Target.vvl`` tunes it
+``TARGET_CONST``    :class:`TargetConst` / launch ``**consts``
+C-vs-CUDA switch    :class:`Target` + :func:`register_executor`
+==================  =====================================================
+"""
+from repro.core.target import (  # noqa: F401
+    Target,
+    as_target,
+    default_vvl,
+    set_default_vvl,
+)
+from repro.core.spec import (  # noqa: F401
+    FieldSpec,
+    KernelSpec,
+    field,
+    kernel,
+)
+from repro.core.registry import (  # noqa: F401
+    get_executor,
+    list_executors,
+    register_executor,
+    registry_version,
+    unregister_executor,
+)
+from repro.core.api import (  # noqa: F401
+    LaunchPlan,
+    gather_neighbors,
+    launch,
+    pad_sites,
+    xla_executor,
+)
+from repro.core.execute import reduce, site_kernel  # noqa: F401
+from repro.core.lattice import (  # noqa: F401
+    D3Q19_VELOCITIES,
+    Lattice,
+    Stencil,
+    STENCIL_D3Q19_PULL,
+    STENCIL_GRAD_6PT,
+    STENCIL_GRAD_19PT,
+    token_lattice,
+)
+from repro.core.memory import (  # noqa: F401
+    TargetConst,
+    copy_constant_to_target,
+    copy_from_target,
+    copy_to_target,
+    sync_target,
+    target_free,
+    target_malloc,
+)
+
+__all__ = [
+    "Target", "as_target", "default_vvl", "set_default_vvl",
+    "FieldSpec", "KernelSpec", "field", "kernel",
+    "register_executor", "unregister_executor", "get_executor",
+    "list_executors", "registry_version",
+    "launch", "LaunchPlan", "xla_executor", "gather_neighbors", "pad_sites",
+    "reduce", "site_kernel",
+    "Lattice", "token_lattice", "Stencil", "D3Q19_VELOCITIES",
+    "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",
+    "TargetConst", "copy_constant_to_target", "copy_to_target",
+    "copy_from_target", "sync_target", "target_free", "target_malloc",
+]

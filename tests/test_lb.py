@@ -109,6 +109,49 @@ class TestFusedStep:
         np.testing.assert_allclose(np.asarray(ua.g), np.asarray(ub.g),
                                    rtol=2e-4, atol=2e-5)
 
+    def test_two_launch_matches_one_launch_trajectory(self):
+        """ROADMAP stencil-memory stage (a): the two-launch step (streamed-φ
+        1-component intermediate instead of the 57-offset g gather) keeps
+        the identical accumulation order — trajectories match bit-for-bit
+        with the one-launch fused path."""
+        p = LBParams(A=0.125, B=0.125, kappa=0.02)
+        a = BinaryFluidSim((16, 16, 16), params=p, fused="one_launch")
+        b = BinaryFluidSim((16, 16, 16), params=p, fused="two_launch")
+        st0 = a.init_spinodal(seed=3, noise=0.05)
+        ua = a.step(st0, 10)
+        ub = b.step(st0, 10)
+        np.testing.assert_array_equal(np.asarray(ua.f), np.asarray(ub.f))
+        np.testing.assert_array_equal(np.asarray(ua.g), np.asarray(ub.g))
+
+    def test_two_launch_matches_unfused_trajectory(self):
+        p = LBParams(A=0.125, B=0.125, kappa=0.02)
+        a = BinaryFluidSim((16, 16, 16), params=p)
+        b = BinaryFluidSim((16, 16, 16), params=p, fused="two_launch")
+        st0 = a.init_spinodal(seed=3, noise=0.05)
+        ua = a.step(st0, 10)
+        ub = b.step(st0, 10)
+        np.testing.assert_allclose(np.asarray(ua.f), np.asarray(ub.f),
+                                   rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(ua.g), np.asarray(ub.g),
+                                   rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+    def test_two_launch_conserves(self, backend):
+        sim = BinaryFluidSim((8, 8, 8), backend=backend, vvl=64,
+                             fused="two_launch")
+        st = sim.init_spinodal(seed=1, noise=0.05)
+        obs0 = sim.observables(st)
+        st = sim.step(st, 10)
+        obs1 = sim.observables(st)
+        assert not obs1["nan"]
+        np.testing.assert_allclose(obs1["mass"], obs0["mass"], rtol=1e-5)
+        np.testing.assert_allclose(obs1["phi_total"], obs0["phi_total"],
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_fused_mode_validation(self):
+        with pytest.raises(ValueError, match="fused"):
+            BinaryFluidSim((8, 8, 8), fused="three_launch")
+
     def test_fused_scanned_matches_stepped(self):
         sim = BinaryFluidSim((8, 8, 8), fused=True)
         st = sim.init_spinodal(seed=4)
