@@ -24,13 +24,20 @@ Wall-times here are CPU numbers (this container); they demonstrate the
 *tuning structure* (relative effects), while the TPU roofline lives in
 benchmarks/roofline.py (static analysis of the dry-run artifacts).
 
-Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]
+[--only a,b,...] [--json]``
+
+``--json`` additionally writes one machine-readable
+``BENCH_<name>.json`` per benchmark that ran (median/min wall times,
+grid size, executor per variant) under ``--out`` — the cross-PR perf
+trajectory; the nightly CI lane uploads them as artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -39,8 +46,13 @@ import numpy as np
 
 RESULTS = {}
 
+#: per-bench machine-readable records (written by --json): name →
+#: {"grid": ..., "variants": {label: {"median_s", "min_s", "executor"}}}
+BENCH_RECORDS = {}
 
-def _time(fn, *args, reps=5, warmup=2):
+
+def _time_stats(fn, *args, reps=5, warmup=2):
+    """{"median_s", "min_s"} over ``reps`` timed calls."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -48,7 +60,11 @@ def _time(fn, *args, reps=5, warmup=2):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return {"median_s": float(np.median(ts)), "min_s": float(np.min(ts))}
+
+
+def _time(fn, *args, reps=5, warmup=2):
+    return _time_stats(fn, *args, reps=reps, warmup=warmup)["median_s"]
 
 
 def _table(title, rows, headers):
@@ -112,6 +128,12 @@ def bench_fig1(quick=False):
     RESULTS["fig1"] = {"grid": grid, "t_original_s": t_orig,
                        "best": {k: {"vvl": v[0], "t_s": v[1]}
                                 for k, v in best.items()}}
+    BENCH_RECORDS["fig1"] = {
+        "grid": list(grid),
+        "variants": {"original_aos": {"median_s": t_orig, "executor": "xla"},
+                     **{f"targetdp_{k}": {"median_s": v[1], "executor": k,
+                                          "vvl": v[0]}
+                        for k, v in best.items()}}}
     return _table(
         f"Fig. 1 — binary collision, {grid} lattice ({n} sites)",
         rows, ["implementation", "VVL", "ms/step", "Msites/s", "speedup"])
@@ -130,6 +152,9 @@ def bench_vvl(quick=False):
     rows = [(v, f"{t*1e3:.2f}", f"{t/tmin:.2f}×")
             for v, t in sorted(times.items())]
     RESULTS["vvl_curve"] = {str(k): v for k, v in times.items()}
+    BENCH_RECORDS["vvl"] = {
+        "variants": {f"vvl{v}": {"median_s": t, "executor": "xla", "vvl": v}
+                     for v, t in sorted(times.items())}}
     return _table("VVL tuning curve (xla backend, paper §IV methodology)",
                   rows, ["VVL", "ms/step", "vs best"])
 
@@ -169,6 +194,10 @@ def bench_masked_copy(quick=False):
                      f"{wire/LINK*1e3:.2f}", f"{tm*1e3:.2f}",
                      f"{full_bytes/wire:.1f}×"))
     RESULTS["masked_copy"] = {"t_full_s": t_full, "full_bytes": full_bytes}
+    BENCH_RECORDS["masked_copy"] = {
+        "grid": [side] * 3,
+        "variants": {"full": {"median_s": t_full, "bytes": full_bytes,
+                              "executor": "host"}}}
     return _table(
         f"Masked (compressed) transfers, {side}³ × 19 comp (§III-B)",
         rows, ["transfer", "subset", "wire MiB", "link ms @16GB/s",
@@ -180,6 +209,7 @@ def bench_masked_copy(quick=False):
 # ---------------------------------------------------------------------------
 
 def bench_fused_step(quick=False):
+    from repro import tdp
     from repro.lb.params import LBParams
     from repro.lb.sim import BinaryFluidSim
 
@@ -190,34 +220,59 @@ def bench_fused_step(quick=False):
     # Time the jitted hot-loop body of each regime: the whole unfused
     # timestep (moments → stencil → collide → stream, 4 launches) vs the
     # fused stencil launch(es) that replace it — one_launch (radius-2
-    # composed gather) and two_launch (streamed-φ intermediate, the
-    # gather-footprint fix).
+    # composed gather), two_launch (streamed-φ intermediate, gather stage
+    # (a)) and the gather-free pallas_windowed executor (stage (b); runs
+    # in interpret mode on this CPU container, so its wall time measures
+    # the Pallas *interpreter*, not the kernel — the claim it carries is
+    # the memory structure, reported as est. HBM bytes).
+    wt = tdp.Target("pallas_windowed", interpret=True)
     sim_u = BinaryFluidSim(grid, params=p)
     sim_f = BinaryFluidSim(grid, params=p, fused="one_launch")
     sim_f2 = BinaryFluidSim(grid, params=p, fused="two_launch")
+    sim_w = BinaryFluidSim(grid, params=p, fused="one_launch", target=wt)
     st = sim_u.init_spinodal(seed=0, noise=0.05)
     wf, wg = sim_f._collide_fn(st.f, st.g)       # pre-stream fused state
 
-    rows, rec = [], {"grid": grid, "variants": {}}
+    from repro.core import Lattice, launch_plan
+    from repro.lb.stencil import FUSED_SPEC
+    lat = Lattice(grid)
+    hbm = {
+        "fused": launch_plan(FUSED_SPEC, tdp.Target("xla"),
+                             lattice=lat).hbm_bytes_estimate(),
+        "fused_windowed": launch_plan(FUSED_SPEC, wt,
+                                      lattice=lat).hbm_bytes_estimate(),
+    }
+
+    rows, rec = [], {"grid": list(grid), "variants": {}}
     base_t = None
-    for label, key, fn, args in (
-        ("unfused pipeline", "unfused", sim_u._step_fn, (st.f, st.g)),
-        ("fused (one launch)", "fused", sim_f._fused_fn, (wf, wg)),
-        ("fused (two launches, φ intermediate)", "fused_two",
+    for label, key, executor, fn, args in (
+        ("unfused pipeline", "unfused", "xla", sim_u._step_fn,
+         (st.f, st.g)),
+        ("fused (one launch)", "fused", "xla", sim_f._fused_fn, (wf, wg)),
+        ("fused (two launches, φ intermediate)", "fused_two", "xla",
          sim_f2._fused_fn, (wf, wg)),
+        ("fused (windowed, gather-free, interpret)", "fused_windowed",
+         "pallas_windowed", sim_w._fused_fn, (wf, wg)),
     ):
-        t = _time(fn, *args)
+        ts = _time_stats(fn, *args, reps=3 if key == "fused_windowed"
+                         else 5)
+        t = ts["median_s"]
         per_site_ns = t / n * 1e9
-        rec["variants"][key] = {"t_s": t, "ns_per_site_step": per_site_ns}
+        rec["variants"][key] = {
+            "t_s": t, "ns_per_site_step": per_site_ns, "executor": executor,
+            **ts, **({"hbm_bytes_estimate": hbm[key]} if key in hbm else {}),
+        }
         if base_t is None:
             base_t = t
         rows.append((label, f"{t*1e3:.2f}", f"{per_site_ns:.1f}",
-                     f"{n/t/1e6:.1f}", f"{base_t/t:.2f}×"))
+                     f"{n/t/1e6:.1f}", f"{base_t/t:.2f}×",
+                     f"{hbm[key]/2**20:.1f}" if key in hbm else "-"))
     RESULTS["fused_step"] = rec
+    BENCH_RECORDS["fused_step"] = rec
     return _table(
         f"Fused vs unfused LB timestep, {grid} lattice ({n} sites)",
         rows, ["implementation", "ms/step", "ns/site·step", "Msites/s",
-               "speedup"])
+               "speedup", "est. gather/window HBM MiB"])
 
 
 # ---------------------------------------------------------------------------
@@ -249,6 +304,11 @@ def bench_lm_step(quick=False):
             rows.append((name, backend, vvl, f"{t*1e3:.3f}",
                          f"{tokens/t/1e6:.1f}"))
     RESULTS["lm_pointwise"] = True
+    BENCH_RECORDS["lm_step"] = {
+        "tokens": tokens,
+        "variants": {f"{r[0]}_{r[1]}": {"median_s": float(r[3]) / 1e3,
+                                        "executor": r[1], "vvl": r[2]}
+                     for r in rows}}
     return _table(
         f"Token-lattice pointwise kernels ({tokens} tokens × d={d})",
         rows, ["kernel", "backend", "VVL", "ms", "Mtok/s"])
@@ -268,15 +328,27 @@ BENCHES = {
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help=f"comma-separated subset of {sorted(BENCHES)}")
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--json", action="store_true",
+                    help="also write one BENCH_<name>.json per bench run "
+                         "(machine-readable perf trajectory) under --out")
     args = ap.parse_args(argv)
 
-    texts = []
-    for name, fn in BENCHES.items():
-        if args.only and name != args.only:
-            continue
-        texts.append(fn(args.quick))
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(selected) - set(BENCHES))
+        if unknown:
+            print(f"[benchmarks] unknown bench name(s): "
+                  f"{', '.join(unknown)}; available: "
+                  f"{', '.join(sorted(BENCHES))}", file=sys.stderr)
+            return 2
+    else:
+        selected = list(BENCHES)
+
+    texts = [fn(args.quick) for name, fn in BENCHES.items()
+             if name in selected]
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "bench_results.json"), "w") as fh:
@@ -285,6 +357,13 @@ def main(argv=None):
                   default=str)
     with open(os.path.join(args.out, "bench_tables.md"), "w") as fh:
         fh.write("\n".join(texts))
+    if args.json:
+        for name, rec in BENCH_RECORDS.items():
+            path = os.path.join(args.out, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump({"bench": name, "quick": args.quick, **rec}, fh,
+                          indent=1, default=str)
+            print(f"[benchmarks] wrote {path}")
     print(f"\n[benchmarks] tables + JSON written to {args.out}/")
     return 0
 

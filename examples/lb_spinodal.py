@@ -22,7 +22,11 @@ def main():
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--chunk", type=int, default=50)
     ap.add_argument("--backend", default="xla",
-                    choices=("xla", "pallas", "pallas_interpret"))
+                    choices=("xla", "pallas", "pallas_interpret",
+                             "pallas_windowed", "pallas_windowed_interpret"),
+                    help="pallas_windowed* is stencil-only (gather-free "
+                         "windowed executor) — pair it with --fused; the "
+                         "sim's pointwise collision falls back to xla")
     ap.add_argument("--vvl", type=int, default=128)
     ap.add_argument("--fused", nargs="?", const="one_launch", default=False,
                     choices=("one_launch", "two_launch"),

@@ -44,13 +44,21 @@ from .memory import (
 from .target import Target, as_target, default_vvl, set_default_vvl
 from .spec import FieldSpec, KernelSpec, kernel
 from .registry import (
+    executor_wants,
     get_executor,
+    get_executor_entry,
     list_executors,
     register_executor,
     registry_version,
     unregister_executor,
 )
-from .api import LaunchPlan, gather_neighbors, pad_sites
+from .api import (
+    LaunchPlan,
+    gather_neighbors,
+    halo_extend,
+    launch_plan,
+    pad_sites,
+)
 from .api import launch as tdp_launch
 from .execute import (
     launch,
@@ -70,7 +78,9 @@ __all__ = [
     "site_kernel", "launch", "reduce", "default_vvl", "set_default_vvl",
     # declarative API
     "Target", "as_target", "FieldSpec", "KernelSpec", "kernel",
-    "tdp_launch", "LaunchPlan", "gather_neighbors", "pad_sites",
+    "tdp_launch", "launch_plan", "LaunchPlan", "gather_neighbors",
+    "halo_extend", "pad_sites",
     "register_executor", "unregister_executor", "get_executor",
-    "list_executors", "registry_version",
+    "get_executor_entry", "executor_wants", "list_executors",
+    "registry_version",
 ]

@@ -12,17 +12,23 @@ single shared path every launch takes:
    into the cache key;
 3. **plan caching** — compiled closures keyed on
    ``(spec, target, resolved VVL, lattice, halo, out, consts, registry
-   version)``, so a mutated default VVL or a re-registered executor can
-   never hit a stale closure;
-4. **neighbour gathering** — the periodic-roll / ghost-window prologue,
-   shared by every executor;
+   version)``, so a mutated default VVL or a re-registered executor
+   (even one re-registered with a different capability) can never hit a
+   stale closure;
+4. **the neighbour prologue** — *capability-aware*: executors declaring
+   ``wants="gathered"`` (the default) get the periodic-roll /
+   ghost-window gather into ``(noffsets, ncomp, nsites)`` stacks;
+   executors declaring ``wants="halo_extended"`` get each stencil field
+   **once**, as a halo-extended ``(ncomp, *ext_shape)`` grid
+   (:func:`halo_extend`) — no ``noffsets×`` re-materialisation in HBM;
 5. **dispatch** — through the executor registry
    (:mod:`repro.core.registry`).
 
 Built-in executors registered here: ``"xla"`` (vmap over VVL chunks — the
 paper's C build), ``"pallas"`` and ``"pallas_interpret"`` (explicit VMEM
-tiling — the CUDA build; imported lazily so the core stays importable
-without Pallas).
+tiling — the CUDA build), and ``"pallas_windowed"`` (gather-free x-plane
+windowed VMEM loads — ROADMAP stencil-memory stage (b); Pallas modules
+imported lazily so the core stays importable without Pallas).
 """
 from __future__ import annotations
 
@@ -34,7 +40,11 @@ import jax.numpy as jnp
 
 from .lattice import Lattice, Stencil
 from .memory import TargetConst
-from .registry import get_executor, register_executor, registry_version
+from .registry import (
+    get_executor_entry,
+    register_executor,
+    registry_version,
+)
 from .spec import FieldSpec, KernelSpec
 from .target import Target, as_target
 
@@ -89,6 +99,35 @@ def gather_neighbors(x: jax.Array, shape: tuple[int, ...],
     return jnp.stack(planes)
 
 
+def halo_extend(x: jax.Array, shape: tuple[int, ...],
+                halo: tuple[int, ...], stencil: Stencil) -> jax.Array:
+    """``(ncomp, nsites_ext)`` → halo-extended grid ``(ncomp, *ext)`` with
+    exactly ``stencil.radius_per_dim()`` ghost layers per dimension.
+
+    The gather-free prologue for ``wants="halo_extended"`` executors
+    (:mod:`repro.core.registry`): instead of rolling out one copy of the
+    field per stencil offset, the field is padded **once** so every
+    neighbour of every interior site is addressable by a static in-kernel
+    shift.  Dimensions with ``halo[d] == 0`` wrap periodically
+    (``jnp.pad(mode="wrap")``); dimensions with ``halo[d] > 0`` reuse the
+    caller-supplied ghost planes, trimmed down to the stencil radius.
+    """
+    r = stencil.radius_per_dim()
+    ext_in = tuple(s + 2 * h for s, h in zip(shape, halo))
+    g = x.reshape(x.shape[0], *ext_in)
+    widths = [(0, 0)]
+    for d, (h, rd, s) in enumerate(zip(halo, r, shape)):
+        if h:
+            if h > rd:       # caller ghost wider than needed: trim
+                g = jax.lax.slice_in_dim(g, h - rd, h + rd + s, axis=d + 1)
+            widths.append((0, 0))
+        else:
+            widths.append((rd, rd))
+    if any(w != (0, 0) for w in widths):
+        g = jnp.pad(g, widths, mode="wrap")
+    return g
+
+
 def _unwrap_consts(consts: Mapping[str, object]) -> dict:
     out = {}
     for k, v in consts.items():
@@ -129,15 +168,27 @@ class LaunchPlan:
     """Everything an executor needs to map one kernel over site chunks.
 
     Built (and cached) by :func:`launch`; executors are called as
-    ``executor(plan, gathered)`` where ``gathered`` holds one array per
-    field — ``(ncomp, n)`` pointwise or ``(noffsets, ncomp, n)`` stencil.
+    ``executor(plan, prepared)`` where ``prepared`` holds one array per
+    field — shape depends on the executor's declared capability
+    (``plan.wants``): ``"gathered"`` stencil fields are
+    ``(noffsets, ncomp, n)`` neighbour stacks, ``"halo_extended"`` ones
+    are ``(ncomp, *ext_shape)`` grids; pointwise fields are ``(ncomp, n)``
+    either way.
+
+    ``shape``/``halo``/``stencils`` carry the launch geometry (``None`` /
+    all-``None`` for pure pointwise launches), so capability-declaring
+    executors can resolve neighbour offsets themselves and so the
+    :meth:`vmem_bytes_estimate` / :meth:`hbm_bytes_estimate` memory
+    models are derivable from the plan alone (see docs/stencil.md).
     """
 
     __slots__ = ("kernel", "name", "vvl", "out_ncomp", "consts",
-                 "with_site_index", "interpret", "target")
+                 "with_site_index", "interpret", "target", "shape", "halo",
+                 "stencils", "field_ncomp", "wants")
 
     def __init__(self, *, kernel, name, vvl, out_ncomp, consts,
-                 with_site_index, interpret, target):
+                 with_site_index, interpret, target, shape=None, halo=None,
+                 stencils=None, field_ncomp=None, wants="gathered"):
         self.kernel = kernel
         self.name = name
         self.vvl = vvl
@@ -146,10 +197,87 @@ class LaunchPlan:
         self.with_site_index = with_site_index
         self.interpret = interpret
         self.target = target
+        self.shape = shape
+        self.halo = halo
+        self.stencils = tuple(stencils) if stencils is not None else None
+        self.field_ncomp = (tuple(field_ncomp)
+                            if field_ncomp is not None else None)
+        self.wants = wants
+
+    # -- memory models ----------------------------------------------------
+    #
+    # Per-field rows: a gathered stencil field contributes noffsets·ncomp
+    # rows (the HBM-materialised neighbour stack), a halo-extended one
+    # ncomp rows over the (slightly larger) extended extent — the
+    # ``noffsets×`` factor is exactly what ``wants="halo_extended"``
+    # eliminates.  Fields with undeclared ncomp count as 1.
+
+    def _fields(self):
+        if self.field_ncomp is None:
+            raise ValueError(
+                f"plan {self.name!r} carries no field metadata; build it "
+                f"through tdp.launch / tdp.launch_plan")
+        stencils = self.stencils or (None,) * len(self.field_ncomp)
+        return tuple(zip(self.field_ncomp, stencils))
+
+    def _ext_shape(self, stencil):
+        r = stencil.radius_per_dim()
+        return tuple(s + 2 * rd for s, rd in zip(self.shape, r))
+
+    def vmem_bytes_estimate(self, itemsize: int = 4) -> int:
+        """Fast-memory footprint of one grid step (inputs + outputs).
+
+        ``"gathered"`` executors hold ``noffsets_i · ncomp_i · VVL`` input
+        rows per stencil field; ``"halo_extended"`` ones hold a
+        ``(plane_block + 2·radius)``-plane window of the extended array —
+        no ``noffsets`` factor (docs/stencil.md, "VMEM footprint rule").
+        """
+        out_rows = sum(self.out_ncomp)
+        if self.wants != "halo_extended":
+            in_rows = sum((s.noffsets if s is not None else 1) * c
+                          for c, s in self._fields())
+            return (in_rows + out_rows) * self.vvl * itemsize
+        if self.shape is None:
+            raise ValueError("halo_extended estimates need a lattice shape")
+        p = int(self.target.tune("plane_block", 1))
+        rest = _prod_shape(self.shape[1:]) if len(self.shape) > 1 else 1
+        total = out_rows * p * rest
+        for c, s in self._fields():
+            if s is None:
+                total += c * p * rest
+            else:
+                ext = self._ext_shape(s)
+                window = p + 2 * s.radius_per_dim()[0]
+                total += c * window * _prod_shape(ext[1:])
+        return total * itemsize
+
+    def hbm_bytes_estimate(self, itemsize: int = 4) -> int:
+        """Main-memory footprint of the executor's prepared operands plus
+        outputs (excluding the caller's own input arrays).
+
+        The gathered path materialises ``noffsets_i`` copies of every
+        stencil field (the ~noffsets× amplification this framework's
+        windowed executor exists to remove); the halo-extended path pays
+        only the ghost-layer overhead ``prod(shape + 2·radius) /
+        prod(shape)`` — independent of ``noffsets``.
+        """
+        if self.shape is None:
+            raise ValueError("hbm_bytes_estimate needs a lattice shape")
+        n = _prod_shape(self.shape)
+        total = sum(self.out_ncomp) * n
+        for c, s in self._fields():
+            if s is None:
+                total += c * n
+            elif self.wants == "halo_extended":
+                total += c * _prod_shape(self._ext_shape(s))
+            else:
+                total += c * s.noffsets * n
+        return total * itemsize
 
     def __repr__(self):
         return (f"LaunchPlan({self.name!r}, executor={self.target.executor!r}"
-                f", vvl={self.vvl}, out={self.out_ncomp})")
+                f", vvl={self.vvl}, out={self.out_ncomp}, "
+                f"wants={self.wants!r})")
 
 
 # ---------------------------------------------------------------------------
@@ -237,25 +365,46 @@ def _validate_arrays(spec: KernelSpec, arrays, lattice, halo):
 # the launch itself
 # ---------------------------------------------------------------------------
 
+def _make_plan(spec: KernelSpec, target: Target, vvl: int,
+               out_ncomp: tuple[int, ...], lattice: Lattice | None,
+               halo: tuple[int, ...] | None, consts: dict,
+               wants: str) -> LaunchPlan:
+    return LaunchPlan(
+        kernel=spec.fn, name=spec.name, vvl=vvl, out_ncomp=out_ncomp,
+        consts=consts, with_site_index=spec.site_index,
+        interpret=target.interpret, target=target,
+        shape=lattice.shape if lattice is not None else None, halo=halo,
+        stencils=spec.stencils,
+        field_ncomp=tuple(fs.ncomp if fs.ncomp is not None else 1
+                          for fs in spec.fields),
+        wants=wants)
+
+
 @functools.lru_cache(maxsize=4096)
 def _build_plan(spec: KernelSpec, target: Target, vvl: int,
                 out_ncomp: tuple[int, ...], lattice: Lattice | None,
                 halo: tuple[int, ...] | None, const_key, _registry_version):
     consts = _unwrap_consts(dict(const_key))
-    executor = get_executor(target.executor)
-    plan = LaunchPlan(kernel=spec.fn, name=spec.name, vvl=vvl,
-                      out_ncomp=out_ncomp, consts=consts,
-                      with_site_index=spec.site_index,
-                      interpret=target.interpret, target=target)
+    entry = get_executor_entry(target.executor)
+    executor = entry.fn
+    plan = _make_plan(spec, target, vvl, out_ncomp, lattice, halo, consts,
+                      entry.wants)
     stencils = spec.stencils
     shape = lattice.shape if lattice is not None else None
     n_out = len(out_ncomp)
 
+    if entry.wants == "halo_extended":
+        # Capability-aware prologue: pad each stencil field once instead
+        # of rolling out one HBM copy per offset.
+        def prepare(x, s):
+            return x if s is None else halo_extend(x, shape, halo, s)
+    else:
+        def prepare(x, s):
+            return x if s is None else gather_neighbors(x, shape, halo, s)
+
     def run(*arrays):
-        gathered = tuple(
-            x if s is None else gather_neighbors(x, shape, halo, s)
-            for x, s in zip(arrays, stencils))
-        outs = executor(plan, gathered)
+        prepared = tuple(prepare(x, s) for x, s in zip(arrays, stencils))
+        outs = executor(plan, prepared)
         outs = (outs,) if not isinstance(outs, (tuple, list)) else tuple(outs)
         if len(outs) != n_out:
             raise ValueError(
@@ -301,7 +450,14 @@ def launch(spec: KernelSpec, target: Target | str | None = None, /,
             f"tdp.KernelSpec (the legacy launch(kernel, lattice, inputs) "
             f"signature lives in repro.core.launch)")
     tgt = as_target(target)
-    get_executor(tgt.executor)  # fail fast on unknown executor names
+    # fail fast on unknown executor names / capability mismatches
+    entry = get_executor_entry(tgt.executor)
+    if entry.wants == "halo_extended" and not spec.has_stencil:
+        raise ValueError(
+            f"executor {tgt.executor!r} declares wants='halo_extended' "
+            f"(gather-free stencil windows) but kernel {spec.name!r} has "
+            f"no stencil-carrying fields; use a 'gathered' executor such "
+            f"as 'xla' or 'pallas' for pointwise kernels")
     arrays = tuple(arrays)
     if not arrays:
         raise ValueError("launch requires at least one input field")
@@ -320,6 +476,49 @@ def launch(spec: KernelSpec, target: Target | str | None = None, /,
     fn = _build_plan(spec, tgt, vvl, out_ncomp, lattice, h, key,
                      registry_version())
     return fn(*arrays)
+
+
+def launch_plan(spec: KernelSpec, target: Target | str | None = None, *,
+                lattice: Lattice | None = None,
+                halo: int | Sequence[int] | None = None,
+                consts: Mapping[str, object] | None = None) -> LaunchPlan:
+    """Build (without compiling or launching) the :class:`LaunchPlan` a
+    launch of ``spec`` under ``target`` would dispatch with — the
+    introspection surface for the :meth:`LaunchPlan.vmem_bytes_estimate`
+    and :meth:`LaunchPlan.hbm_bytes_estimate` memory models.
+
+    Mirrors :func:`launch`'s resolution (executor capability, VVL,
+    normalised halo) but takes no arrays; geometry checks that need them
+    are skipped.
+    """
+    if not isinstance(spec, KernelSpec):
+        raise TypeError(f"launch_plan expects a KernelSpec, got "
+                        f"{type(spec).__name__}")
+    tgt = as_target(target)
+    entry = get_executor_entry(tgt.executor)
+    if entry.wants == "halo_extended" and not spec.has_stencil:
+        raise ValueError(
+            f"executor {tgt.executor!r} declares wants='halo_extended' but "
+            f"kernel {spec.name!r} has no stencil-carrying fields")
+    if spec.has_stencil and lattice is None:
+        raise ValueError(f"kernel {spec.name!r} has stencil input(s); "
+                         f"launch_plan needs the lattice")
+    h = (_normalize_halo(halo, lattice.ndim)
+         if lattice is not None and spec.has_stencil else None)
+    if spec.out is not None:
+        out_ncomp = spec.out
+    elif spec.fields[0].ncomp is not None:
+        # matches launch: out defaults to input 0's component count, and
+        # validation pins the array to the declared ncomp
+        out_ncomp = (spec.fields[0].ncomp,)
+    else:
+        raise ValueError(
+            f"kernel {spec.name!r} declares neither out= nor an ncomp for "
+            f"field 0 — its output count is only known at launch time, so "
+            f"launch_plan cannot build a faithful plan")
+    return _make_plan(spec, tgt, tgt.resolve_vvl(), tuple(out_ncomp),
+                      lattice, h, _unwrap_consts(dict(consts or {})),
+                      entry.wants)
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +557,13 @@ def _pallas_executor(plan: LaunchPlan, gathered):
     return pallas_execute(plan, gathered)
 
 
+def _pallas_windowed_executor(plan: LaunchPlan, extended):
+    from repro.kernels.tdp_windowed import windowed_execute
+    return windowed_execute(plan, extended)
+
+
 register_executor("xla", xla_executor)
 register_executor("pallas", _pallas_executor)
 register_executor("pallas_interpret", _pallas_executor)
+register_executor("pallas_windowed", _pallas_windowed_executor,
+                  wants="halo_extended")

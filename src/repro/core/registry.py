@@ -2,40 +2,69 @@
 
 An *executor* realises the paper's ``TARGET_TLP``/``TARGET_ILP`` loops for
 one architecture.  The core launch path (validation, padding, const
-unwrapping, neighbour gathering, plan caching) is executor-independent;
-an executor only maps a prepared plan over pre-gathered site arrays:
+unwrapping, the neighbour prologue, plan caching) is executor-independent;
+an executor only maps a prepared plan over prepared site arrays:
 
-    def my_executor(plan, gathered):
+    def my_executor(plan, prepared):
         # plan:     repro.core.api.LaunchPlan (kernel, vvl, out_ncomp,
-        #           consts, with_site_index, interpret, target)
-        # gathered: one array per input field —
-        #           (ncomp, nsites_padded?) for pointwise fields,
-        #           (noffsets, ncomp, nsites) for stencil fields
+        #           consts, with_site_index, interpret, target, shape,
+        #           halo, stencils, wants, memory estimates)
+        # prepared: one array per input field.  What a stencil field looks
+        #           like depends on the executor's declared capability:
+        #             wants="gathered"       (default) — the shared gather
+        #               prologue ran: (noffsets, ncomp, nsites) neighbour
+        #               stack per stencil field, (ncomp, nsites) pointwise.
+        #             wants="halo_extended"  — no gather: each stencil
+        #               field arrives ONCE as a halo-extended grid
+        #               (ncomp, *ext_shape) with exactly
+        #               stencil.radius_per_dim() ghost layers per
+        #               dimension (periodic dims wrap-padded, sharded
+        #               dims trimmed from the caller's ghost planes);
+        #               the executor resolves offsets itself, in-kernel.
         # returns:  tuple of (ncomp_o, nsites) outputs, one per
         #           plan.out_ncomp entry (a bare array is accepted for
         #           single-output kernels)
         ...
 
-    register_executor("my_backend", my_executor)
+    register_executor("my_backend", my_executor)                 # gathered
+    register_executor("my_windowed", my_win, wants="halo_extended")
     tdp.launch(spec, Target("my_backend"), *arrays)
 
 Registering a new architecture is *one* ``register_executor`` call — the
-ROADMAP's windowed-block stencil executor lands this way, not as a third
-fork of launch logic.  Registration bumps an internal version that is part
-of the plan cache key, so re-registering a name can never serve a stale
-compiled closure.
+windowed-block stencil executor (``"pallas_windowed"``) lands this way,
+not as a fork of launch logic.  Registration bumps an internal version
+that is part of the plan cache key, so re-registering a name (even with a
+different capability) can never serve a stale compiled closure.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
-_EXECUTORS: dict[str, Callable] = {}
+#: Executor input capabilities: what the launch prologue prepares for each
+#: stencil-carrying field before dispatch.
+EXECUTOR_WANTS = ("gathered", "halo_extended")
+
+
+class ExecutorEntry(NamedTuple):
+    """One registry row: the executor callable plus its declared input
+    capability (see ``EXECUTOR_WANTS``)."""
+
+    fn: Callable
+    wants: str
+
+
+_EXECUTORS: dict[str, ExecutorEntry] = {}
 _VERSION = 0
 
 
-def register_executor(name: str, fn: Callable, *,
-                      overwrite: bool = False) -> None:
+def register_executor(name: str, fn: Callable, *, overwrite: bool = False,
+                      wants: str = "gathered") -> None:
     """Register ``fn`` as the executor behind ``Target(backend=name)``.
+
+    ``wants`` declares the input capability: ``"gathered"`` (default)
+    receives pre-gathered ``(noffsets, ncomp, nsites)`` neighbour stacks;
+    ``"halo_extended"`` suppresses the gather and receives each stencil
+    field once, as a halo-extended ``(ncomp, *ext_shape)`` grid.
 
     Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
     """
@@ -45,11 +74,14 @@ def register_executor(name: str, fn: Callable, *,
                          f"got {name!r}")
     if not callable(fn):
         raise TypeError(f"executor must be callable, got {fn!r}")
+    if wants not in EXECUTOR_WANTS:
+        raise ValueError(f"executor capability must be one of "
+                         f"{EXECUTOR_WANTS}, got {wants!r}")
     if name in _EXECUTORS and not overwrite:
         raise ValueError(
             f"executor {name!r} is already registered; pass overwrite=True "
             f"to replace it")
-    _EXECUTORS[name] = fn
+    _EXECUTORS[name] = ExecutorEntry(fn, wants)
     _VERSION += 1
 
 
@@ -63,12 +95,22 @@ def unregister_executor(name: str) -> None:
 
 
 def get_executor(name: str) -> Callable:
+    return get_executor_entry(name).fn
+
+
+def get_executor_entry(name: str) -> ExecutorEntry:
+    """The full registry row — callable plus declared capability."""
     try:
         return _EXECUTORS[name]
     except KeyError:
         raise ValueError(
             f"unknown executor {name!r}; registered executors: "
             f"{sorted(_EXECUTORS)}") from None
+
+
+def executor_wants(name: str) -> str:
+    """The declared input capability of a registered executor."""
+    return get_executor_entry(name).wants
 
 
 def list_executors() -> tuple[str, ...]:

@@ -148,6 +148,19 @@ class KernelSpec:
     def stencils(self) -> tuple[Stencil | None, ...]:
         return tuple(f.stencil for f in self.fields)
 
+    def max_radius_per_dim(self) -> tuple[int, ...]:
+        """Per-dimension maximum stencil radius over all fields — the
+        ghost-layer requirement of a launch of this spec (what a
+        ``wants="halo_extended"`` executor's window depth and a sharded
+        caller's halo exchange width must cover).  Raises on pointwise
+        specs (no stencil geometry to report)."""
+        radii = [f.stencil.radius_per_dim() for f in self.fields
+                 if f.stencil is not None]
+        if not radii:
+            raise ValueError(
+                f"kernel {self.name!r} has no stencil-carrying fields")
+        return tuple(max(r[d] for r in radii) for d in range(len(radii[0])))
+
     def __call__(self, *args, **kwargs):
         """A spec is callable as its body — handy for composing kernels."""
         return self.fn(*args, **kwargs)

@@ -59,18 +59,25 @@ class Target:
     ``vvl=`` kwarg plumbing).
 
     Args:
-      backend: executor name in the registry (``"xla"``, ``"pallas"``, or
-        any :func:`repro.core.register_executor`-registered name).  The
-        legacy spelling ``"pallas_interpret"`` canonicalises to
-        ``backend="pallas"`` + ``interpret=True``.
+      backend: executor name in the registry (``"xla"``, ``"pallas"``,
+        ``"pallas_windowed"``, or any
+        :func:`repro.core.register_executor`-registered name).  The
+        spellings ``"pallas_interpret"`` / ``"pallas_windowed_interpret"``
+        canonicalise to the base backend + ``interpret=True``.
       vvl: virtual vector length (ILP extent).  ``None`` → resolve the
-        process default at launch time.
+        process default at launch time.  (The windowed executor chunks by
+        x-planes, not VVL — see ``plane_block`` below.)
       interpret: run Pallas semantics on CPU (validation mode).
       mesh / shard_axis: optional sharding hints for mesh-aware callers
         (e.g. :class:`repro.lb.sim.BinaryFluidSim`); the core launch does
         not act on them, it only carries them.
-      tuning: executor/op-specific knobs (``block_f``, ``block_q``, ...),
-        stored as a sorted tuple of pairs so the Target stays hashable.
+      tuning: executor/op-specific knobs, stored as a sorted tuple of
+        pairs so the Target stays hashable.  Established keys:
+        ``block_f`` / ``block_q`` / ... (pointwise Pallas block sizes,
+        see :mod:`repro.kernels.ops`) and ``plane_block`` (the
+        ``pallas_windowed`` executor's TLP chunk: how many output
+        x-planes each grid step computes; its VMEM window depth is
+        ``plane_block + 2·radius`` planes).
     """
 
     backend: str = "xla"
@@ -84,8 +91,9 @@ class Target:
         if not isinstance(self.backend, str) or not self.backend:
             raise ValueError(f"backend must be a non-empty string, got "
                              f"{self.backend!r}")
-        if self.backend == "pallas_interpret":
-            object.__setattr__(self, "backend", "pallas")
+        if self.backend in ("pallas_interpret", "pallas_windowed_interpret"):
+            object.__setattr__(self, "backend",
+                               self.backend[:-len("_interpret")])
             object.__setattr__(self, "interpret", True)
         if self.vvl is not None:
             if int(self.vvl) <= 0:

@@ -10,6 +10,10 @@ kwarg, which coerces through the same helper).  Builtin executor names:
   * ``"xla"``              — pure-jnp oracle path (CPU, dry-run, debugging)
   * ``"pallas"``           — Pallas TPU kernels (the deployment target)
   * ``"pallas_interpret"`` — Pallas semantics executed on CPU (validation)
+  * ``"pallas_windowed"``  — gather-free windowed stencil executor
+    (*stencil launches only*: ops that dispatch through ``tdp.launch``
+    accept it — e.g. :func:`lb_fused_step` — while pointwise ops with
+    hand-written Pallas kernels take the three builtins above)
 
 Every wrapper takes the same arguments on every target — single source at
 the call site, exactly the paper's portability contract.  Per-op block

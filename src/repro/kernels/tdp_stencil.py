@@ -20,8 +20,12 @@ stencil input —
 which for the fused D3Q19 stream+collide launch (19·19 + 57·19 rows) caps
 VVL two binary orders below the pointwise collision kernel's sweet spot —
 the two-launch fused mode (``ops.lb_fused_step(mode="two_launch")``)
-exists to shrink exactly that stack.  :func:`vmem_bytes_estimate`
-computes the rule.
+shrinks that stack, and the gather-free ``"pallas_windowed"`` executor
+(:mod:`repro.kernels.tdp_windowed`, ``wants="halo_extended"``) eliminates
+it: no ``(noffsets, ncomp, nsites)`` stack is ever built, offsets resolve
+in-kernel from x-plane windows.  :func:`vmem_bytes_estimate` computes the
+gathered rule; :meth:`repro.core.api.LaunchPlan.vmem_bytes_estimate` /
+``hbm_bytes_estimate`` model both regimes.
 """
 from __future__ import annotations
 

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import Target, compat
+from repro.core import Target, compat, executor_wants
 from repro.kernels import ops
 from repro.kernels.lb_collision import NVEL, WEIGHTS
 from . import stencil
@@ -88,6 +88,26 @@ class BinaryFluidSim:
             if mesh is None:
                 mesh = target.mesh
         self.target = target
+        # Stencil-only executors (wants="halo_extended", e.g.
+        # pallas_windowed) cannot run the sim's pointwise launches
+        # (collision, moments); those fall back to the xla executor at
+        # the same VVL while every stencil launch keeps the requested
+        # target — the capability contract, applied per launch.
+        try:
+            stencil_only = executor_wants(target.executor) == "halo_extended"
+        except ValueError:
+            stencil_only = False    # custom executor registered later
+        if stencil_only and not fused:
+            # the unfused pipeline is pointwise-dominated (collision) and
+            # its stream/gradient launches run on the default executor —
+            # a stencil-only target would silently never execute
+            raise ValueError(
+                f"target executor {target.executor!r} is stencil-only "
+                f"(wants='halo_extended'); it only runs the fused stencil "
+                f"launches — pass fused='one_launch' or 'two_launch'")
+        self.pointwise_target = (target.with_(backend="xla",
+                                              interpret=False)
+                                 if stencil_only else target)
         self.backend = target.executor          # legacy introspection
         self.vvl = target.resolve_vvl()
         self.mesh = mesh
@@ -151,7 +171,7 @@ class BinaryFluidSim:
     # -- one timestep --------------------------------------------------------
 
     def _build_step(self):
-        params, target = self.params, self.target
+        params, target = self.params, self.pointwise_target
 
         def step_local(f, g):
             phi = g.sum(0)
@@ -187,6 +207,7 @@ class BinaryFluidSim:
         two_launch φ scalar.
         """
         params, target, mode = self.params, self.target, self.fused
+        pw_target = self.pointwise_target
         gs = self.grid_shape
         n = int(np.prod(gs))
 
@@ -200,7 +221,7 @@ class BinaryFluidSim:
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients(phi)
             return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=target)
+                                 params=params, target=pw_target)
 
         def stream_local(f, g):
             return stencil.stream(f), stencil.stream(g)
@@ -229,18 +250,22 @@ class BinaryFluidSim:
             phi = g.sum(0)
             gradphi, del2phi = stencil.gradients_sharded(phi, axis)
             return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=target)
+                                 params=params, target=pw_target)
 
         def stream_sharded(f, g):
             return (stencil.stream_sharded(f, axis),
                     stencil.stream_sharded(g, axis))
 
         spec = P(None, axis, None, None)
+        # pallas_call has no shard_map replication rule (0.4.x): drop the
+        # check when the fused launch dispatches to a Pallas executor.
+        check = self.target.executor == "xla" and \
+            self.pointwise_target.executor == "xla"
 
         def shmap(fn):
             return jax.jit(compat.shard_map(
                 fn, mesh=self.mesh, in_specs=(spec, spec),
-                out_specs=(spec, spec)))
+                out_specs=(spec, spec), check_vma=check))
 
         return shmap(collide_sharded), shmap(fused_sharded), \
             shmap(stream_sharded)

@@ -38,7 +38,9 @@ from repro.core.spec import (  # noqa: F401
     kernel,
 )
 from repro.core.registry import (  # noqa: F401
+    executor_wants,
     get_executor,
+    get_executor_entry,
     list_executors,
     register_executor,
     registry_version,
@@ -47,7 +49,9 @@ from repro.core.registry import (  # noqa: F401
 from repro.core.api import (  # noqa: F401
     LaunchPlan,
     gather_neighbors,
+    halo_extend,
     launch,
+    launch_plan,
     pad_sites,
     xla_executor,
 )
@@ -75,8 +79,10 @@ __all__ = [
     "Target", "as_target", "default_vvl", "set_default_vvl",
     "FieldSpec", "KernelSpec", "field", "kernel",
     "register_executor", "unregister_executor", "get_executor",
-    "list_executors", "registry_version",
-    "launch", "LaunchPlan", "xla_executor", "gather_neighbors", "pad_sites",
+    "get_executor_entry", "executor_wants", "list_executors",
+    "registry_version",
+    "launch", "launch_plan", "LaunchPlan", "xla_executor",
+    "gather_neighbors", "halo_extend", "pad_sites",
     "reduce", "site_kernel",
     "Lattice", "token_lattice", "Stencil", "D3Q19_VELOCITIES",
     "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",
