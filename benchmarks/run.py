@@ -15,7 +15,12 @@ Paper artefacts reproduced:
 * **Fused stream+collide** (`bench_fused_step`): the follow-up paper's
   (1609.01479) fusion claim — one stencil launch per LB timestep
   (stream → ∇φ → collide, no intermediate full-lattice arrays) vs the
-  unfused moment/stencil/collide/stream pipeline, per-site wall cost.
+  unfused moment/stencil/collide/stream pipeline, per-site wall cost;
+  plus the `tdp.Program` variant (the whole step as a compiled graph,
+  scanned under one `lax.scan` with donated ping-pong buffers).
+* **Streaming / gradient launches** (`bench_stream`, `bench_grad`): the
+  two building-block stencil launches across executors — the per-launch
+  records the fused numbers decompose into.
 * **LM token throughput** (`bench_lm_step`): the token-lattice pointwise
   family (rmsnorm / gated-act) through the same tdp backends — the
   framework-integration claim (DESIGN.md §4).
@@ -25,12 +30,17 @@ Wall-times here are CPU numbers (this container); they demonstrate the
 benchmarks/roofline.py (static analysis of the dry-run artifacts).
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick]
-[--only a,b,...] [--json]``
+[--only a,b,...] [--json] [--sweep plane_block=1,2,4]``
 
 ``--json`` additionally writes one machine-readable
 ``BENCH_<name>.json`` per benchmark that ran (median/min wall times,
 grid size, executor per variant) under ``--out`` — the cross-PR perf
 trajectory; the nightly CI lane uploads them as artifacts.
+
+``--sweep key=v1,v2,...`` re-runs the windowed-executor variants of the
+stencil benches once per value of the ``Target.tuning`` knob (e.g.
+``plane_block``, the ROADMAP follow-up for the windowed executor) and
+records the per-value medians into the bench JSON under ``"sweep"``.
 """
 from __future__ import annotations
 
@@ -49,6 +59,11 @@ RESULTS = {}
 #: per-bench machine-readable records (written by --json): name →
 #: {"grid": ..., "variants": {label: {"median_s", "min_s", "executor"}}}
 BENCH_RECORDS = {}
+
+#: ``--sweep key=v1,v2,...`` values (parsed by main); benches with a
+#: windowed-executor variant consult this and record one extra variant
+#: per value under the bench record's "sweep" key.
+SWEEPS: dict[str, list[int]] = {}
 
 
 def _time_stats(fn, *args, reps=5, warmup=2):
@@ -209,6 +224,8 @@ def bench_masked_copy(quick=False):
 # ---------------------------------------------------------------------------
 
 def bench_fused_step(quick=False):
+    import warnings
+
     from repro import tdp
     from repro.lb.params import LBParams
     from repro.lb.sim import BinaryFluidSim
@@ -217,62 +234,183 @@ def bench_fused_step(quick=False):
     n = int(np.prod(grid))
     p = LBParams(A=0.125, B=0.125, kappa=0.02)
 
-    # Time the jitted hot-loop body of each regime: the whole unfused
-    # timestep (moments → stencil → collide → stream, 4 launches) vs the
-    # fused stencil launch(es) that replace it — one_launch (radius-2
-    # composed gather), two_launch (streamed-φ intermediate, gather stage
-    # (a)) and the gather-free pallas_windowed executor (stage (b); runs
-    # in interpret mode on this CPU container, so its wall time measures
-    # the Pallas *interpreter*, not the kernel — the claim it carries is
-    # the memory structure, reported as est. HBM bytes).
+    # Time the jitted hot-loop body of each regime — since the tdp.Program
+    # redesign every regime *is* a compiled Program: the whole unfused
+    # timestep (5 stages), the fused stencil stage(s) that replace it —
+    # one_launch (radius-2 composed gather), two_launch (streamed-φ
+    # intermediate, gather stage (a)) and the gather-free pallas_windowed
+    # executor (stage (b); runs in interpret mode on this CPU container,
+    # so its wall time measures the Pallas *interpreter*, not the kernel —
+    # the claim it carries is the memory structure, reported as the
+    # ProgramPlan's aggregated est. HBM bytes).  The extra
+    # "fused_program_scan" variant runs K steps under one lax.scan with
+    # donated ping-pong field buffers (CompiledProgram.run).
     wt = tdp.Target("pallas_windowed", interpret=True)
     sim_u = BinaryFluidSim(grid, params=p)
     sim_f = BinaryFluidSim(grid, params=p, fused="one_launch")
     sim_f2 = BinaryFluidSim(grid, params=p, fused="two_launch")
     sim_w = BinaryFluidSim(grid, params=p, fused="one_launch", target=wt)
     st = sim_u.init_spinodal(seed=0, noise=0.05)
-    wf, wg = sim_f._collide_fn(st.f, st.g)       # pre-stream fused state
+    # pre-stream fused state w = collide(u)
+    ws = sim_f.programs["collide"].step({"f": st.f, "g": st.g})
 
-    from repro.core import Lattice, launch_plan
-    from repro.lb.stencil import FUSED_SPEC
-    lat = Lattice(grid)
     hbm = {
-        "fused": launch_plan(FUSED_SPEC, tdp.Target("xla"),
-                             lattice=lat).hbm_bytes_estimate(),
-        "fused_windowed": launch_plan(FUSED_SPEC, wt,
-                                      lattice=lat).hbm_bytes_estimate(),
+        "unfused": sim_u.programs["step"].plan().hbm_bytes_estimate(),
+        "fused": sim_f.programs["fused"].plan().hbm_bytes_estimate(),
+        "fused_two": sim_f2.programs["fused"].plan().hbm_bytes_estimate(),
+        "fused_windowed":
+            sim_w.programs["fused"].plan().hbm_bytes_estimate(),
     }
+
+    variants = [
+        ("unfused pipeline (Program, 5 stages)", "unfused", "xla",
+         sim_u.programs["step"].step, ({"f": st.f, "g": st.g},)),
+        ("fused (one launch)", "fused", "xla",
+         sim_f.programs["fused"].step, (ws,)),
+        ("fused (two launches, φ intermediate)", "fused_two", "xla",
+         sim_f2.programs["fused"].step, (ws,)),
+        ("fused (windowed, gather-free, interpret)", "fused_windowed",
+         "pallas_windowed", sim_w.programs["fused"].step, (ws,)),
+    ]
+    for pb in SWEEPS.get("plane_block", ()):
+        sim_pb = BinaryFluidSim(
+            grid, params=p, fused="one_launch",
+            target=wt.with_(tuning={"plane_block": int(pb)}))
+        variants.append(
+            (f"fused (windowed, plane_block={pb})",
+             f"fused_windowed_pb{pb}", "pallas_windowed",
+             sim_pb.programs["fused"].step, (ws,)))
 
     rows, rec = [], {"grid": list(grid), "variants": {}}
     base_t = None
-    for label, key, executor, fn, args in (
-        ("unfused pipeline", "unfused", "xla", sim_u._step_fn,
-         (st.f, st.g)),
-        ("fused (one launch)", "fused", "xla", sim_f._fused_fn, (wf, wg)),
-        ("fused (two launches, φ intermediate)", "fused_two", "xla",
-         sim_f2._fused_fn, (wf, wg)),
-        ("fused (windowed, gather-free, interpret)", "fused_windowed",
-         "pallas_windowed", sim_w._fused_fn, (wf, wg)),
-    ):
-        ts = _time_stats(fn, *args, reps=3 if key == "fused_windowed"
-                         else 5)
+    for label, key, executor, fn, args in variants:
+        ts = _time_stats(fn, *args,
+                         reps=3 if executor == "pallas_windowed" else 5)
         t = ts["median_s"]
         per_site_ns = t / n * 1e9
         rec["variants"][key] = {
             "t_s": t, "ns_per_site_step": per_site_ns, "executor": executor,
             **ts, **({"hbm_bytes_estimate": hbm[key]} if key in hbm else {}),
         }
+        if key.startswith("fused_windowed_pb"):
+            rec.setdefault("sweep", {}).setdefault("plane_block", {})[
+                key.rsplit("pb", 1)[1]] = {"median_s": t, **ts}
         if base_t is None:
             base_t = t
         rows.append((label, f"{t*1e3:.2f}", f"{per_site_ns:.1f}",
                      f"{n/t/1e6:.1f}", f"{base_t/t:.2f}×",
                      f"{hbm[key]/2**20:.1f}" if key in hbm else "-"))
+
+    # Program-driven scanned variant: K steps in one jitted lax.scan with
+    # donated (ping-pong aliased) field buffers; per-step cost amortises
+    # the per-call dispatch the .step variants pay.  Donation is a no-op
+    # on the CPU backend (XLA warns and falls back) but exercises the
+    # real TPU path; each call feeds on the previous call's output.
+    K = 10
+    exe = sim_f2.programs["fused"]
+    holder = {"s": dict(ws)}
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message="Some donated buffers")
+
+        def scan_k():
+            holder["s"] = exe.run(holder["s"], K, donate=True)
+            return holder["s"]
+
+        ts = _time_stats(scan_k, reps=5)
+    t = ts["median_s"] / K
+    rec["variants"]["fused_program_scan"] = {
+        "t_s": t, "ns_per_site_step": t / n * 1e9, "executor": "xla",
+        "median_s": t, "min_s": ts["min_s"] / K, "scan_length": K,
+        "donated": True, "hbm_bytes_estimate": hbm["fused_two"],
+    }
+    rows.append((f"fused_two, Program scan×{K} (donated)",
+                 f"{t*1e3:.2f}", f"{t/n*1e9:.1f}", f"{n/t/1e6:.1f}",
+                 f"{base_t/t:.2f}×", f"{hbm['fused_two']/2**20:.1f}"))
+
     RESULTS["fused_step"] = rec
     BENCH_RECORDS["fused_step"] = rec
     return _table(
         f"Fused vs unfused LB timestep, {grid} lattice ({n} sites)",
         rows, ["implementation", "ms/step", "ns/site·step", "Msites/s",
-               "speedup", "est. gather/window HBM MiB"])
+               "speedup", "est. step HBM MiB (ProgramPlan)"])
+
+
+# ---------------------------------------------------------------------------
+# building-block stencil launches (stream / gradients) across executors
+# ---------------------------------------------------------------------------
+
+def _bench_stencil_launch(name, spec, make_input, quick):
+    """Shared harness for the single-launch stencil benches: one variant
+    per executor (+ optional plane_block sweep for the windowed one),
+    with the per-launch HBM estimates alongside."""
+    import jax as _jax
+
+    from repro import tdp
+    from repro.core import Lattice, launch_plan
+
+    grid = (16, 16, 16) if quick else (24, 24, 24)
+    lat = Lattice(grid)
+    n = lat.nsites
+    x = make_input(lat)
+
+    wt = tdp.Target("pallas_windowed", interpret=True)
+    targets = [("xla", tdp.Target("xla", vvl=128)),
+               ("pallas_interpret", tdp.Target("pallas_interpret", vvl=128)),
+               ("pallas_windowed", wt)]
+    for pb in SWEEPS.get("plane_block", ()):
+        targets.append((f"pallas_windowed_pb{pb}",
+                        wt.with_(tuning={"plane_block": int(pb)})))
+
+    rows, rec = [], {"grid": list(grid), "variants": {}}
+    for key, tgt in targets:
+        fn = _jax.jit(lambda a, t=tgt: tdp.launch(spec, t, a, lattice=lat))
+        ts = _time_stats(fn, x, reps=3 if "windowed" in key else 5)
+        t = ts["median_s"]
+        hbm = launch_plan(spec, tgt, lattice=lat).hbm_bytes_estimate()
+        rec["variants"][key] = {
+            "t_s": t, "ns_per_site": t / n * 1e9,
+            "executor": tgt.executor, **ts, "hbm_bytes_estimate": hbm,
+        }
+        if "_pb" in key:
+            rec.setdefault("sweep", {}).setdefault("plane_block", {})[
+                key.rsplit("pb", 1)[1]] = {"median_s": t, **ts}
+        rows.append((key, f"{t*1e3:.3f}", f"{t/n*1e9:.1f}",
+                     f"{n/t/1e6:.1f}", f"{hbm/2**20:.2f}"))
+    RESULTS[name] = rec
+    BENCH_RECORDS[name] = rec
+    return _table(
+        f"{name} launch, {grid} lattice ({n} sites)",
+        rows, ["executor", "ms/launch", "ns/site", "Msites/s",
+               "est. HBM MiB"])
+
+
+def bench_stream(quick=False):
+    """D3Q19 pull streaming (`STREAM_SPEC`) — the pure-gather launch."""
+    import jax.numpy as _jnp
+
+    from repro.kernels.lb_collision import NVEL
+    from repro.lb.stencil import STREAM_SPEC
+
+    def make(lat):
+        rng = np.random.default_rng(0)
+        return _jnp.asarray(
+            0.05 * rng.normal(size=(NVEL, lat.nsites)) + 1 / 19.,
+            _jnp.float32)
+
+    return _bench_stencil_launch("stream", STREAM_SPEC, make, quick)
+
+
+def bench_grad(quick=False):
+    """6-point ∇φ/∇²φ (`GRAD6_SPEC`) — the small-star stencil launch."""
+    import jax.numpy as _jnp
+
+    from repro.lb.stencil import GRAD6_SPEC
+
+    def make(lat):
+        rng = np.random.default_rng(1)
+        return _jnp.asarray(rng.normal(size=(1, lat.nsites)), _jnp.float32)
+
+    return _bench_stencil_launch("grad", GRAD6_SPEC, make, quick)
 
 
 # ---------------------------------------------------------------------------
@@ -321,8 +459,41 @@ BENCHES = {
     "vvl": bench_vvl,
     "masked_copy": bench_masked_copy,
     "fused_step": bench_fused_step,
+    "stream": bench_stream,
+    "grad": bench_grad,
     "lm_step": bench_lm_step,
 }
+
+
+#: tuning knobs the benches actually consume; unknown --sweep keys are
+#: rejected up front (a silently ignored sweep would read as "ran").
+SWEEPABLE = ("plane_block",)
+
+
+def _parse_sweep(text: str) -> dict[str, list[int]]:
+    """``"plane_block=1,2,4"`` → ``{"plane_block": [1, 2, 4]}``."""
+    out: dict[str, list[int]] = {}
+    for part in text.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(f"--sweep expects key=v1,v2,...; got {part!r}")
+        key, vals = part.split("=", 1)
+        key = key.strip()
+        if key not in SWEEPABLE:
+            raise ValueError(f"--sweep key {key!r} is not consumed by any "
+                             f"bench; sweepable: {', '.join(SWEEPABLE)}")
+        values = [int(v) for v in vals.split(",") if v.strip()]
+        if not values:
+            raise ValueError(f"--sweep {key}= has no values")
+        out[key] = values
+    return out
+
+
+#: benches that consult SWEEPS — a --sweep whose --only selection hits
+#: none of them would silently no-op, so main() rejects that combination.
+SWEEP_CONSUMERS = ("fused_step", "stream", "grad")
 
 
 def main(argv=None):
@@ -334,6 +505,11 @@ def main(argv=None):
     ap.add_argument("--json", action="store_true",
                     help="also write one BENCH_<name>.json per bench run "
                          "(machine-readable perf trajectory) under --out")
+    ap.add_argument("--sweep", default=None, metavar="KEY=V1,V2,...",
+                    help="sweep a Target.tuning knob (e.g. "
+                         "plane_block=1,2,4) over the windowed-executor "
+                         "variants; per-value medians land in the bench "
+                         "JSON under 'sweep'")
     args = ap.parse_args(argv)
 
     if args.only:
@@ -346,6 +522,19 @@ def main(argv=None):
             return 2
     else:
         selected = list(BENCHES)
+
+    if args.sweep:
+        try:
+            SWEEPS.update(_parse_sweep(args.sweep))
+        except ValueError as e:
+            print(f"[benchmarks] {e}", file=sys.stderr)
+            return 2
+        if not set(selected) & set(SWEEP_CONSUMERS):
+            print(f"[benchmarks] --sweep has no effect: none of the "
+                  f"selected benches ({', '.join(sorted(selected))}) "
+                  f"consume it; sweep-aware benches: "
+                  f"{', '.join(SWEEP_CONSUMERS)}", file=sys.stderr)
+            return 2
 
     texts = [fn(args.quick) for name, fn in BENCHES.items()
              if name in selected]

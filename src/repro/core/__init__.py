@@ -60,6 +60,14 @@ from .api import (
     pad_sites,
 )
 from .api import launch as tdp_launch
+from .program import (
+    CompiledProgram,
+    Program,
+    ProgramPlan,
+    Stage,
+    program,
+    stage,
+)
 from .execute import (
     launch,
     launch_stencil,
@@ -83,4 +91,7 @@ __all__ = [
     "register_executor", "unregister_executor", "get_executor",
     "get_executor_entry", "executor_wants", "list_executors",
     "registry_version",
+    # step graphs
+    "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
+    "stage",
 ]

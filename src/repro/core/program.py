@@ -1,0 +1,690 @@
+"""``tdp.Program`` — declarative multi-launch step graphs.
+
+The paper's targetDP layer abstracts *single* kernel launches; a real
+lattice application step (the Ludwig binary fluid, our
+:class:`repro.lb.sim.BinaryFluidSim`) is a short *pipeline* of launches
+plus host-side glue: halo exchange, executor fallbacks, intermediate
+buffers, ``lax.scan`` stepping.  The successor paper ("A Lightweight
+Approach to Performance Portability with targetDP", 1609.01479) names
+that glue as the remaining portability gap; task-graph layers (HPX,
+2206.06302) close it with dependency graphs.  A :class:`Program` is that
+graph, declaratively:
+
+* a **Stage** binds one :class:`~repro.core.spec.KernelSpec` to named
+  values — ``reads`` (one name per declared field, in order) and
+  ``writes`` (one name per declared output) — plus its ``TARGET_CONST``
+  bindings;
+* a **Program** is an ordered tuple of stages over two kinds of names:
+  **fields** (persistent, double-buffered step state — what
+  ``step``/``run`` carry from one step to the next) and
+  **intermediates** (step-local values, written before read, never
+  materialised across steps).
+
+Compiling a Program (:meth:`Program.compile`) lowers it through the
+existing launch machinery (:func:`repro.core.api.launch` — plan cache,
+executor registry, capability-aware prologue) into a single jitted step
+function, adding exactly the glue applications used to hand-write:
+
+a. **per-stage target routing** — each stage dispatches to the requested
+   target, except pointwise stages under a stencil-only
+   (``wants="halo_extended"``) executor, which route to ``"xla"``
+   (generalising the ad-hoc fallback formerly buried in
+   ``BinaryFluidSim``);
+b. **one halo-exchange schedule per step** — ghost requirements are
+   back-propagated through the stage graph (:meth:`Program.schedule`),
+   so under ``shard_map`` every field is exchanged **once** per step, at
+   the width the whole step needs; stages that read step-local
+   intermediates through stencils *recompute* them on a ghost ring
+   instead of triggering extra communication;
+c. **buffer donation + ping-pong aliasing** —
+   :meth:`CompiledProgram.run` executes ``nsteps`` under one
+   ``lax.scan``; with ``donate=True`` the field buffers are donated so
+   XLA aliases input and output state (no per-step reallocation);
+d. **aggregated memory models** — :meth:`Program.plan` /
+   :meth:`CompiledProgram.plan` build one
+   :class:`~repro.core.api.LaunchPlan` per stage and aggregate the PR 3
+   ``vmem_bytes_estimate`` / ``hbm_bytes_estimate`` models across the
+   step.
+
+:meth:`Program.execute` is the uncompiled single-step entry for callers
+that manage their own ghost planes (``repro.kernels.ops.lb_fused_step``);
+it runs the same stage pipeline eagerly, each launch hitting the shared
+plan cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from . import compat
+from .api import launch as _launch
+from .api import launch_plan as _launch_plan
+from .api import _normalize_halo
+from .lattice import Lattice
+from .registry import executor_wants
+from .spec import KernelSpec
+from .target import Target, as_target
+
+
+# ---------------------------------------------------------------------------
+# Stage — one KernelSpec bound to named values
+# ---------------------------------------------------------------------------
+
+def _as_names(x, what: str) -> tuple[str, ...]:
+    if isinstance(x, str):
+        x = (x,)
+    names = tuple(str(n) for n in x)
+    if not names:
+        raise ValueError(f"a stage needs at least one {what} name")
+    return names
+
+
+def _freeze_consts(consts) -> tuple[tuple[str, Any], ...]:
+    if not consts:
+        return ()
+    items = (sorted(consts.items()) if isinstance(consts, Mapping)
+             else sorted(tuple(kv) for kv in consts))
+    for k, _ in items:
+        if not isinstance(k, str):
+            raise TypeError(f"const names must be strings, got {k!r}")
+    return tuple((k, v) for k, v in items)
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One launch of the step graph: a :class:`KernelSpec` bound to named
+    program values.
+
+    Args:
+      spec: the kernel.  Its output counts must be declared (``out=``) —
+        a Program wires outputs to names, so their arity/ncomp cannot be
+        launch-inferred.
+      reads: one name per declared field, in declaration order.
+      writes: one name per declared output.  Writing a *field* name
+        defines that field's next-step value; writing an *intermediate*
+        name binds a step-local value for later stages.
+      consts: ``TARGET_CONST`` bindings for this stage (mapping or item
+        tuple; ``TargetConst`` values participate in the plan cache by
+        content hash).
+      name: display name (defaults to the spec's).
+    """
+
+    spec: KernelSpec
+    reads: tuple[str, ...]
+    writes: tuple[str, ...]
+    consts: tuple[tuple[str, Any], ...] = dc_field(default=())
+    name: str = ""
+
+    def __post_init__(self):
+        if not isinstance(self.spec, KernelSpec):
+            raise TypeError(f"stage spec must be a KernelSpec, got "
+                            f"{type(self.spec).__name__}")
+        object.__setattr__(self, "reads", _as_names(self.reads, "read"))
+        object.__setattr__(self, "writes", _as_names(self.writes, "write"))
+        object.__setattr__(self, "consts", _freeze_consts(self.consts))
+        if not self.name:
+            object.__setattr__(self, "name", self.spec.name)
+        if len(self.reads) != len(self.spec.fields):
+            raise ValueError(
+                f"stage {self.name!r} binds {len(self.reads)} read(s) but "
+                f"kernel {self.spec.name!r} declares "
+                f"{len(self.spec.fields)} field(s)")
+        if self.spec.out is None:
+            raise ValueError(
+                f"stage {self.name!r}: kernel {self.spec.name!r} must "
+                f"declare out= to participate in a Program (outputs are "
+                f"wired to names)")
+        if len(self.writes) != len(self.spec.out):
+            raise ValueError(
+                f"stage {self.name!r} binds {len(self.writes)} write(s) "
+                f"but kernel {self.spec.name!r} declares "
+                f"{len(self.spec.out)} output(s)")
+
+    def consts_dict(self) -> dict:
+        return dict(self.consts)
+
+
+def stage(spec: KernelSpec, reads, writes, *, consts=None,
+          name: str | None = None) -> Stage:
+    """Ergonomic :class:`Stage` constructor (accepts bare-string names and
+    dict consts)."""
+    return Stage(spec, reads, writes, consts=_freeze_consts(consts),
+                 name=name or "")
+
+
+# ---------------------------------------------------------------------------
+# Program — the ordered stage graph
+# ---------------------------------------------------------------------------
+
+def _grid_trim(arr: jax.Array, shape: tuple[int, ...],
+               ext: tuple[int, ...], want: tuple[int, ...]) -> jax.Array:
+    """Trim a ghost-extended grid ``(ncomp, *(shape + 2·ext))`` down to
+    ``want`` ghost layers per dimension (``want <= ext`` everywhere)."""
+    if ext == want:
+        return arr
+    for d, (e, w) in enumerate(zip(ext, want)):
+        if e < w:
+            raise ValueError(
+                f"cannot widen ghost extent in dim {d}: have {e}, "
+                f"need {w}")
+        if e > w:
+            arr = jax.lax.slice_in_dim(arr, e - w, e + w + shape[d],
+                                       axis=d + 1)
+    return arr
+
+
+def resolve_stage_target(target: Target | str | None,
+                         spec: KernelSpec) -> Target:
+    """Per-stage target routing (the PR 3 capability surface, applied per
+    stage): stencil stages keep the requested target; pointwise stages
+    under a stencil-only (``wants="halo_extended"``) executor route to
+    the ``"xla"`` executor at the same VVL."""
+    tgt = as_target(target)
+    if spec.has_stencil:
+        return tgt
+    try:
+        wants = executor_wants(tgt.executor)
+    except ValueError:
+        wants = "gathered"      # custom executor registered later
+    if wants == "halo_extended":
+        return tgt.with_(backend="xla", interpret=False)
+    return tgt
+
+
+class Program:
+    """An ordered graph of :class:`Stage`\\ s over named fields and
+    intermediates — one application *step* as a declarative object.
+
+    Args:
+      name: display name.
+      stages: the launches, in execution order.
+      fields: persistent state names (ordered — this is the order
+        ``step``/``run`` tuples use).  A field's pre-step value is read
+        until a stage writes it; the last write is the next-step value;
+        unwritten fields pass through unchanged.
+      intermediates: step-local names.  ``None`` infers them (every
+        written name that is not a field); passing them explicitly
+        validates the set exactly.
+    """
+
+    def __init__(self, name: str, stages: Sequence[Stage], *,
+                 fields: Sequence[str],
+                 intermediates: Sequence[str] | None = None):
+        self.name = str(name)
+        self.stages = tuple(stages)
+        if not self.stages:
+            raise ValueError(f"program {name!r} needs at least one stage")
+        for st in self.stages:
+            if not isinstance(st, Stage):
+                raise TypeError(f"program {name!r}: stages must be Stage "
+                                f"objects, got {type(st).__name__}")
+        self.fields = _as_names(fields, "field")
+        if len(set(self.fields)) != len(self.fields):
+            raise ValueError(f"duplicate field names: {self.fields}")
+
+        written = [w for st in self.stages for w in st.writes]
+        inferred = tuple(dict.fromkeys(w for w in written
+                                       if w not in self.fields))
+        if intermediates is None:
+            self.intermediates = inferred
+        else:
+            self.intermediates = tuple(str(n) for n in intermediates)
+            if set(self.intermediates) != set(inferred):
+                raise ValueError(
+                    f"program {name!r}: declared intermediates "
+                    f"{sorted(self.intermediates)} != written non-field "
+                    f"names {sorted(inferred)}")
+        overlap = set(self.fields) & set(self.intermediates)
+        if overlap:
+            raise ValueError(f"names {sorted(overlap)} are both fields "
+                             f"and intermediates")
+
+        # dataflow validation: reads resolve to fields or already-written
+        # intermediates; every intermediate is consumed.
+        known = set(self.fields) | set(self.intermediates)
+        bound = set(self.fields)
+        read_ever: set[str] = set()
+        for st in self.stages:
+            for r in st.reads:
+                if r not in known:
+                    raise ValueError(
+                        f"stage {st.name!r} reads unknown name {r!r} "
+                        f"(fields: {sorted(self.fields)}, intermediates: "
+                        f"{sorted(self.intermediates)})")
+                if r not in bound:
+                    raise ValueError(
+                        f"stage {st.name!r} reads intermediate {r!r} "
+                        f"before any stage writes it")
+                read_ever.add(r)
+            bound.update(st.writes)
+        dead = sorted(set(self.intermediates) - read_ever)
+        if dead:
+            raise ValueError(
+                f"program {name!r}: intermediate(s) {dead} are written "
+                f"but never read — drop them or make them fields")
+
+        # per-name component counts (consistency across all bindings)
+        self.ncomp: dict[str, int | None] = {n: None for n in known}
+
+        def _record(n, c, where):
+            if c is None:
+                return
+            c = int(c)
+            if self.ncomp[n] is None:
+                self.ncomp[n] = c
+            elif self.ncomp[n] != c:
+                raise ValueError(
+                    f"name {n!r} has inconsistent ncomp: {self.ncomp[n]} "
+                    f"vs {c} at {where}")
+
+        for st in self.stages:
+            for r, fs in zip(st.reads, st.spec.fields):
+                _record(r, fs.ncomp, f"stage {st.name!r} read")
+            for w, oc in zip(st.writes, st.spec.out):
+                _record(w, oc, f"stage {st.name!r} write")
+
+    def __repr__(self):
+        return (f"Program({self.name!r}, stages="
+                f"{[st.name for st in self.stages]}, "
+                f"fields={list(self.fields)}, "
+                f"intermediates={list(self.intermediates)})")
+
+    # -- the halo schedule -------------------------------------------------
+
+    def schedule(self, ndim: int, open_dims: Sequence[bool]):
+        """Back-propagate per-dimension ghost requirements through the
+        stage graph — **the one halo-exchange schedule per step**.
+
+        ``open_dims[d]`` marks dimensions whose ghosts are caller-managed
+        (sharded slabs / pre-filled ghost planes); closed dimensions wrap
+        periodically inside each launch and need nothing.
+
+        Returns ``(field_widths, stage_geo)``:
+
+        * ``field_widths[name]`` — ghost layers each *field* must carry at
+          the start of the step (the exchange width: the max requirement
+          over every stage that consumes its pre-step value);
+        * ``stage_geo[i] = (ext_out, halo)`` — stage *i* computes its
+          outputs on the interior extended by ``ext_out`` ghost layers
+          (recompute-in-ghost for step-local intermediates read through
+          stencils downstream) and launches with ``halo`` ghost width
+          (the max stencil radius over its stencil-carrying reads, in
+          open dimensions).
+        """
+        open_mask = tuple(bool(b) for b in open_dims)
+        if len(open_mask) != ndim:
+            raise ValueError(f"open_dims {open_mask} does not match "
+                             f"ndim {ndim}")
+        zeros = (0,) * ndim
+        need: dict[str, tuple[int, ...]] = {f: zeros for f in self.fields}
+        geo: list[tuple[tuple[int, ...], tuple[int, ...]]] = []
+        for st in reversed(self.stages):
+            outs = [need.pop(w, zeros) for w in st.writes]
+            e_out = tuple(max(o[d] for o in outs) if open_mask[d] else 0
+                          for d in range(ndim))
+            radii = [s.radius_per_dim() for s in st.spec.stencils
+                     if s is not None]
+            h = tuple(max(r[d] for r in radii)
+                      if radii and open_mask[d] else 0
+                      for d in range(ndim))
+            geo.append((e_out, h))
+            for rname, s in zip(st.reads, st.spec.stencils):
+                req = (e_out if s is None
+                       else tuple(e + hh for e, hh in zip(e_out, h)))
+                prev = need.get(rname, zeros)
+                need[rname] = tuple(max(p, q) for p, q in zip(prev, req))
+        geo.reverse()
+        widths = {f: need.get(f, zeros) for f in self.fields}
+        return widths, geo
+
+    # -- stage execution core (shared by execute / compile) ----------------
+
+    def _run_stages(self, stage_targets, shape: tuple[int, ...],
+                    geo, env: dict) -> dict:
+        """Run all stages over ``env`` (name → ``(grid_array, ext)``),
+        mutating and returning it.  ``geo`` is :meth:`schedule`'s
+        per-stage ``(ext_out, halo)`` list."""
+        for st, tgt, (e_out, h) in zip(self.stages, stage_targets, geo):
+            lat_shape = tuple(s + 2 * e for s, e in zip(shape, e_out))
+            lat = Lattice(lat_shape)
+            arrays = []
+            for rname, s in zip(st.reads, st.spec.stencils):
+                arr, ext = env[rname]
+                want = (e_out if s is None
+                        else tuple(e + hh for e, hh in zip(e_out, h)))
+                arr = _grid_trim(arr, shape, ext, want)
+                arrays.append(arr.reshape(arr.shape[0], -1))
+            outs = _launch(st.spec, tgt, *arrays, lattice=lat,
+                           halo=h if any(h) else None,
+                           consts=st.consts_dict())
+            outs = (outs,) if not isinstance(outs, tuple) else outs
+            for w, o in zip(st.writes, outs):
+                env[w] = (o.reshape(o.shape[0], *lat_shape), e_out)
+        return env
+
+    # -- eager execution with caller-managed ghosts ------------------------
+
+    def execute(self, target: Target | str | None,
+                state: Mapping[str, jax.Array], *,
+                grid_shape: Sequence[int],
+                halo: int | Sequence[int] | None = 0) -> dict:
+        """Run one step eagerly over grid arrays, ghosts managed by the
+        caller.
+
+        ``state[name]`` is ``(ncomp, *(grid_shape + 2·halo))`` for every
+        field; dimensions with ``halo[d] > 0`` carry caller-filled ghost
+        planes (the sharded contract), dimensions with ``halo[d] == 0``
+        wrap periodically.  Returns the next-step field grids over the
+        interior.  Each launch dispatches through the shared plan cache,
+        so repeated calls never re-trace.
+        """
+        shape = tuple(int(s) for s in grid_shape)
+        ndim = len(shape)
+        h0 = _normalize_halo(halo, ndim)
+        open_mask = tuple(hh > 0 for hh in h0)
+        widths, geo = self.schedule(ndim, open_mask)
+        stage_targets = tuple(resolve_stage_target(target, st.spec)
+                              for st in self.stages)
+        env = {}
+        for f in self.fields:
+            if f not in state:
+                raise ValueError(f"program {self.name!r}: state is "
+                                 f"missing field {f!r}")
+            short = [d for d in range(ndim) if h0[d] < widths[f][d]]
+            if short:
+                raise ValueError(
+                    f"program {self.name!r}: field {f!r} needs "
+                    f"{widths[f]} ghost layer(s) but the caller supplied "
+                    f"halo={h0} (short in dim(s) {short})")
+            env[f] = (state[f], h0)
+        env = self._run_stages(stage_targets, shape, geo, env)
+        zeros = (0,) * ndim
+        return {f: _grid_trim(env[f][0], shape, env[f][1], zeros)
+                for f in self.fields}
+
+    # -- lowering ----------------------------------------------------------
+
+    def compile(self, target: Target | str | None = None, *,
+                grid_shape: Sequence[int], mesh=None,
+                shard_axis: str | None = None) -> "CompiledProgram":
+        """Lower to one jitted step function (see
+        :class:`CompiledProgram`).  ``mesh``/``shard_axis`` default to the
+        target's hints; with a mesh, the step runs under ``shard_map``
+        with slab decomposition along dimension 0 and one ghost exchange
+        per field per step."""
+        return CompiledProgram(self, target, grid_shape, mesh=mesh,
+                               shard_axis=shard_axis)
+
+    def plan(self, target: Target | str | None = None, *,
+             grid_shape: Sequence[int]) -> "ProgramPlan":
+        """Aggregate the per-launch memory models across the step without
+        compiling (single-device periodic geometry; for the sharded
+        local geometry use :meth:`CompiledProgram.plan`)."""
+        shape = tuple(int(s) for s in grid_shape)
+        ndim = len(shape)
+        _, geo = self.schedule(ndim, (False,) * ndim)
+        stage_targets = tuple(resolve_stage_target(target, st.spec)
+                              for st in self.stages)
+        return _build_program_plan(self, stage_targets, shape, geo, {})
+
+
+# ---------------------------------------------------------------------------
+# the compiled step
+# ---------------------------------------------------------------------------
+
+def _exchange_dim0(arr: jax.Array, axis_name: str, width: int) -> jax.Array:
+    """Extend a local slab ``(ncomp, Xl, ...)`` by ``width`` exchanged
+    ghost planes on each side of dimension 0.
+
+    The transfer set is exactly the boundary planes (the paper's
+    masked-copy idea) — one ``ppermute`` pair when the neighbour slab
+    covers the width, and one extra hop per additional slab when
+    ``width > Xl`` (maximal decompositions: a 1-plane slab feeding a
+    radius-2 schedule reads from ranks ±2)."""
+    n = compat.axis_size(axis_name)
+    xl = arr.shape[1]
+    hops = -(-width // xl)                   # ceil: slabs per side
+    left, right = [], []
+    for j in range(1, hops + 1):
+        t = min(xl, width - (j - 1) * xl)    # planes taken from rank ±j
+        fwd = [(i, (i + j) % n) for i in range(n)]   # receive from rank -j
+        bwd = [(i, (i - j) % n) for i in range(n)]   # receive from rank +j
+        last = jax.lax.slice_in_dim(arr, xl - t, xl, axis=1)
+        first = jax.lax.slice_in_dim(arr, 0, t, axis=1)
+        left.insert(0, jax.lax.ppermute(last, axis_name, fwd))
+        right.append(jax.lax.ppermute(first, axis_name, bwd))
+    return jnp.concatenate(left + [arr] + right, axis=1)
+
+
+class CompiledProgram:
+    """A :class:`Program` lowered for one target + geometry.
+
+    * :meth:`step` — one jitted step over the field dict;
+    * :meth:`run` — ``nsteps`` under one jitted ``lax.scan``
+      (``donate=True`` donates the field buffers: XLA aliases state in
+      and out, the ping-pong);
+    * :meth:`plan` — the aggregated :class:`ProgramPlan`;
+    * ``halo_schedule`` — field → exchange width (sharded compiles only);
+    * ``stage_targets`` — the per-stage routed targets (capability
+      fallback applied).
+    """
+
+    def __init__(self, program: Program, target: Target | str | None,
+                 grid_shape: Sequence[int], *, mesh=None,
+                 shard_axis: str | None = None):
+        self.program = program
+        tgt = as_target(target)
+        self.target = tgt
+        self.grid_shape = tuple(int(s) for s in grid_shape)
+        ndim = len(self.grid_shape)
+        self.mesh = mesh if mesh is not None else tgt.mesh
+        self.shard_axis = (shard_axis if shard_axis is not None
+                           else (tgt.shard_axis or "data"))
+        self.stage_targets = tuple(resolve_stage_target(tgt, st.spec)
+                                   for st in program.stages)
+        fields = program.fields
+
+        if self.mesh is None:
+            self.local_shape = self.grid_shape
+            open_mask = (False,) * ndim
+            widths, geo = program.schedule(ndim, open_mask)
+            self.halo_schedule: dict[str, int] = {}
+            self._geo = geo
+
+            def core(*arrays):
+                env = {f: (a, (0,) * ndim)
+                       for f, a in zip(fields, arrays)}
+                env = program._run_stages(self.stage_targets,
+                                          self.grid_shape, geo, env)
+                return tuple(env[f][0] for f in fields)
+
+        else:
+            nsh = int(self.mesh.shape[self.shard_axis])
+            if self.grid_shape[0] % nsh != 0:
+                raise ValueError(
+                    f"X extent {self.grid_shape[0]} not divisible by "
+                    f"mesh axis {self.shard_axis}={nsh}")
+            local = (self.grid_shape[0] // nsh,) + self.grid_shape[1:]
+            self.local_shape = local
+            open_mask = (True,) + (False,) * (ndim - 1)
+            widths, geo = program.schedule(ndim, open_mask)
+            self._geo = geo
+            self.halo_schedule = {f: widths[f][0] for f in fields}
+            w_max = max(self.halo_schedule.values(), default=0)
+            if w_max >= self.grid_shape[0]:
+                raise ValueError(
+                    f"program {program.name!r} needs a {w_max}-plane "
+                    f"ghost exchange but the global X extent is only "
+                    f"{self.grid_shape[0]} plane(s)")
+            axis = self.shard_axis
+            zeros = (0,) * ndim
+
+            def core_local(*arrays):
+                env = {}
+                for f, a in zip(fields, arrays):
+                    w = widths[f]
+                    if w[0]:
+                        a = _exchange_dim0(a, axis, w[0])
+                    env[f] = (a, w)
+                env = program._run_stages(self.stage_targets, local, geo,
+                                          env)
+                return tuple(_grid_trim(env[f][0], local, env[f][1],
+                                        zeros) for f in fields)
+
+            spec = PartitionSpec(*((None, axis) + (None,) * (ndim - 1)))
+            # pallas_call has no shard_map replication rule on jax 0.4.x:
+            # drop the check whenever any stage dispatches off-xla.
+            check = all(t.executor == "xla" for t in self.stage_targets)
+            core = compat.shard_map(
+                core_local, mesh=self.mesh,
+                in_specs=(spec,) * len(fields),
+                out_specs=(spec,) * len(fields), check_vma=check)
+
+        self._core = core
+        self._jit_step = jax.jit(core)
+        self._run_cache: dict = {}
+
+    # -- running -----------------------------------------------------------
+
+    def _as_tuple(self, state: Mapping[str, jax.Array]):
+        arrays = []
+        for f in self.program.fields:
+            if f not in state:
+                raise ValueError(f"program {self.program.name!r}: state "
+                                 f"is missing field {f!r}")
+            a = state[f]
+            c = self.program.ncomp.get(f)
+            if (getattr(a, "ndim", 0) != 1 + len(self.grid_shape)
+                    or tuple(a.shape[1:]) != self.grid_shape
+                    or (c is not None and int(a.shape[0]) != c)):
+                raise ValueError(
+                    f"field {f!r} must be ({c or '?'}, "
+                    f"{', '.join(map(str, self.grid_shape))}); got "
+                    f"{getattr(a, 'shape', None)}")
+            arrays.append(a)
+        return tuple(arrays)
+
+    def step(self, state: Mapping[str, jax.Array]) -> dict:
+        """One step: field dict in, field dict out."""
+        outs = self._jit_step(*self._as_tuple(state))
+        return dict(zip(self.program.fields, outs))
+
+    def run(self, state: Mapping[str, jax.Array], nsteps: int, *,
+            donate: bool = False) -> dict:
+        """``nsteps`` steps under one jitted ``lax.scan``.
+
+        ``donate=True`` donates the input field buffers so XLA aliases
+        them with the outputs (no per-step reallocation; the caller's
+        arrays are consumed — feed each call the previous call's output,
+        the ping-pong).  Compiled once per ``(nsteps, donate)``.
+        """
+        if nsteps <= 0:
+            return {f: state[f] for f in self.program.fields}
+        key = (int(nsteps), bool(donate))
+        fn = self._run_cache.get(key)
+        if fn is None:
+            core, n = self._core, int(nsteps)
+
+            def many(arrays):
+                def body(carry, _):
+                    return core(*carry), None
+                out, _ = jax.lax.scan(body, arrays, None, length=n)
+                return out
+
+            fn = jax.jit(many, donate_argnums=(0,) if donate else ())
+            self._run_cache[key] = fn
+        outs = fn(self._as_tuple(state))
+        return dict(zip(self.program.fields, outs))
+
+    def plan(self) -> "ProgramPlan":
+        """Aggregated memory models for this compile's local geometry."""
+        return _build_program_plan(self.program, self.stage_targets,
+                                   self.local_shape, self._geo,
+                                   self.halo_schedule)
+
+    def __repr__(self):
+        return (f"CompiledProgram({self.program.name!r}, "
+                f"target={self.target.executor!r}, "
+                f"grid={self.grid_shape}, "
+                f"sharded={self.mesh is not None})")
+
+
+# ---------------------------------------------------------------------------
+# aggregated memory models
+# ---------------------------------------------------------------------------
+
+class ProgramPlan:
+    """Per-stage :class:`~repro.core.api.LaunchPlan`\\ s plus step-level
+    aggregates.
+
+    ``hbm_bytes_estimate`` **sums** the stage models — every executor
+    operand and output materialised over one step (the per-step HBM
+    footprint; stage transients are live at least until the next stage
+    consumes them).  ``vmem_bytes_estimate`` takes the **max** — stages
+    run sequentially, fast memory is reused.
+    """
+
+    __slots__ = ("name", "stages", "halo_schedule")
+
+    def __init__(self, name: str, stages, halo_schedule):
+        self.name = name
+        self.stages = tuple(stages)          # (stage_name, LaunchPlan)
+        self.halo_schedule = dict(halo_schedule)
+
+    def hbm_bytes_estimate(self, itemsize: int = 4) -> int:
+        return sum(p.hbm_bytes_estimate(itemsize) for _, p in self.stages)
+
+    def vmem_bytes_estimate(self, itemsize: int = 4) -> int:
+        return max(p.vmem_bytes_estimate(itemsize) for _, p in self.stages)
+
+    def per_stage(self, itemsize: int = 4) -> list[dict]:
+        """One row per stage — the stage table (executor, capability,
+        memory models)."""
+        return [{"stage": name, "executor": p.target.executor,
+                 "wants": p.wants,
+                 "hbm_bytes_estimate": p.hbm_bytes_estimate(itemsize),
+                 "vmem_bytes_estimate": p.vmem_bytes_estimate(itemsize)}
+                for name, p in self.stages]
+
+    def __repr__(self):
+        return (f"ProgramPlan({self.name!r}, "
+                f"stages={[n for n, _ in self.stages]}, "
+                f"hbm={self.hbm_bytes_estimate()}, "
+                f"vmem={self.vmem_bytes_estimate()})")
+
+
+def _build_program_plan(program: Program, stage_targets,
+                        shape: tuple[int, ...], geo,
+                        halo_schedule) -> ProgramPlan:
+    plans = []
+    for st, tgt, (e_out, h) in zip(program.stages, stage_targets, geo):
+        lat = Lattice(tuple(s + 2 * e for s, e in zip(shape, e_out)))
+        lp = _launch_plan(st.spec, tgt, lattice=lat,
+                          halo=h if any(h) else None,
+                          consts=st.consts_dict())
+        plans.append((st.name, lp))
+    return ProgramPlan(program.name, plans, halo_schedule)
+
+
+# ---------------------------------------------------------------------------
+# facade constructor
+# ---------------------------------------------------------------------------
+
+def program(name: str, stages: Sequence[Stage], *, fields: Sequence[str],
+            intermediates: Sequence[str] | None = None) -> Program:
+    """Build a :class:`Program` (``tdp.program(...)``)::
+
+        prog = tdp.program(
+            "lb_fused",
+            [tdp.stage(FUSED_SPEC, reads=("f", "g"), writes=("f", "g"),
+                       consts=collision_consts)],
+            fields=("f", "g"))
+        exe = prog.compile(tdp.Target("pallas_windowed"),
+                           grid_shape=(64, 64, 64))
+        state = exe.run(state, 100, donate=True)
+    """
+    return Program(name, stages, fields=fields, intermediates=intermediates)

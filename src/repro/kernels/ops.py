@@ -94,52 +94,27 @@ def lb_fused_step(f, g, *, grid_shape, halo=0, mode="one_launch",
       through the 7-point gradient star — the gathered-stack footprint
       drops from ``(19 + 57)·19`` rows to ``2·19·19 + 7`` rows and no
       ``(noffsets, ncomp, nsites)`` g-stack is ever materialised.
+
+    Both strategies are declared as :class:`repro.core.Program` step
+    graphs (:mod:`repro.lb.programs`); this wrapper runs one eager
+    :meth:`Program.execute` step with the caller-managed ghost planes
+    (two_launch's φ ghost ring is recomputed locally by the program's
+    halo schedule — no extra communication for the intermediate).
     """
-    from repro.core import Lattice, TargetConst, tdp_launch
     from repro.core.api import _normalize_halo
-    from repro.lb import stencil as _lbst   # lazy: avoids kernels↔lb cycle
+    from repro.lb import programs as _lbp   # lazy: avoids kernels↔lb cycle
 
     t = op_target(target, backend, vvl, default_vvl=128)
-    lat = Lattice(tuple(int(s) for s in grid_shape))
-    consts = dict(w=TargetConst(_lb.WEIGHTS.astype(f.dtype)),
-                  c=TargetConst(_lb.CV.astype(f.dtype)), **phys)
-    if mode == "one_launch":
-        return tdp_launch(_lbst.FUSED_SPEC, t, f, g, lattice=lat,
-                          halo=halo, consts=consts)
-    if mode != "two_launch":
-        raise ValueError(f"mode must be 'one_launch' or 'two_launch', "
-                         f"got {mode!r}")
-
-    h = _normalize_halo(halo, lat.ndim)
-    if any(hh and hh < 2 for hh in h):
-        raise ValueError(f"two_launch needs halo >= 2 where non-zero "
-                         f"(radius-2 dependency), got {h}")
-    # Launch A: streamed φ over the interior *plus one ghost ring* along
-    # halo'd dimensions — recomputed locally from the supplied ghost
-    # planes, so the intermediate needs no extra communication.
-    shape_a = tuple(s + 2 * (hh - 1) if hh else s
-                    for s, hh in zip(lat.shape, h))
-    halo_a = tuple(1 if hh else 0 for hh in h)
-    phis = tdp_launch(_lbst.PHI_STREAM_SPEC, t, g, lattice=Lattice(shape_a),
-                      halo=halo_a)
-    if any(h):
-        import jax
-
-        def trim(x, src_h):
-            # Trim a width-src_h ghost extension down to width 1 (all
-            # launch-B stencils are radius 1).
-            ext = tuple(s + 2 * hh for s, hh in zip(lat.shape, src_h))
-            grid = x.reshape(x.shape[0], *ext)
-            for d, hh in enumerate(src_h):
-                if hh > 1:
-                    grid = jax.lax.slice_in_dim(
-                        grid, hh - 1, hh + 1 + lat.shape[d], axis=d + 1)
-            return grid.reshape(x.shape[0], -1)
-
-        f, g = trim(f, h), trim(g, h)
-        phis = trim(phis, tuple(hh - 1 if hh else 0 for hh in h))
-    return tdp_launch(_lbst.FUSED_TWO_SPEC, t, f, g, phis, lattice=lat,
-                      halo=halo_a, consts=consts)
+    shape = tuple(int(s) for s in grid_shape)
+    h = _normalize_halo(halo, len(shape))
+    prog = _lbp.fused_program(
+        mode, _lbp.collision_consts(dtype=f.dtype, **phys))
+    ext = tuple(s + 2 * hh for s, hh in zip(shape, h))
+    out = prog.execute(t, {"f": f.reshape(_lb.NVEL, *ext),
+                           "g": g.reshape(_lb.NVEL, *ext)},
+                       grid_shape=shape, halo=h)
+    return (out["f"].reshape(_lb.NVEL, -1),
+            out["g"].reshape(_lb.NVEL, -1))
 
 
 def rmsnorm(x, weight, *, target=None, backend=None, vvl=None, eps=1e-6,

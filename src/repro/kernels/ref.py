@@ -24,26 +24,34 @@ def lb_collision_ref(f, g, phi, gradphi, del2phi, *,
                      A=0.0625, B=0.0625, kappa=0.04,
                      tau=1.0, tau_phi=1.0, gamma=1.0):
     """Oracle over full SoA arrays ``(ncomp, nsites)``; mirrors
-    :func:`repro.kernels.lb_collision.collision_site_kernel` exactly but is
-    written independently (einsum over the whole lattice at once)."""
+    :func:`repro.kernels.lb_collision.collision_site_kernel` — written
+    independently (einsum over the whole lattice at once) but keeping the
+    site kernel's exact accumulation/association order (``cu * cu``, not
+    ``cu ** 2``; ``φ·φ·φ``), so the two are **bit-identical** on the xla
+    executor.  The Program-based driver leans on this: the unfused
+    pipeline's collide stage (``COLLIDE_SPEC`` → the site kernel) must
+    reproduce the historical ``ops.lb_collision`` trajectory bit-for-bit
+    (pinned by ``tests/test_program.py``)."""
     dt = f.dtype
     w = jnp.asarray(WEIGHTS, dt)[:, None]
     c = jnp.asarray(CV, dt)
     phi_ = phi[0]
-    mu = -A * phi_ + B * phi_ ** 3 - kappa * del2phi[0]
+    mu = -A * phi_ + B * phi_ * phi_ * phi_ - kappa * del2phi[0]
     force = mu[None, :] * gradphi
 
     rho = f.sum(0)
     u = (jnp.einsum("qd,qv->dv", c, f) + 0.5 * force) / rho[None, :]
     cu = jnp.einsum("qd,dv->qv", c, u)
     usq = (u * u).sum(0)
-    feq = w * rho[None, :] * (1 + 3 * cu + 4.5 * cu ** 2 - 1.5 * usq[None, :])
+    feq = w * rho[None, :] * (1.0 + 3.0 * cu + 4.5 * cu * cu
+                              - 1.5 * usq[None, :])
     cf = jnp.einsum("qd,dv->qv", c, force)
     uf = (u * force).sum(0)
-    fterm = (1 - 0.5 / tau) * w * (3 * (cf - uf[None, :]) + 9 * cu * cf)
+    fterm = (1.0 - 0.5 / tau) * w * (3.0 * (cf - uf[None, :])
+                                     + 9.0 * cu * cf)
     f_out = f - (f - feq) / tau + fterm
 
-    gt = w * (3 * gamma * mu[None, :] + 3 * phi_[None, :] * cu)
+    gt = w * (3.0 * gamma * mu[None, :] + 3.0 * phi_[None, :] * cu)
     g0 = phi_ - (gt.sum(0) - gt[0])
     geq = jnp.concatenate([g0[None, :], gt[1:]], axis=0)
     g_out = g - (g - geq) / tau_phi

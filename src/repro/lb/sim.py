@@ -6,27 +6,35 @@ One timestep:
   3. collision:     targetDP kernel (f, g, φ, ∇φ, ∇²φ) → (f', g')   ← hot spot
   4. streaming:     f'_q(x+c_q) ← f'_q(x)            (shift + halo)
 
-Runs single-device (periodic stencil gather) or mesh-sharded (slab
-decomposition along X under ``shard_map`` with ``ppermute`` halo exchange).
-The collision target (executor + VVL) is a launch-time
-:class:`repro.core.Target` switch — the paper's portability contract.
+Since the ``tdp.Program`` redesign this driver is a *thin assembly*: the
+step shapes live in :mod:`repro.lb.programs` as declarative stage graphs
+and everything that used to be hand-wired here — per-launch halo
+exchange, executor fallbacks for pointwise launches, intermediate
+buffers, ``lax.scan`` stepping — is owned by
+:class:`repro.core.Program`:
+
+* the halo schedule is back-propagated per step (**one** ghost exchange
+  round per field per step, shared across stages, under ``shard_map``);
+* pointwise stages route to the ``"xla"`` executor automatically when
+  the requested target is stencil-only (``wants="halo_extended"``);
+* :meth:`BinaryFluidSim.run` executes n steps under one jitted
+  ``lax.scan`` (``donate=True`` ping-pongs the field buffers).
 
 ``fused`` selects the hot-loop fusion strategy (all trajectories match
 state-for-state):
 
-* ``False`` — the 4-launch unfused pipeline above.
-* ``"one_launch"`` (or ``True``) — one stencil launch per step
+* ``False`` — the 4-launch unfused pipeline above (one 5-stage Program).
+* ``"one_launch"`` (or ``True``) — one stencil stage per step
   (stream → φ moments → ∇φ/∇²φ → collide; no intermediate full-lattice
   arrays), over the radius-2 composed g-neighbourhood.
 * ``"two_launch"`` — ROADMAP stencil-memory stage (a): launch A streams
   g's moments into a 1-component φ intermediate, launch B (radius-1
-  stencils only) streams/collides against it — the gathered neighbour
-  stack shrinks from ``(19+57)·19`` to ``2·19·19 + 7`` rows.
+  stencils only) streams/collides against it.
 
 In every fused mode the iterated state is the pre-stream populations
 w = collide(u), since (stream∘collide)ⁿ = stream ∘ (collide∘stream)ⁿ⁻¹ ∘
-collide — the first collide and last stream run once as separate launches,
-so fused and unfused trajectories match state-for-state.
+collide — the prologue (collide) and epilogue (stream) run once as their
+own Programs, so fused and unfused trajectories match state-for-state.
 """
 from __future__ import annotations
 
@@ -37,10 +45,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import Target, compat, executor_wants
+from repro.core import Target, executor_wants
 from repro.kernels import ops
 from repro.kernels.lb_collision import NVEL, WEIGHTS
-from . import stencil
+from . import programs as lbp
 from .params import LBParams
 
 _FUSED_MODES = (False, "one_launch", "two_launch")
@@ -57,20 +65,14 @@ class LBState:
         return self.f.shape[1:]
 
 
-def _collide_flat(f, g, phi, gradphi, del2phi, *, params: LBParams,
-                  target: Target):
-    """Flatten grids to SoA site arrays, run the collision kernel, restore."""
-    gs = f.shape[1:]
-    n = int(np.prod(gs))
-    fo, go = ops.lb_collision(
-        f.reshape(NVEL, n), g.reshape(NVEL, n), phi.reshape(1, n),
-        gradphi.reshape(3, n), del2phi.reshape(1, n),
-        target=target, **params.as_kwargs())
-    return fo.reshape(NVEL, *gs), go.reshape(NVEL, *gs)
-
-
 class BinaryFluidSim:
-    """Spinodal-decomposition / droplet simulation of a binary mixture."""
+    """Spinodal-decomposition / droplet simulation of a binary mixture.
+
+    The compiled step graphs are exposed as ``sim.programs`` — a dict of
+    :class:`repro.core.CompiledProgram`: ``{"step": ...}`` for the
+    unfused regime, ``{"collide": ..., "fused": ..., "stream": ...}``
+    for the fused ones (prologue / hot-loop body / epilogue).
+    """
 
     def __init__(self, grid_shape=(32, 32, 32), params: LBParams | None = None,
                  *, target: Target | str | None = None,
@@ -88,26 +90,19 @@ class BinaryFluidSim:
             if mesh is None:
                 mesh = target.mesh
         self.target = target
-        # Stencil-only executors (wants="halo_extended", e.g.
-        # pallas_windowed) cannot run the sim's pointwise launches
-        # (collision, moments); those fall back to the xla executor at
-        # the same VVL while every stencil launch keeps the requested
-        # target — the capability contract, applied per launch.
+        # Program compilation routes pointwise stages to xla under a
+        # stencil-only target, but the *unfused* pipeline is
+        # pointwise-dominated (collision) — requesting a stencil-only
+        # executor for it would silently benchmark xla, so fail fast.
         try:
             stencil_only = executor_wants(target.executor) == "halo_extended"
         except ValueError:
             stencil_only = False    # custom executor registered later
         if stencil_only and not fused:
-            # the unfused pipeline is pointwise-dominated (collision) and
-            # its stream/gradient launches run on the default executor —
-            # a stencil-only target would silently never execute
             raise ValueError(
                 f"target executor {target.executor!r} is stencil-only "
                 f"(wants='halo_extended'); it only runs the fused stencil "
                 f"launches — pass fused='one_launch' or 'two_launch'")
-        self.pointwise_target = (target.with_(backend="xla",
-                                              interpret=False)
-                                 if stencil_only else target)
         self.backend = target.executor          # legacy introspection
         self.vvl = target.resolve_vvl()
         self.mesh = mesh
@@ -119,23 +114,23 @@ class BinaryFluidSim:
                              f"True ≡ 'one_launch'), got {fused!r}")
         self.fused = fused
         self.dtype = dtype
-        if mesh is not None:
-            nsh = mesh.shape[shard_axis]
-            if self.grid_shape[0] % nsh != 0:
-                raise ValueError(
-                    f"X extent {self.grid_shape[0]} not divisible by "
-                    f"mesh axis {shard_axis}={nsh}")
-            if fused and self.grid_shape[0] // nsh < 2:
-                # the width-2 ghost exchange reads from the nearest
-                # neighbour only — each slab must hold the full halo
-                raise ValueError(
-                    f"fused sharding needs a local X slab >= 2 planes; "
-                    f"got {self.grid_shape[0]}/{nsh} = "
-                    f"{self.grid_shape[0] // nsh}")
-        self._step_fn = self._build_step()
+
+        consts = lbp.collision_consts(dtype=np.dtype(dtype),
+                                      **self.params.as_kwargs())
+        kw = dict(grid_shape=self.grid_shape, mesh=mesh,
+                  shard_axis=shard_axis)
         if fused:
-            self._collide_fn, self._fused_fn, self._stream_fn = \
-                self._build_fused()
+            self.programs = {
+                "collide": lbp.collide_program(consts).compile(target, **kw),
+                "fused": lbp.fused_program(fused, consts).compile(target,
+                                                                  **kw),
+                "stream": lbp.stream_program().compile(target, **kw),
+            }
+        else:
+            self.programs = {
+                "step": lbp.unfused_step_program(consts).compile(target,
+                                                                 **kw),
+            }
 
     # -- initialisation ----------------------------------------------------
 
@@ -168,151 +163,46 @@ class BinaryFluidSim:
             return None
         return NamedSharding(self.mesh, P(None, self.shard_axis, None, None))
 
-    # -- one timestep --------------------------------------------------------
-
-    def _build_step(self):
-        params, target = self.params, self.pointwise_target
-
-        def step_local(f, g):
-            phi = g.sum(0)
-            gradphi, del2phi = stencil.gradients(phi)
-            f, g = _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=target)
-            return stencil.stream(f), stencil.stream(g)
-
-        if self.mesh is None:
-            return jax.jit(step_local)
-
-        axis = self.shard_axis
-
-        def step_sharded(f, g):
-            phi = g.sum(0)
-            gradphi, del2phi = stencil.gradients_sharded(phi, axis)
-            f, g = _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=target)
-            return stencil.stream_sharded(f, axis), stencil.stream_sharded(g, axis)
-
-        spec = P(None, axis, None, None)
-        shmapped = compat.shard_map(step_sharded, mesh=self.mesh,
-                                 in_specs=(spec, spec), out_specs=(spec, spec))
-        return jax.jit(shmapped)
-
-    def _build_fused(self):
-        """(collide, fused, stream) jitted fns for the fused regime.
-
-        The hot loop iterates the *pre-stream* state w = collide(u):
-        n unfused steps (stream∘collide)ⁿ equal stream ∘ fusedⁿ⁻¹ ∘ collide,
-        where ``fused`` is one (or two, in two_launch mode) stencil
-        launches with no intermediate full-lattice arrays beyond the
-        two_launch φ scalar.
-        """
-        params, target, mode = self.params, self.target, self.fused
-        pw_target = self.pointwise_target
-        gs = self.grid_shape
-        n = int(np.prod(gs))
-
-        def fused_local(f, g):
-            fo, go = ops.lb_fused_step(
-                f.reshape(NVEL, n), g.reshape(NVEL, n), grid_shape=gs,
-                mode=mode, target=target, **params.as_kwargs())
-            return fo.reshape(NVEL, *gs), go.reshape(NVEL, *gs)
-
-        def collide_local(f, g):
-            phi = g.sum(0)
-            gradphi, del2phi = stencil.gradients(phi)
-            return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=pw_target)
-
-        def stream_local(f, g):
-            return stencil.stream(f), stencil.stream(g)
-
-        if self.mesh is None:
-            return (jax.jit(collide_local), jax.jit(fused_local),
-                    jax.jit(stream_local))
-
-        axis = self.shard_axis
-
-        def fused_sharded(f, g):
-            # 2-plane ppermute halo exchange feeds the radius-2 ghost
-            # dependency (one_launch: the composed stencil's window;
-            # two_launch: launch A's +1 ring of streamed φ plus launch
-            # B's radius-1 stencils).
-            fe = stencil._extend_x(f, axis, 2)
-            ge = stencil._extend_x(g, axis, 2)
-            local = f.shape[1:]
-            fo, go = ops.lb_fused_step(
-                fe.reshape(NVEL, -1), ge.reshape(NVEL, -1),
-                grid_shape=local, halo=(2, 0, 0), mode=mode, target=target,
-                **params.as_kwargs())
-            return fo.reshape(NVEL, *local), go.reshape(NVEL, *local)
-
-        def collide_sharded(f, g):
-            phi = g.sum(0)
-            gradphi, del2phi = stencil.gradients_sharded(phi, axis)
-            return _collide_flat(f, g, phi, gradphi, del2phi,
-                                 params=params, target=pw_target)
-
-        def stream_sharded(f, g):
-            return (stencil.stream_sharded(f, axis),
-                    stencil.stream_sharded(g, axis))
-
-        spec = P(None, axis, None, None)
-        # pallas_call has no shard_map replication rule (0.4.x): drop the
-        # check when the fused launch dispatches to a Pallas executor.
-        check = self.target.executor == "xla" and \
-            self.pointwise_target.executor == "xla"
-
-        def shmap(fn):
-            return jax.jit(compat.shard_map(
-                fn, mesh=self.mesh, in_specs=(spec, spec),
-                out_specs=(spec, spec), check_vma=check))
-
-        return shmap(collide_sharded), shmap(fused_sharded), \
-            shmap(stream_sharded)
+    # -- stepping ------------------------------------------------------------
 
     def step(self, state: LBState, nsteps: int = 1) -> LBState:
-        f, g = state.f, state.g
+        """``nsteps`` steps, one jitted Program step per iteration
+        (python loop — bit-identical to :meth:`run`'s scan)."""
         if nsteps <= 0:
             return state
+        s = {"f": state.f, "g": state.g}
         if self.fused:
-            f, g = self._collide_fn(f, g)
+            s = self.programs["collide"].step(s)
             for _ in range(nsteps - 1):
-                f, g = self._fused_fn(f, g)
-            f, g = self._stream_fn(f, g)
+                s = self.programs["fused"].step(s)
+            s = self.programs["stream"].step(s)
         else:
             for _ in range(nsteps):
-                f, g = self._step_fn(f, g)
-        return LBState(f, g, state.step + nsteps)
+                s = self.programs["step"].step(s)
+        return LBState(s["f"], s["g"], state.step + nsteps)
 
-    def run_scanned(self, state: LBState, nsteps: int) -> LBState:
-        """nsteps under one jitted lax.scan (for benchmarking)."""
+    def run(self, state: LBState, nsteps: int, *,
+            donate: bool = False) -> LBState:
+        """``nsteps`` steps under one jitted ``lax.scan`` per Program.
+
+        ``donate=True`` donates the hot-loop field buffers (ping-pong
+        aliasing, no per-step reallocation) — the input state is consumed.
+        """
         if nsteps <= 0:
             return state
+        s = {"f": state.f, "g": state.g}
         if self.fused:
-            collide, fused, stream_ = \
-                self._collide_fn, self._fused_fn, self._stream_fn
-
-            @jax.jit
-            def many(f, g):
-                f, g = collide(f, g)
-
-                def body(carry, _):
-                    return fused(*carry), None
-                (f, g), _ = jax.lax.scan(body, (f, g), None,
-                                         length=nsteps - 1)
-                return stream_(f, g)
+            s = self.programs["collide"].step(s)
+            s = self.programs["fused"].run(s, nsteps - 1, donate=donate)
+            s = self.programs["stream"].step(s)
         else:
-            fn = self._step_fn
+            s = self.programs["step"].run(s, nsteps, donate=donate)
+        return LBState(s["f"], s["g"], state.step + nsteps)
 
-            @jax.jit
-            def many(f, g):
-                def body(carry, _):
-                    return fn(*carry), None
-                (f, g), _ = jax.lax.scan(body, (f, g), None, length=nsteps)
-                return f, g
-
-        f, g = many(state.f, state.g)
-        return LBState(f, g, state.step + nsteps)
+    def run_scanned(self, state: LBState, nsteps: int) -> LBState:
+        """Pre-Program spelling of :meth:`run` (kept for callers; see the
+        migration table in docs/targetdp_api.md)."""
+        return self.run(state, nsteps)
 
     # -- observables ---------------------------------------------------------
 

@@ -56,7 +56,6 @@ from repro.core import (
     STENCIL_GRAD_19PT,  # noqa: F401 — re-exported config switch
     Target,
     as_target,
-    compat,
     tdp_launch,
 )
 from repro.kernels.lb_collision import CV, NVEL, collision_site_kernel
@@ -191,6 +190,13 @@ def fused_two_site_kernel(f_nb, g_nb, phis_nb, *, w=None, c=None, A=0.0625,
         kappa=kappa, tau=tau, tau_phi=tau_phi, gamma=gamma)
 
 
+def phi_moment_site_kernel(g):
+    """Order-parameter moment over one chunk: φ = Σ_q g_q,
+    ``g (19, V)`` → ``(1, V)`` (the unfused pipeline's site-local moment
+    pass, as a declared pointwise kernel)."""
+    return jnp.sum(g, axis=0, keepdims=True)
+
+
 # ---------------------------------------------------------------------------
 # kernel specs — the declarative launch surface (what ops/sim dispatch on)
 # ---------------------------------------------------------------------------
@@ -223,6 +229,20 @@ FUSED_TWO_SPEC = KernelSpec(
             FieldSpec(ncomp=1, stencil=STENCIL_GRAD_6PT, name="phi_streamed")),
     out=(NVEL, NVEL), consts=_COLLISION_CONSTS)
 
+MOMENT_SPEC = KernelSpec(
+    phi_moment_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, name="g"),),
+    out=1)
+
+COLLIDE_SPEC = KernelSpec(
+    collision_site_kernel,
+    fields=(FieldSpec(ncomp=NVEL, name="f"),
+            FieldSpec(ncomp=NVEL, name="g"),
+            FieldSpec(ncomp=1, name="phi"),
+            FieldSpec(ncomp=3, name="gradphi"),
+            FieldSpec(ncomp=1, name="del2phi")),
+    out=(NVEL, NVEL), consts=_COLLISION_CONSTS)
+
 
 # ---------------------------------------------------------------------------
 # grid-level wrappers (single device: fully periodic)
@@ -249,58 +269,14 @@ def stream(dist: jax.Array, *, target: Target | str | None = None,
 
 
 # ---------------------------------------------------------------------------
-# mesh-sharded (slab decomposition along X; call inside shard_map)
+# mesh-sharded path
 # ---------------------------------------------------------------------------
-
-def _exchange_x_halo(arr: jax.Array, axis_name: str, width: int = 1
-                     ) -> tuple[jax.Array, jax.Array]:
-    """Return (left, right) ghost blocks of ``width`` X-planes for a local
-    slab ``(..., Xl, Y, Z)``.
-
-    left  = left neighbour's last ``width`` planes (global periodic wrap),
-    right = right neighbour's first ``width`` planes.
-    Only the boundary planes are communicated — the masked-copy idea: the
-    transfer set is the boundary subset, never the bulk.
-    """
-    n = compat.axis_size(axis_name)
-    fwd = [(i, (i + 1) % n) for i in range(n)]   # data flows rank i → i+1
-    bwd = [(i, (i - 1) % n) for i in range(n)]
-    last = arr[..., -width:, :, :]
-    first = arr[..., :width, :, :]
-    left = jax.lax.ppermute(last, axis_name, fwd)    # from left neighbour
-    right = jax.lax.ppermute(first, axis_name, bwd)  # from right neighbour
-    return left, right
-
-
-def _extend_x(arr: jax.Array, axis_name: str, width: int) -> jax.Array:
-    """Local slab ``(ncomp, Xl, Y, Z)`` → ``(ncomp, Xl+2·width, Y, Z)`` with
-    exchanged ghost planes."""
-    lh, rh = _exchange_x_halo(arr, axis_name, width)
-    return jnp.concatenate([lh, arr, rh], axis=1)
-
-
-def gradients_sharded(phi: jax.Array, axis_name: str, *,
-                      target: Target | str | None = None,
-                      vvl: int | None = None
-                      ) -> tuple[jax.Array, jax.Array]:
-    """Sharded version of :func:`gradients`; ``phi`` is the local X-slab."""
-    ext = _extend_x(phi[None], axis_name, 1)           # (1, Xl+2, Y, Z)
-    lat = Lattice(phi.shape)
-    grad, lap = tdp_launch(GRAD6_SPEC, as_target(target, vvl=vvl),
-                           ext.reshape(1, -1), lattice=lat, halo=(1, 0, 0))
-    return grad.reshape(3, *phi.shape), lap.reshape(phi.shape)
-
-
-def stream_sharded(dist: jax.Array, axis_name: str, *,
-                   target: Target | str | None = None,
-                   vvl: int | None = None) -> jax.Array:
-    """Sharded streaming of the local slab ``(19, Xl, Y, Z)``."""
-    ext = _extend_x(dist, axis_name, 1)                # (19, Xl+2, Y, Z)
-    gs = dist.shape[1:]
-    lat = Lattice(gs)
-    out = tdp_launch(STREAM_SPEC, as_target(target, vvl=vvl),
-                     ext.reshape(NVEL, -1), lattice=lat, halo=(1, 0, 0))
-    return out.reshape(NVEL, *gs)
+#
+# The slab-decomposition glue (ppermute ghost exchange + per-launch halo
+# widths) that used to live here is owned by the Program layer now:
+# repro.core.program back-propagates one exchange schedule per step
+# (`Program.schedule`) and performs the exchange in `_exchange_dim0` —
+# repro.lb.programs declares the LB step graphs it applies to.
 
 
 def halo_plane_mask(shape: tuple[int, int, int]) -> np.ndarray:

@@ -23,6 +23,9 @@ paper               here
 ``TARGET_ILP``      the trailing VVL axis, ``Target.vvl`` tunes it
 ``TARGET_CONST``    :class:`TargetConst` / launch ``**consts``
 C-vs-CUDA switch    :class:`Target` + :func:`register_executor`
+host step glue      :func:`tdp.program` — multi-launch step graphs with
+                    double-buffered fields and one halo schedule per
+                    step (:mod:`repro.core.program`)
 ==================  =====================================================
 """
 from repro.core.target import (  # noqa: F401
@@ -55,6 +58,14 @@ from repro.core.api import (  # noqa: F401
     pad_sites,
     xla_executor,
 )
+from repro.core.program import (  # noqa: F401
+    CompiledProgram,
+    Program,
+    ProgramPlan,
+    Stage,
+    program,
+    stage,
+)
 from repro.core.execute import reduce, site_kernel  # noqa: F401
 from repro.core.lattice import (  # noqa: F401
     D3Q19_VELOCITIES,
@@ -83,6 +94,8 @@ __all__ = [
     "registry_version",
     "launch", "launch_plan", "LaunchPlan", "xla_executor",
     "gather_neighbors", "halo_extend", "pad_sites",
+    "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
+    "stage",
     "reduce", "site_kernel",
     "Lattice", "token_lattice", "Stencil", "D3Q19_VELOCITIES",
     "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",

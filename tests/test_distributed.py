@@ -228,6 +228,47 @@ np.testing.assert_allclose(np.asarray(a.g), np.asarray(b.g), rtol=2e-4, atol=2e-
 print("LB_TWO_LAUNCH_HALO_OK")
 """)
 
+    def test_lb_program_sharded_4way_matches_local(self):
+        """The tdp.Program sharded step: one ghost-exchange round per
+        step at the back-propagated widths ({f: 1, g: 2} for the
+        two-launch graph — f travels *one* plane, not the old blanket
+        two), bit-identical to the single-device trajectory on a 4-way
+        slab decomposition."""
+        run_sub(PRELUDE + """
+from repro.lb.sim import BinaryFluidSim
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((4,), ("data",))
+s_loc = BinaryFluidSim((16, 8, 8), fused="two_launch")
+s_sh = BinaryFluidSim((16, 8, 8), mesh=mesh, shard_axis="data",
+                      fused="two_launch")
+assert s_sh.programs["fused"].halo_schedule == {"f": 1, "g": 2}, \\
+    s_sh.programs["fused"].halo_schedule
+# the collide prologue has no stream stage: f needs no exchange at all
+assert s_sh.programs["collide"].halo_schedule == {"f": 0, "g": 1}
+assert s_sh.programs["stream"].halo_schedule == {"f": 1, "g": 1}
+st0 = s_loc.init_spinodal(seed=1)
+st1 = s_sh.init_spinodal(seed=1)
+a = s_loc.step(st0, 5)
+b = s_sh.step(st1, 5)
+np.testing.assert_array_equal(np.asarray(a.f), np.asarray(b.f))
+np.testing.assert_array_equal(np.asarray(a.g), np.asarray(b.g))
+c = s_sh.run(st1, 5)
+np.testing.assert_array_equal(np.asarray(b.f), np.asarray(c.f))
+np.testing.assert_array_equal(np.asarray(b.g), np.asarray(c.g))
+
+# maximal decomposition: a 1-plane slab under the width-2 g schedule
+# (the exchange hops two ranks) still matches the local trajectory
+t_loc = BinaryFluidSim((4, 8, 8))
+t_sh = BinaryFluidSim((4, 8, 8), mesh=mesh, shard_axis="data")
+u0 = t_loc.init_spinodal(seed=2)
+u1 = t_sh.init_spinodal(seed=2)
+ua = t_loc.step(u0, 4)
+ub = t_sh.step(u1, 4)
+np.testing.assert_array_equal(np.asarray(ua.f), np.asarray(ub.f))
+np.testing.assert_array_equal(np.asarray(ua.g), np.asarray(ub.g))
+print("LB_PROGRAM_4WAY_OK")
+""")
+
     def test_trainer_on_mesh_with_compression(self):
         run_sub(PRELUDE + """
 import tempfile
