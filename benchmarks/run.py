@@ -38,9 +38,21 @@ grid size, executor per variant) under ``--out`` — the cross-PR perf
 trajectory; the nightly CI lane uploads them as artifacts.
 
 ``--sweep key=v1,v2,...`` re-runs the windowed-executor variants of the
-stencil benches once per value of the ``Target.tuning`` knob (e.g.
-``plane_block``, the ROADMAP follow-up for the windowed executor) and
-records the per-value medians into the bench JSON under ``"sweep"``.
+stencil benches once per value of any ``Target.tuning`` knob the
+executor *declares* (``tdp.executor_tunables``; e.g. ``plane_block``)
+and records the per-value medians into the bench JSON under
+``"sweep"``.  A knob the executor ignores exits 2 up front — a silently
+ignored sweep would read as "ran".
+
+``--autotune`` closes the tuning loop: ``tdp.autotune`` runs over
+``bench_fused_step``'s fused Program (windowed target), the chosen
+tuning + full ``TuneReport`` land in ``BENCH_fused_step.json`` under
+the ``"tuning"`` / ``"autotune"`` keys (extending, not replacing, the
+PR 3/4 record schema), and the measured choice persists in the
+``results/tuning/`` cache — a re-run reproduces it without measuring.
+``--grid N`` / ``--steps K`` shrink the lattice / timing repetitions
+for smoke runs (the CI fast lane runs ``--autotune --grid 8 --steps
+2``).
 """
 from __future__ import annotations
 
@@ -63,11 +75,48 @@ BENCH_RECORDS = {}
 #: ``--sweep key=v1,v2,...`` values (parsed by main); benches with a
 #: windowed-executor variant consult this and record one extra variant
 #: per value under the bench record's "sweep" key.
-SWEEPS: dict[str, list[int]] = {}
+SWEEPS: dict[str, list] = {}
+
+#: the executor the sweep consumers retune — sweep keys are validated
+#: against its declared tunables (``tdp.executor_tunables``) in main().
+SWEEP_EXECUTOR = "pallas_windowed"
+
+#: display/record abbreviations for sweep-variant keys (keeps the
+#: PR 4 ``fused_windowed_pb<N>`` JSON spelling stable).
+_KNOB_ABBREV = {"plane_block": "pb"}
+
+#: --grid N / --steps K overrides (None → bench defaults).
+GRID_OVERRIDE: int | None = None
+REPS_OVERRIDE: int | None = None
+
+#: --autotune: run tdp.autotune over bench_fused_step's Program and
+#: record the choice + report into its BENCH JSON.
+AUTOTUNE = False
+TUNING_CACHE = "results/tuning"
+
+
+def _grid(default: tuple) -> tuple:
+    if GRID_OVERRIDE is not None:
+        return (GRID_OVERRIDE,) * len(default)
+    return default
+
+
+def _sweep_variants(base_target):
+    """``(knob, value, record_suffix, display_suffix, target)`` per swept
+    knob value — the generic spelling of the old plane_block-only loop."""
+    out = []
+    for key, vals in SWEEPS.items():
+        short = _KNOB_ABBREV.get(key, f"{key}_")
+        for v in vals:
+            out.append((key, v, f"{short}{v}", f"{key}={v}",
+                        base_target.with_tuning({key: v})))
+    return out
 
 
 def _time_stats(fn, *args, reps=5, warmup=2):
     """{"median_s", "min_s"} over ``reps`` timed calls."""
+    if REPS_OVERRIDE is not None:
+        reps, warmup = REPS_OVERRIDE, min(warmup, 1)
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -230,7 +279,7 @@ def bench_fused_step(quick=False):
     from repro.lb.params import LBParams
     from repro.lb.sim import BinaryFluidSim
 
-    grid = (16, 16, 16) if quick else (24, 24, 24)
+    grid = _grid((16, 16, 16) if quick else (24, 24, 24))
     n = int(np.prod(grid))
     p = LBParams(A=0.125, B=0.125, kappa=0.02)
 
@@ -272,13 +321,14 @@ def bench_fused_step(quick=False):
         ("fused (windowed, gather-free, interpret)", "fused_windowed",
          "pallas_windowed", sim_w.programs["fused"].step, (ws,)),
     ]
-    for pb in SWEEPS.get("plane_block", ()):
-        sim_pb = BinaryFluidSim(
-            grid, params=p, fused="one_launch",
-            target=wt.with_(tuning={"plane_block": int(pb)}))
+    sweep_keys = {}
+    for knob, v, rec_sfx, disp_sfx, s_tgt in _sweep_variants(wt):
+        sim_pb = BinaryFluidSim(grid, params=p, fused="one_launch",
+                                target=s_tgt)
+        key = f"fused_windowed_{rec_sfx}"
+        sweep_keys[key] = (knob, v)
         variants.append(
-            (f"fused (windowed, plane_block={pb})",
-             f"fused_windowed_pb{pb}", "pallas_windowed",
+            (f"fused (windowed, {disp_sfx})", key, "pallas_windowed",
              sim_pb.programs["fused"].step, (ws,)))
 
     rows, rec = [], {"grid": list(grid), "variants": {}}
@@ -292,14 +342,38 @@ def bench_fused_step(quick=False):
             "t_s": t, "ns_per_site_step": per_site_ns, "executor": executor,
             **ts, **({"hbm_bytes_estimate": hbm[key]} if key in hbm else {}),
         }
-        if key.startswith("fused_windowed_pb"):
-            rec.setdefault("sweep", {}).setdefault("plane_block", {})[
-                key.rsplit("pb", 1)[1]] = {"median_s": t, **ts}
+        if key in sweep_keys:
+            knob, v = sweep_keys[key]
+            rec.setdefault("sweep", {}).setdefault(knob, {})[
+                str(v)] = {"median_s": t, **ts}
         if base_t is None:
             base_t = t
         rows.append((label, f"{t*1e3:.2f}", f"{per_site_ns:.1f}",
                      f"{n/t/1e6:.1f}", f"{base_t/t:.2f}×",
                      f"{hbm[key]/2**20:.1f}" if key in hbm else "-"))
+
+    if AUTOTUNE:
+        # Close the tuning loop over the fused Program: the default
+        # space (windowed plane_block divisor sweep + the xla fallback)
+        # measured under the real wall-clock timer; the winner and the
+        # full per-candidate report extend this bench's JSON record, and
+        # the choice persists in results/tuning/ (a re-run with a warm
+        # cache reports cache_hit=True without re-measuring).
+        tuned, rep = tdp.autotune(
+            sim_w.programs["fused"], example_state=ws,
+            measure_steps=1, reps=REPS_OVERRIDE or 3, warmup=1,
+            cache_dir=TUNING_CACHE)
+        rec["tuning"] = {"backend": tuned.backend,
+                         "interpret": tuned.interpret,
+                         **tuned.tuning_dict()}
+        rec["autotune"] = rep.as_dict()
+        rows.append((f"autotuned → {rep.best.label}"
+                     f"{' (cache hit)' if rep.cache_hit else ''}",
+                     f"{rep.best_median_s*1e3:.2f}",
+                     f"{rep.best_median_s/n*1e9:.1f}",
+                     f"{n/rep.best_median_s/1e6:.1f}",
+                     f"{rep.default_median_s/rep.best_median_s:.2f}×",
+                     "-"))
 
     # Program-driven scanned variant: K steps in one jitted lax.scan with
     # donated (ping-pong aliased) field buffers; per-step cost amortises
@@ -348,21 +422,21 @@ def _bench_stencil_launch(name, spec, make_input, quick):
     from repro import tdp
     from repro.core import Lattice, launch_plan
 
-    grid = (16, 16, 16) if quick else (24, 24, 24)
+    grid = _grid((16, 16, 16) if quick else (24, 24, 24))
     lat = Lattice(grid)
     n = lat.nsites
     x = make_input(lat)
 
     wt = tdp.Target("pallas_windowed", interpret=True)
-    targets = [("xla", tdp.Target("xla", vvl=128)),
-               ("pallas_interpret", tdp.Target("pallas_interpret", vvl=128)),
-               ("pallas_windowed", wt)]
-    for pb in SWEEPS.get("plane_block", ()):
-        targets.append((f"pallas_windowed_pb{pb}",
-                        wt.with_(tuning={"plane_block": int(pb)})))
+    targets = [("xla", None, tdp.Target("xla", vvl=128)),
+               ("pallas_interpret", None,
+                tdp.Target("pallas_interpret", vvl=128)),
+               ("pallas_windowed", None, wt)]
+    for knob, v, rec_sfx, _disp, s_tgt in _sweep_variants(wt):
+        targets.append((f"pallas_windowed_{rec_sfx}", (knob, v), s_tgt))
 
     rows, rec = [], {"grid": list(grid), "variants": {}}
-    for key, tgt in targets:
+    for key, swept, tgt in targets:
         fn = _jax.jit(lambda a, t=tgt: tdp.launch(spec, t, a, lattice=lat))
         ts = _time_stats(fn, x, reps=3 if "windowed" in key else 5)
         t = ts["median_s"]
@@ -371,9 +445,10 @@ def _bench_stencil_launch(name, spec, make_input, quick):
             "t_s": t, "ns_per_site": t / n * 1e9,
             "executor": tgt.executor, **ts, "hbm_bytes_estimate": hbm,
         }
-        if "_pb" in key:
-            rec.setdefault("sweep", {}).setdefault("plane_block", {})[
-                key.rsplit("pb", 1)[1]] = {"median_s": t, **ts}
+        if swept is not None:
+            knob, v = swept
+            rec.setdefault("sweep", {}).setdefault(knob, {})[
+                str(v)] = {"median_s": t, **ts}
         rows.append((key, f"{t*1e3:.3f}", f"{t/n*1e9:.1f}",
                      f"{n/t/1e6:.1f}", f"{hbm/2**20:.2f}"))
     RESULTS[name] = rec
@@ -465,14 +540,14 @@ BENCHES = {
 }
 
 
-#: tuning knobs the benches actually consume; unknown --sweep keys are
-#: rejected up front (a silently ignored sweep would read as "ran").
-SWEEPABLE = ("plane_block",)
+def _parse_sweep(text: str) -> dict[str, list]:
+    """``"plane_block=1,2,4"`` → ``{"plane_block": [1, 2, 4]}``.
 
-
-def _parse_sweep(text: str) -> dict[str, list[int]]:
-    """``"plane_block=1,2,4"`` → ``{"plane_block": [1, 2, 4]}``."""
-    out: dict[str, list[int]] = {}
+    Any ``Target.tuning`` knob parses (values as ints where possible);
+    whether the swept executor actually *consumes* the knob is validated
+    against its declared tunables in :func:`main` — a silently ignored
+    sweep would read as "ran"."""
+    out: dict[str, list] = {}
     for part in text.split(";"):
         part = part.strip()
         if not part:
@@ -481,10 +556,18 @@ def _parse_sweep(text: str) -> dict[str, list[int]]:
             raise ValueError(f"--sweep expects key=v1,v2,...; got {part!r}")
         key, vals = part.split("=", 1)
         key = key.strip()
-        if key not in SWEEPABLE:
-            raise ValueError(f"--sweep key {key!r} is not consumed by any "
-                             f"bench; sweepable: {', '.join(SWEEPABLE)}")
-        values = [int(v) for v in vals.split(",") if v.strip()]
+        if not key:
+            raise ValueError(f"--sweep has an empty knob name: {part!r}")
+        values = []
+        for v in vals.split(","):
+            v = v.strip()
+            if not v:
+                continue
+            try:
+                values.append(int(v))
+            except ValueError:
+                raise ValueError(
+                    f"--sweep {key}= values must be integers, got {v!r}")
         if not values:
             raise ValueError(f"--sweep {key}= has no values")
         out[key] = values
@@ -497,6 +580,7 @@ SWEEP_CONSUMERS = ("fused_step", "stream", "grad")
 
 
 def main(argv=None):
+    global AUTOTUNE, GRID_OVERRIDE, REPS_OVERRIDE, TUNING_CACHE
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
@@ -506,11 +590,38 @@ def main(argv=None):
                     help="also write one BENCH_<name>.json per bench run "
                          "(machine-readable perf trajectory) under --out")
     ap.add_argument("--sweep", default=None, metavar="KEY=V1,V2,...",
-                    help="sweep a Target.tuning knob (e.g. "
-                         "plane_block=1,2,4) over the windowed-executor "
-                         "variants; per-value medians land in the bench "
-                         "JSON under 'sweep'")
+                    help="sweep any Target.tuning knob the windowed "
+                         "executor declares (e.g. plane_block=1,2,4) over "
+                         "its bench variants; per-value medians land in "
+                         "the bench JSON under 'sweep'; an undeclared "
+                         "knob exits 2")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run tdp.autotune over bench_fused_step's fused "
+                         "Program; the tuned choice + TuneReport extend "
+                         "BENCH_fused_step.json ('tuning'/'autotune' "
+                         "keys) and persist in the --tuning-cache dir")
+    ap.add_argument("--grid", type=int, default=None, metavar="N",
+                    help="override the lattice side (N³) for the grid "
+                         "benches — smoke runs")
+    ap.add_argument("--steps", type=int, default=None, metavar="K",
+                    help="override timing repetitions per variant (and "
+                         "autotune reps) — smoke runs")
+    ap.add_argument("--tuning-cache", default="results/tuning",
+                    help="tdp.autotune on-disk cache directory")
     args = ap.parse_args(argv)
+
+    if args.grid is not None:
+        if args.grid <= 0:
+            print("[benchmarks] --grid must be positive", file=sys.stderr)
+            return 2
+        GRID_OVERRIDE = args.grid
+    if args.steps is not None:
+        if args.steps <= 0:
+            print("[benchmarks] --steps must be positive", file=sys.stderr)
+            return 2
+        REPS_OVERRIDE = args.steps
+    AUTOTUNE = bool(args.autotune)
+    TUNING_CACHE = args.tuning_cache
 
     if args.only:
         selected = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -523,11 +634,25 @@ def main(argv=None):
     else:
         selected = list(BENCHES)
 
+    if AUTOTUNE and "fused_step" not in selected:
+        print("[benchmarks] --autotune runs inside bench_fused_step, which "
+              "the --only selection excludes", file=sys.stderr)
+        return 2
+
     if args.sweep:
         try:
             SWEEPS.update(_parse_sweep(args.sweep))
         except ValueError as e:
             print(f"[benchmarks] {e}", file=sys.stderr)
+            return 2
+        from repro.core import executor_tunables
+        declared = executor_tunables(SWEEP_EXECUTOR)
+        ignored = sorted(set(SWEEPS) - set(declared))
+        if ignored:
+            print(f"[benchmarks] --sweep knob(s) {', '.join(ignored)} are "
+                  f"ignored by executor {SWEEP_EXECUTOR!r}; declared "
+                  f"tunables: {', '.join(declared) or '(none)'}",
+                  file=sys.stderr)
             return 2
         if not set(selected) & set(SWEEP_CONSUMERS):
             print(f"[benchmarks] --sweep has no effect: none of the "

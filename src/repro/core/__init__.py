@@ -44,6 +44,8 @@ from .memory import (
 from .target import Target, as_target, default_vvl, set_default_vvl
 from .spec import FieldSpec, KernelSpec, kernel
 from .registry import (
+    compatible_executors,
+    executor_tunables,
     executor_wants,
     get_executor,
     get_executor_entry,
@@ -68,6 +70,15 @@ from .program import (
     program,
     stage,
 )
+from .autotune import (
+    Candidate,
+    TuneReport,
+    TuneResult,
+    autotune,
+    default_space,
+    plane_block_candidates,
+    wall_clock_timer,
+)
 from .execute import (
     launch,
     launch_stencil,
@@ -89,9 +100,12 @@ __all__ = [
     "tdp_launch", "launch_plan", "LaunchPlan", "gather_neighbors",
     "halo_extend", "pad_sites",
     "register_executor", "unregister_executor", "get_executor",
-    "get_executor_entry", "executor_wants", "list_executors",
-    "registry_version",
+    "get_executor_entry", "executor_wants", "executor_tunables",
+    "compatible_executors", "list_executors", "registry_version",
     # step graphs
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
     "stage",
+    # autotuning
+    "autotune", "default_space", "plane_block_candidates",
+    "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",
 ]

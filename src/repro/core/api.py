@@ -562,8 +562,18 @@ def _pallas_windowed_executor(plan: LaunchPlan, extended):
     return windowed_execute(plan, extended)
 
 
+# ``tunables`` declares the Target.tuning keys consulted when
+# dispatching under each name — the sweep/autotune contract.  The
+# pointwise block knobs on "pallas" are consumed by the ops layer
+# (repro.kernels.ops reads them off the same Target), not by
+# pallas_execute itself; declaring them here keeps one authoritative
+# table for `benchmarks/run.py --sweep` validation and `tdp.autotune`
+# space construction.
+_PALLAS_TUNABLES = ("block_f", "block_q", "block_k", "block_d", "block_t")
+
 register_executor("xla", xla_executor)
-register_executor("pallas", _pallas_executor)
-register_executor("pallas_interpret", _pallas_executor)
+register_executor("pallas", _pallas_executor, tunables=_PALLAS_TUNABLES)
+register_executor("pallas_interpret", _pallas_executor,
+                  tunables=_PALLAS_TUNABLES)
 register_executor("pallas_windowed", _pallas_windowed_executor,
-                  wants="halo_extended")
+                  wants="halo_extended", tunables=("plane_block",))

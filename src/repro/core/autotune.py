@@ -1,0 +1,685 @@
+"""``tdp.autotune`` — close the paper's tuning loop over ``Target.tuning``.
+
+The paper's portability claim is explicitly *tuned* portability: one
+source, with per-platform decomposition knobs (TLP/ILP split, SIMD
+vector length) chosen to fit the hardware, and its sequel ("A
+Lightweight Approach to Performance Portability with targetDP",
+1609.01479) states that those knobs must be re-chosen per device.  This
+framework exposes the knobs — the executor choice, ``vvl``,
+``Target.tuning["plane_block"]``, the pointwise block sizes — but until
+now choosing them was manual (``benchmarks/run.py --sweep``).
+:func:`autotune` closes the loop:
+
+1. **enumerate** a candidate space of :class:`Candidate` assignments,
+   derived from the program/spec and the launch geometry unless given
+   explicitly: the executor axis comes from
+   :func:`repro.core.registry.compatible_executors` (capability-checked
+   against the spec's stencil needs), ``plane_block`` sweeps the
+   *divisors* of the launch's x-plane count for ``wants="halo_extended"``
+   executors, and the pointwise Pallas block knobs sweep
+   :data:`POINTWISE_TUNABLE_VALUES` where the executor declares them;
+2. **prune** infeasible candidates up front — a candidate whose
+   :meth:`~repro.core.api.LaunchPlan.vmem_bytes_estimate` (max over
+   stages, for a Program) exceeds ``vmem_limit`` is never measured;
+3. **measure** each survivor with a pluggable ``timer`` (median over
+   ``reps`` calls of a ``measure_steps``-step run; real wall clock by
+   default, injectable fake for deterministic tests);
+4. **return** a frozen tuned :class:`~repro.core.target.Target` (the
+   base target with the winning candidate's backend + merged tuning)
+   plus a :class:`TuneReport` (per-candidate medians, the pruned list,
+   the cache key).
+
+Correctness is decoupled from tuning by construction — candidates only
+permute *how* the same launches execute, never *what* they compute; the
+optional ``check_identical=True`` verifies this at tune time by
+comparing every candidate's output bit-for-bit against the default
+target's (mismatches are pruned, not chosen).  The base target is always
+candidate 0, so the tuned median can never exceed the default median.
+
+Results persist in an on-disk cache (``results/tuning/`` by default)
+keyed by (program/spec digest, grid, backend family, device kind) —
+repeated runs skip measurement entirely and reproduce the same choice
+(``TuneReport.cache_hit``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import time
+from typing import Any, Callable, Mapping, NamedTuple, Sequence
+
+import jax
+import numpy as np
+
+from .api import launch as _launch
+from .api import launch_plan as _launch_plan
+from .lattice import Lattice
+from .program import CompiledProgram, Program
+from .registry import (
+    compatible_executors,
+    executor_tunables,
+    executor_wants,
+)
+from .spec import KernelSpec
+from .target import Target, as_target
+
+#: default per-candidate VMEM feasibility budget — one TPU core's vector
+#: memory (the windowed executor's window must fit; see docs/stencil.md,
+#: "VMEM footprint rule").
+DEFAULT_VMEM_LIMIT = 16 * 2 ** 20
+
+#: default candidate values for the pointwise Pallas block knobs
+#: (consulted per executor: only keys the executor *declares* via
+#: ``register_executor(..., tunables=...)`` are swept).
+POINTWISE_TUNABLE_VALUES: dict[str, tuple[int, ...]] = {
+    "block_f": (256, 512, 1024),
+    "block_q": (64, 128, 256),
+    "block_k": (64, 128, 256),
+    "block_d": (64, 128),
+    "block_t": (64, 128),
+}
+
+
+# ---------------------------------------------------------------------------
+# candidates
+# ---------------------------------------------------------------------------
+
+def _freeze_items(mapping) -> tuple[tuple[str, Any], ...]:
+    if not mapping:
+        return ()
+    items = (mapping.items() if isinstance(mapping, Mapping)
+             else (tuple(kv) for kv in mapping))
+    return tuple(sorted((str(k), v) for k, v in items))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the tuning space: an executor assignment plus the
+    ``Target.tuning`` knobs to merge in.
+
+    ``backend`` is a registry name (the ``"..._interpret"`` spellings
+    canonicalise through :class:`Target` as usual); ``tuning`` is merged
+    into — never replaces — the base target's tuning, so unrelated knobs
+    ride through unchanged.
+    """
+
+    backend: str
+    interpret: bool = False
+    tuning: tuple[tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "tuning", _freeze_items(self.tuning))
+
+    def target_from(self, base: Target) -> Target:
+        t = base.with_(backend=self.backend, interpret=self.interpret)
+        return t.with_tuning(dict(self.tuning)) if self.tuning else t
+
+    @property
+    def label(self) -> str:
+        name = self.backend
+        if self.interpret and not name.endswith("_interpret"):
+            name += "_interpret"
+        if self.tuning:
+            knobs = ",".join(f"{k}={v}" for k, v in self.tuning)
+            return f"{name}[{knobs}]"
+        return name
+
+    def as_dict(self) -> dict:
+        return {"backend": self.backend, "interpret": self.interpret,
+                "tuning": dict(self.tuning)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Candidate":
+        return cls(d["backend"], bool(d.get("interpret", False)),
+                   _freeze_items(d.get("tuning") or {}))
+
+    @classmethod
+    def of(cls, target: Target) -> "Candidate":
+        """The candidate that reproduces ``target``'s dispatch."""
+        return cls(target.backend, target.interpret, target.tuning)
+
+
+def _divisors(n: int) -> list[int]:
+    n = int(n)
+    small, large = [], []
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+    return small + large[::-1]
+
+
+def plane_block_candidates(spec: KernelSpec, target: Target | str | None,
+                           lattice: Lattice, *, halo=None, consts=None,
+                           vmem_limit: int = DEFAULT_VMEM_LIMIT):
+    """The ``plane_block`` axis for one ``wants="halo_extended"`` launch.
+
+    Emits the divisors of the launch's x-plane count (``plan.shape[0]``
+    — for a Program stage that is the *extended* plane count, interior +
+    recompute ring) whose windowed-executor VMEM model fits
+    ``vmem_limit``.  Divisors, not every integer: the executor pads the
+    grid to a ``plane_block`` multiple, so non-divisors waste whole
+    padded planes per step.
+
+    Returns ``(feasible, pruned)`` — ``feasible`` the surviving
+    ``plane_block`` values, ``pruned`` a list of ``(value, reason)``.
+    """
+    tgt = as_target(target)
+    feasible: list[int] = []
+    pruned: list[tuple[int, str]] = []
+    base_plan = _launch_plan(spec, tgt, lattice=lattice, halo=halo,
+                             consts=consts)
+    for p in _divisors(base_plan.shape[0]):
+        plan = _launch_plan(spec, tgt.with_tuning(plane_block=p),
+                            lattice=lattice, halo=halo, consts=consts)
+        vmem = plan.vmem_bytes_estimate()
+        if vmem <= vmem_limit:
+            feasible.append(p)
+        else:
+            pruned.append((p, f"vmem estimate {vmem} > limit {vmem_limit}"))
+    return feasible, pruned
+
+
+def _program_plane_counts(program: Program, target: Target,
+                          grid_shape) -> list[int]:
+    """x-plane counts of every stage a ``halo_extended`` executor would
+    actually run (stencil stages; pointwise stages route to xla)."""
+    pplan = program.plan(target, grid_shape=grid_shape)
+    return [p.shape[0] for _, p in pplan.stages
+            if p.wants == "halo_extended" and p.shape is not None]
+
+
+def default_space(program_or_spec, target: Target | str | None = None, *,
+                  grid_shape: Sequence[int] | None = None,
+                  lattice: Lattice | None = None, halo=None, consts=None,
+                  executors: Sequence[str] | None = None,
+                  vmem_limit: int = DEFAULT_VMEM_LIMIT):
+    """Derive the default candidate space for :func:`autotune`.
+
+    Axes (the candidate-space table in docs/targetdp_api.md):
+
+    * the **base target itself** — always candidate 0, so the tuned
+      median is ≤ the default median by construction;
+    * the **executor axis** — ``executors`` if given, else the base
+      executor + ``"xla"``, intersected with
+      :func:`~repro.core.registry.compatible_executors` for the spec's
+      capability needs (a pointwise-only spec never meets a
+      ``halo_extended`` executor);
+    * per ``wants="halo_extended"`` executor, the **plane_block
+      divisor sweep** (:func:`plane_block_candidates`), VMEM-filtered;
+    * per executor that declares pointwise block knobs
+      (``executor_tunables``), one candidate per value in
+      :data:`POINTWISE_TUNABLE_VALUES`.
+
+    Returns ``(candidates, pruned)`` where ``pruned`` is a list of
+    ``(label, reason)`` for space points rejected before measurement.
+    """
+    base = as_target(target)
+    is_program = isinstance(program_or_spec, Program)
+    if is_program:
+        has_stencil = any(st.spec.has_stencil
+                          for st in program_or_spec.stages)
+        if grid_shape is None:
+            raise ValueError("default_space over a Program needs "
+                             "grid_shape")
+    elif isinstance(program_or_spec, KernelSpec):
+        has_stencil = program_or_spec.has_stencil
+        if has_stencil and lattice is None:
+            raise ValueError("default_space over a stencil KernelSpec "
+                             "needs the lattice")
+    else:
+        raise TypeError(f"expected a Program or KernelSpec, got "
+                        f"{type(program_or_spec).__name__}")
+
+    ok = set(compatible_executors(stencil=has_stencil))
+    if executors is None:
+        names = [base.executor, "xla"]
+    else:
+        names = [str(n) for n in executors]
+    pruned: list[tuple[str, str]] = []
+    seen: set[str] = set()
+    axis: list[Candidate] = []
+    for n in names:
+        t = as_target(n)
+        # inherit the base interpret flag when staying in the base's
+        # backend family (a CPU host tuning pallas_windowed_interpret
+        # must not emit the un-runnable hardware spelling)
+        interpret = t.interpret or (base.interpret
+                                    and t.backend == base.backend)
+        cand = Candidate(t.backend, interpret)
+        if cand.label in seen:
+            continue
+        seen.add(cand.label)
+        if cand.backend not in ok:
+            reason = ("not registered" if cand.backend not in
+                      set(compatible_executors(stencil=True))
+                      else "wants='halo_extended' but the launch has no "
+                           "stencil field")
+            pruned.append((cand.label, reason))
+            continue
+        axis.append(cand)
+
+    candidates: list[Candidate] = [Candidate.of(base)]
+    cand_seen = {candidates[0].label}
+
+    def add(c: Candidate):
+        if c.label not in cand_seen:
+            cand_seen.add(c.label)
+            candidates.append(c)
+
+    for cand in axis:
+        add(cand)
+        probe = cand.target_from(base)
+        if executor_wants(cand.backend) == "halo_extended":
+            if is_program:
+                # divisors of every windowed stage's (extended) plane
+                # count ≡ divisors of their gcd; feasibility is the
+                # aggregated ProgramPlan VMEM model (max over stages)
+                counts = _program_plane_counts(program_or_spec, probe,
+                                               grid_shape)
+                if not counts:
+                    continue
+                values = []
+                for v in _divisors(math.gcd(*counts)):
+                    pplan = program_or_spec.plan(
+                        probe.with_tuning(plane_block=v),
+                        grid_shape=grid_shape)
+                    vmem = pplan.vmem_bytes_estimate()
+                    if vmem <= vmem_limit:
+                        values.append(v)
+                    else:
+                        pruned.append(
+                            (f"{cand.label}[plane_block={v}]",
+                             f"vmem estimate {vmem} > limit "
+                             f"{vmem_limit}"))
+            else:
+                values, pr = plane_block_candidates(
+                    program_or_spec, probe, lattice, halo=halo,
+                    consts=consts, vmem_limit=vmem_limit)
+                for v, why in pr:
+                    pruned.append((f"{cand.label}[plane_block={v}]", why))
+            for v in values:
+                add(Candidate(cand.backend, cand.interpret,
+                              ((("plane_block", int(v)),))))
+        elif not has_stencil:
+            # pointwise launches: the block knobs the executor declares
+            # (stencil programs route pointwise stages to xla, so the
+            # knobs would be dead weight there)
+            for key in executor_tunables(cand.backend):
+                for v in POINTWISE_TUNABLE_VALUES.get(key, ()):
+                    add(Candidate(cand.backend, cand.interpret,
+                                  (((key, int(v)),))))
+    return candidates, pruned
+
+
+# ---------------------------------------------------------------------------
+# timers
+# ---------------------------------------------------------------------------
+
+def wall_clock_timer(candidate: Target, run: Callable[[], Any]) -> float:
+    """The default timer: execute ``run`` once, block on its outputs,
+    return elapsed wall-clock seconds.  The ``timer`` protocol — any
+    ``(candidate_target, run) -> seconds`` callable — is the injection
+    point for deterministic tests (a fake can script per-candidate costs
+    and never execute anything)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+class CandidateResult(NamedTuple):
+    """One measured point: the candidate, its median, the raw samples."""
+
+    candidate: Candidate
+    median_s: float
+    times_s: tuple[float, ...]
+
+    def as_dict(self) -> dict:
+        return {**self.candidate.as_dict(), "label": self.candidate.label,
+                "median_s": self.median_s, "times_s": list(self.times_s)}
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneReport:
+    """What :func:`autotune` measured and chose.
+
+    ``results`` holds one :class:`CandidateResult` per measured
+    candidate (measurement order; the base target is always first);
+    ``pruned`` the ``(label, reason)`` pairs rejected before or during
+    measurement; ``best`` the winning candidate; ``cache_hit`` whether
+    the choice was replayed from the on-disk cache without measuring.
+    """
+
+    name: str
+    grid: tuple[int, ...]
+    device: str
+    results: tuple[CandidateResult, ...]
+    pruned: tuple[tuple[str, str], ...]
+    best: Candidate
+    default_median_s: float
+    cache_key: str
+    cache_hit: bool = False
+    measure_steps: int = 1
+
+    @property
+    def best_median_s(self) -> float:
+        for r in self.results:
+            if r.candidate == self.best:
+                return r.median_s
+        raise ValueError(f"best candidate {self.best.label!r} has no "
+                         f"measurement")
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name, "grid": list(self.grid),
+            "device": self.device,
+            "measure_steps": self.measure_steps,
+            "cache_key": self.cache_key, "cache_hit": self.cache_hit,
+            "best": {**self.best.as_dict(), "label": self.best.label,
+                     "median_s": self.best_median_s},
+            "default_median_s": self.default_median_s,
+            "candidates": [r.as_dict() for r in self.results],
+            "pruned": [{"label": l, "reason": r} for l, r in self.pruned],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping, *, cache_hit: bool = False):
+        return cls(
+            name=d["name"], grid=tuple(d["grid"]), device=d["device"],
+            results=tuple(
+                CandidateResult(Candidate.from_dict(c),
+                                float(c["median_s"]),
+                                tuple(float(t) for t in c["times_s"]))
+                for c in d["candidates"]),
+            pruned=tuple((p["label"], p["reason"]) for p in d["pruned"]),
+            best=Candidate.from_dict(d["best"]),
+            default_median_s=float(d["default_median_s"]),
+            cache_key=d["cache_key"], cache_hit=cache_hit,
+            measure_steps=int(d.get("measure_steps", 1)))
+
+
+class TuneResult(NamedTuple):
+    """``(target, report)`` — tuple-unpackable."""
+
+    target: Target
+    report: TuneReport
+
+
+# ---------------------------------------------------------------------------
+# cache (results/tuning/)
+# ---------------------------------------------------------------------------
+
+def _stencil_sig(s) -> str:
+    return "-" if s is None else f"{s.name}:{s.offsets}"
+
+
+def _spec_digest(spec: KernelSpec) -> str:
+    """Stable (cross-process — no Python string hashing) identity of a
+    spec's *launch shape*: roles, stencil geometry, outputs.  The kernel
+    body is identified by name — tuning choices depend on the launch
+    structure, not the arithmetic."""
+    parts = [spec.name, repr(spec.out), repr(spec.site_index),
+             repr(spec.consts)]
+    for fs in spec.fields:
+        parts.append(f"{fs.ncomp}|{fs.halo}|{_stencil_sig(fs.stencil)}")
+    return hashlib.sha256("&".join(parts).encode()).hexdigest()[:16]
+
+
+def _subject_digest(program_or_spec) -> tuple[str, str]:
+    if isinstance(program_or_spec, Program):
+        parts = [program_or_spec.name]
+        for st in program_or_spec.stages:
+            parts.append(f"{st.name}|{_spec_digest(st.spec)}|"
+                         f"{st.reads}|{st.writes}")
+        digest = hashlib.sha256("&".join(parts).encode()).hexdigest()[:16]
+        return program_or_spec.name, digest
+    return program_or_spec.name, _spec_digest(program_or_spec)
+
+
+def _device_kind() -> str:
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', '?')}"
+
+
+def cache_key(program_or_spec, target: Target,
+              grid: tuple[int, ...]) -> str:
+    """The cache-key anatomy (docs/targetdp_api.md, "Autotuning"):
+    ``<name>-<subject digest>-g<grid>-<base executor>-<device kind>``,
+    filesystem-safe.  Deliberately *excludes* the tuning values being
+    searched — the key identifies the question, the cached file holds
+    the answer."""
+    name, digest = _subject_digest(program_or_spec)
+    grid_s = "x".join(str(int(s)) for s in grid)
+    dev = _device_kind().replace(" ", "_").replace("/", "_")
+    # Candidate.label spells interpret mode for every backend family
+    # (Target.executor only does so for "pallas") — interpreter-measured
+    # and compiled tuning runs must never share a cache entry.
+    mode = Candidate(target.backend, target.interpret).label
+    return f"{name}-{digest}-g{grid_s}-{mode}-{dev}"
+
+
+def _cache_path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"{key}.json")
+
+
+def load_cached(cache_dir: str, key: str) -> TuneReport | None:
+    """The stored :class:`TuneReport` for ``key``, or ``None`` on miss /
+    unreadable file (a corrupt cache entry is a miss, not an error)."""
+    path = _cache_path(cache_dir, key)
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+        if data.get("cache_key") != key:
+            return None
+        return TuneReport.from_dict(data, cache_hit=True)
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def store_cached(cache_dir: str, report: TuneReport) -> str:
+    os.makedirs(cache_dir, exist_ok=True)
+    path = _cache_path(cache_dir, report.cache_key)
+    with open(path, "w") as fh:
+        json.dump(report.as_dict(), fh, indent=1, default=str)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+def _as_candidates(space) -> list[Candidate]:
+    out = []
+    for c in space:
+        if isinstance(c, Candidate):
+            out.append(c)
+        elif isinstance(c, Target):
+            out.append(Candidate.of(c))
+        elif isinstance(c, str):
+            out.append(Candidate.of(as_target(c)))
+        else:
+            raise TypeError(f"space entries must be Candidate, Target or "
+                            f"backend string; got {type(c).__name__}")
+    return out
+
+
+def autotune(program_or_spec, target: Target | str | None = None,
+             example_state=None, *,
+             space: Sequence | None = None,
+             budget: int | None = None,
+             measure_steps: int = 3,
+             reps: int = 3, warmup: int = 1,
+             timer: Callable[[Target, Callable[[], Any]], float] | None
+             = None,
+             grid_shape: Sequence[int] | None = None,
+             lattice: Lattice | None = None, halo=None, consts=None,
+             executors: Sequence[str] | None = None,
+             vmem_limit: int = DEFAULT_VMEM_LIMIT,
+             check_identical: bool = False,
+             cache_dir: str | None = "results/tuning") -> TuneResult:
+    """Choose ``Target.tuning`` (and the executor) empirically.
+
+    Args:
+      program_or_spec: a :class:`Program`, :class:`CompiledProgram` (its
+        program/target/grid are reused), or :class:`KernelSpec`.
+      target: the base target — always measured as candidate 0, so the
+        returned target's median is ≤ the default-tuning median.  For a
+        ``CompiledProgram``, defaults to its compile target.
+      example_state: what one measurement runs on — a ``{field: (ncomp,
+        *grid)}`` mapping for programs, a sequence of ``(ncomp, nsites)``
+        SoA arrays for specs.
+      space: explicit candidate list (:class:`Candidate` / ``Target`` /
+        backend strings); ``None`` derives :func:`default_space`.
+      budget: measure at most this many candidates (the base target is
+        always kept; the rest are taken in space order).
+      measure_steps: steps per timed call — ``Program`` candidates run
+        ``measure_steps`` compiled steps per sample, specs launch
+        ``measure_steps`` times.
+      reps / warmup: samples per candidate (median taken) / discarded
+        leading calls (compile + cache warm).
+      timer: ``(candidate_target, run) -> seconds``; default
+        :func:`wall_clock_timer`.  Inject a fake for deterministic tests.
+      grid_shape / lattice / halo / consts: launch geometry (programs
+        infer ``grid_shape`` from ``example_state``).
+      executors / vmem_limit: forwarded to :func:`default_space`.
+      check_identical: additionally run every candidate once and prune
+        any whose outputs are not bit-identical to the base target's
+        (tuning must never change results; a mismatch is an executor
+        bug, surfaced in ``report.pruned``, never silently chosen).
+      cache_dir: on-disk cache directory (``None`` disables).  A hit
+        replays the stored choice without measuring.
+
+    Returns a :class:`TuneResult` ``(tuned_target, report)``.
+    """
+    if isinstance(program_or_spec, CompiledProgram):
+        if target is None:
+            target = program_or_spec.target
+        if grid_shape is None:
+            grid_shape = program_or_spec.grid_shape
+        program_or_spec = program_or_spec.program
+    base = as_target(target)
+
+    is_program = isinstance(program_or_spec, Program)
+    if is_program:
+        if example_state is None:
+            raise ValueError("autotune over a Program needs example_state "
+                             "({field: (ncomp, *grid) array})")
+        state = {f: example_state[f] for f in program_or_spec.fields}
+        if grid_shape is None:
+            grid_shape = tuple(
+                int(s) for s in next(iter(state.values())).shape[1:])
+        grid = tuple(int(s) for s in grid_shape)
+    elif isinstance(program_or_spec, KernelSpec):
+        if example_state is None:
+            raise ValueError("autotune over a KernelSpec needs "
+                             "example_state (the launch arrays)")
+        arrays = tuple(example_state)
+        if program_or_spec.has_stencil and lattice is None:
+            raise ValueError("autotune over a stencil KernelSpec needs "
+                             "the lattice")
+        grid = (tuple(lattice.shape) if lattice is not None
+                else (int(arrays[0].shape[-1]),))
+    else:
+        raise TypeError(f"autotune expects a Program, CompiledProgram or "
+                        f"KernelSpec; got {type(program_or_spec).__name__}")
+
+    key = cache_key(program_or_spec, base, grid)
+    if cache_dir is not None:
+        cached = load_cached(cache_dir, key)
+        if cached is not None:
+            return TuneResult(cached.best.target_from(base), cached)
+
+    if space is None:
+        candidates, pruned = default_space(
+            program_or_spec, base, grid_shape=grid if is_program else None,
+            lattice=lattice, halo=halo, consts=consts,
+            executors=executors, vmem_limit=vmem_limit)
+    else:
+        pruned = []
+        base_cand = Candidate.of(base)
+        # the base target is always candidate 0 (the default-median
+        # baseline, the check_identical reference, the must-run entry) —
+        # even when an explicit space lists it elsewhere
+        candidates = [base_cand] + [c for c in _as_candidates(space)
+                                    if c != base_cand]
+    if budget is not None and len(candidates) > max(1, int(budget)):
+        kept = candidates[:max(1, int(budget))]
+        for c in candidates[len(kept):]:
+            pruned.append((c.label, f"over budget={budget}"))
+        candidates = kept
+
+    timer = timer if timer is not None else wall_clock_timer
+    n_steps = max(1, int(measure_steps))
+
+    def runner(tgt: Target) -> Callable[[], Any]:
+        if is_program:
+            exe = program_or_spec.compile(
+                tgt.with_(mesh=None, shard_axis=None), grid_shape=grid)
+            return lambda: exe.run(state, n_steps)
+
+        def run():
+            out = None
+            for _ in range(n_steps):
+                out = _launch(program_or_spec, tgt, *arrays,
+                              lattice=lattice, halo=halo,
+                              consts=dict(consts or {}))
+            return out
+        return run
+
+    ref_out = None
+    results: list[CandidateResult] = []
+    pruned = list(pruned)
+    default_median = None
+    for i, cand in enumerate(candidates):
+        tgt = cand.target_from(base)
+        try:
+            run = runner(tgt)
+            if check_identical:
+                out = run()
+                flat = jax.tree_util.tree_leaves(out)
+                if i == 0:
+                    ref_out = [np.asarray(x) for x in flat]
+                elif (len(flat) != len(ref_out)
+                      or not all(np.array_equal(a, np.asarray(b))
+                                 for a, b in zip(ref_out, flat))):
+                    pruned.append((cand.label,
+                                   "output not bit-identical to the "
+                                   "default target"))
+                    continue
+            for _ in range(max(0, int(warmup))):
+                timer(tgt, run)
+            times = tuple(float(timer(tgt, run))
+                          for _ in range(max(1, int(reps))))
+        except Exception as e:  # noqa: BLE001 — an unrunnable candidate
+            # (e.g. real-Pallas on a CPU host) is pruned, not fatal...
+            if i == 0:
+                raise   # ...but the *base* target must be runnable.
+            pruned.append((cand.label, f"error: {type(e).__name__}: {e}"))
+            continue
+        median = float(np.median(times))
+        if i == 0:
+            default_median = median
+        results.append(CandidateResult(cand, median, times))
+
+    if not results:
+        raise RuntimeError(
+            f"autotune({key}): no candidate survived measurement "
+            f"(pruned: {[p[0] for p in pruned]})")
+    best = min(results, key=lambda r: r.median_s).candidate
+    report = TuneReport(
+        name=_subject_digest(program_or_spec)[0], grid=grid,
+        device=_device_kind(), results=tuple(results),
+        pruned=tuple(pruned), best=best,
+        default_median_s=float(default_median),
+        cache_key=key, cache_hit=False, measure_steps=n_steps)
+    if cache_dir is not None:
+        store_cached(cache_dir, report)
+    return TuneResult(best.target_from(base), report)

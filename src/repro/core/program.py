@@ -419,6 +419,16 @@ class Program:
         return CompiledProgram(self, target, grid_shape, mesh=mesh,
                                shard_axis=shard_axis)
 
+    def autotune(self, target: Target | str | None,
+                 example_state: Mapping[str, jax.Array], **kw):
+        """Tune ``Target.tuning`` (and the executor) for this program —
+        convenience front-end for :func:`repro.core.autotune.autotune`
+        (which see for the keyword surface: ``space``, ``budget``,
+        ``measure_steps``, ``timer``, ``cache_dir``, ...).  Returns a
+        ``TuneResult`` ``(tuned_target, report)``."""
+        from .autotune import autotune as _autotune
+        return _autotune(self, target, example_state, **kw)
+
     def plan(self, target: Target | str | None = None, *,
              grid_shape: Sequence[int]) -> "ProgramPlan":
         """Aggregate the per-launch memory models across the step without

@@ -47,10 +47,12 @@ EXECUTOR_WANTS = ("gathered", "halo_extended")
 
 class ExecutorEntry(NamedTuple):
     """One registry row: the executor callable plus its declared input
-    capability (see ``EXECUTOR_WANTS``)."""
+    capability (see ``EXECUTOR_WANTS``) and the ``Target.tuning`` keys it
+    consults (``tunables`` — the sweep/autotune surface)."""
 
     fn: Callable
     wants: str
+    tunables: tuple[str, ...] = ()
 
 
 _EXECUTORS: dict[str, ExecutorEntry] = {}
@@ -58,13 +60,20 @@ _VERSION = 0
 
 
 def register_executor(name: str, fn: Callable, *, overwrite: bool = False,
-                      wants: str = "gathered") -> None:
+                      wants: str = "gathered",
+                      tunables: tuple[str, ...] = ()) -> None:
     """Register ``fn`` as the executor behind ``Target(backend=name)``.
 
     ``wants`` declares the input capability: ``"gathered"`` (default)
     receives pre-gathered ``(noffsets, ncomp, nsites)`` neighbour stacks;
     ``"halo_extended"`` suppresses the gather and receives each stencil
     field once, as a halo-extended ``(ncomp, *ext_shape)`` grid.
+
+    ``tunables`` declares the ``Target.tuning`` keys the executor actually
+    consults (e.g. ``("plane_block",)`` for the windowed executor) — the
+    contract ``benchmarks/run.py --sweep`` and ``tdp.autotune`` build
+    candidate spaces from; sweeping a key outside this set is rejected up
+    front instead of silently measuring a no-op.
 
     Raises ``ValueError`` on duplicate names unless ``overwrite=True``.
     """
@@ -77,11 +86,12 @@ def register_executor(name: str, fn: Callable, *, overwrite: bool = False,
     if wants not in EXECUTOR_WANTS:
         raise ValueError(f"executor capability must be one of "
                          f"{EXECUTOR_WANTS}, got {wants!r}")
+    tunables = tuple(str(t) for t in tunables)
     if name in _EXECUTORS and not overwrite:
         raise ValueError(
             f"executor {name!r} is already registered; pass overwrite=True "
             f"to replace it")
-    _EXECUTORS[name] = ExecutorEntry(fn, wants)
+    _EXECUTORS[name] = ExecutorEntry(fn, wants, tunables)
     _VERSION += 1
 
 
@@ -111,6 +121,25 @@ def get_executor_entry(name: str) -> ExecutorEntry:
 def executor_wants(name: str) -> str:
     """The declared input capability of a registered executor."""
     return get_executor_entry(name).wants
+
+
+def executor_tunables(name: str) -> tuple[str, ...]:
+    """The ``Target.tuning`` keys a registered executor consults."""
+    return get_executor_entry(name).tunables
+
+
+def compatible_executors(*, stencil: bool) -> tuple[str, ...]:
+    """Registered executor names able to run a launch of the given shape.
+
+    A stencil-carrying spec can run on every capability (the prologue
+    adapts: gather vs halo-extend); a pure pointwise spec has nothing to
+    window, so ``wants="halo_extended"`` executors are excluded — the
+    same rule :func:`repro.core.api.launch` enforces at dispatch.  This
+    is the executor axis of ``tdp.autotune``'s candidate space.
+    """
+    return tuple(sorted(
+        name for name, entry in _EXECUTORS.items()
+        if stencil or entry.wants != "halo_extended"))
 
 
 def list_executors() -> tuple[str, ...]:

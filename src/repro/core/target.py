@@ -129,6 +129,27 @@ class Target:
             updates["tuning"] = _freeze_tuning(updates["tuning"])
         return dataclasses.replace(self, **updates)
 
+    # ``with_`` under its conventional name, for callers that expect the
+    # dataclasses spelling (tdp.autotune's report records use it).
+    replace = with_
+
+    def with_tuning(self, updates: "Mapping[str, Any] | None" = None,
+                    **kw) -> "Target":
+        """Merge tuning knobs into the existing ``tuning`` mapping.
+
+        Unlike ``with_(tuning=...)`` — which *replaces* the whole mapping
+        — this keeps unrelated knobs: ``t.with_tuning(plane_block=2)`` on
+        a target already carrying ``block_f`` preserves ``block_f``.  The
+        result re-freezes (sorted, hashable), so equal merged tunings
+        always compare and hash equal regardless of update order — the
+        plan-cache-key contract ``tdp.autotune`` candidates rely on.
+        """
+        merged = self.tuning_dict()
+        if updates:
+            merged.update(updates)
+        merged.update(kw)
+        return self.with_(tuning=merged)
+
 
 def as_target(target: "Target | str | None" = None, *,
               vvl: int | None = None) -> Target:

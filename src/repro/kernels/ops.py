@@ -33,6 +33,23 @@ from . import swiglu as _sg
 
 VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
 
+#: ``Target.tuning`` keys each op consults on its Pallas path — the
+#: op-layer half of the registry's ``executor_tunables`` contract
+#: (``register_executor(..., tunables=...)``): a tuned Target produced
+#: by ``tdp.autotune`` rides these knobs into the hand-written kernels
+#: with no per-op plumbing at the call site.
+TUNABLES: dict[str, tuple[str, ...]] = {
+    "gated_act": ("block_f",),
+    "flash_attention": ("block_q", "block_k"),
+    "mamba_scan": ("block_d", "block_t"),
+}
+
+
+def op_tunables(op: str) -> tuple[str, ...]:
+    """The ``Target.tuning`` keys ``ops.<op>`` consults (empty for ops
+    whose only knob is the VVL)."""
+    return TUNABLES.get(op, ())
+
 
 def op_target(target: Target | str | None = None,
               backend: str | None = None,

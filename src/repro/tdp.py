@@ -26,6 +26,9 @@ C-vs-CUDA switch    :class:`Target` + :func:`register_executor`
 host step glue      :func:`tdp.program` — multi-launch step graphs with
                     double-buffered fields and one halo schedule per
                     step (:mod:`repro.core.program`)
+per-device tuning   :func:`tdp.autotune` — measured selection over
+                    ``Target.tuning`` / the executor axis, cached on
+                    disk per (program, grid, device)
 ==================  =====================================================
 """
 from repro.core.target import (  # noqa: F401
@@ -41,6 +44,8 @@ from repro.core.spec import (  # noqa: F401
     kernel,
 )
 from repro.core.registry import (  # noqa: F401
+    compatible_executors,
+    executor_tunables,
     executor_wants,
     get_executor,
     get_executor_entry,
@@ -65,6 +70,15 @@ from repro.core.program import (  # noqa: F401
     Stage,
     program,
     stage,
+)
+from repro.core.autotune import (  # noqa: F401
+    Candidate,
+    TuneReport,
+    TuneResult,
+    autotune,
+    default_space,
+    plane_block_candidates,
+    wall_clock_timer,
 )
 from repro.core.execute import reduce, site_kernel  # noqa: F401
 from repro.core.lattice import (  # noqa: F401
@@ -96,6 +110,9 @@ __all__ = [
     "gather_neighbors", "halo_extend", "pad_sites",
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
     "stage",
+    "autotune", "default_space", "plane_block_candidates",
+    "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",
+    "compatible_executors", "executor_tunables",
     "reduce", "site_kernel",
     "Lattice", "token_lattice", "Stencil", "D3Q19_VELOCITIES",
     "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",

@@ -1,0 +1,346 @@
+"""``tdp.autotune`` — the Program-level tuner over ``Target.tuning``.
+
+Deterministic throughout: measurement runs under an *injected fake
+timer* (scripted per-candidate costs — the pluggable-timer contract), so
+these tests assert selection logic, pruning, caching and correctness
+decoupling without ever depending on wall-clock noise:
+
+* **best-candidate selection** — argmin of the scripted medians, with
+  the base target always measured as candidate 0 (tuned median ≤
+  default median by construction);
+* **space construction** — executor axis capability-checked, the
+  ``plane_block`` divisor sweep, VMEM-infeasibility pruning;
+* **cache** — miss measures + writes ``<cache_dir>/<key>.json``, hit
+  replays the stored choice without calling the timer at all;
+* **correctness decoupling** — 5-step LB trajectories are bit-identical
+  under *every* candidate in a small space (xla vs tuned
+  pallas_interpret / pallas_windowed_interpret), and
+  ``check_identical=True`` prunes an executor that lies.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tdp
+from repro.core import Lattice, STENCIL_GRAD_6PT
+from repro.core.autotune import cache_key
+from repro.lb import programs as lbp
+from repro.lb.params import LBParams
+
+GRID = (8, 8, 8)
+PARAMS = LBParams(A=0.125, B=0.125, kappa=0.02)
+WT = tdp.Target("pallas_windowed", interpret=True)
+
+
+def fused_prog(mode="two_launch"):
+    return lbp.fused_program(
+        mode, lbp.collision_consts(**PARAMS.as_kwargs()))
+
+
+def lb_state(grid=GRID, seed=0):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(0.05 * rng.normal(size=(19,) + grid) + 1 / 19.,
+                    jnp.float32)
+    g = jnp.asarray(0.05 * rng.normal(size=(19,) + grid), jnp.float32)
+    return {"f": f, "g": g}
+
+
+class ScriptedTimer:
+    """Fake timer: cost per candidate label, call log kept."""
+
+    def __init__(self, costs, default=1.0):
+        self.costs = dict(costs)
+        self.default = default
+        self.calls = []
+
+    def __call__(self, target, run):
+        label = tdp.Candidate.of(target).label
+        self.calls.append(label)
+        for key, cost in self.costs.items():
+            if key in label:
+                return cost
+        return self.default
+
+
+@tdp.kernel(fields=[tdp.field(2)], out=2)
+def double2(x):
+    return 2.0 * x
+
+
+@tdp.kernel(fields=[tdp.field(1, stencil=STENCIL_GRAD_6PT)], out=1)
+def star_sum(p):
+    acc = p[0, 0]
+    for i in range(1, 7):
+        acc = acc + p[i, 0]
+    return acc[None]
+
+
+# ---------------------------------------------------------------------------
+# space construction
+# ---------------------------------------------------------------------------
+
+class TestSpace:
+    def test_program_space_has_base_xla_and_divisor_sweep(self):
+        cands, pruned = tdp.default_space(fused_prog(), WT, grid_shape=GRID)
+        labels = [c.label for c in cands]
+        assert labels[0] == "pallas_windowed_interpret"      # the base
+        assert "xla" in labels
+        pbs = [dict(c.tuning)["plane_block"] for c in cands
+               if "plane_block" in dict(c.tuning)]
+        assert pbs == [1, 2, 4, 8]                           # divisors of 8
+        assert all(GRID[0] % p == 0 for p in pbs)
+        assert pruned == []
+
+    def test_vmem_limit_prunes_large_plane_blocks(self):
+        cands, pruned = tdp.default_space(fused_prog(), WT, grid_shape=GRID,
+                                          vmem_limit=1)
+        assert all("plane_block" not in dict(c.tuning) for c in cands)
+        assert pruned and all("vmem estimate" in why for _, why in pruned)
+
+    def test_pointwise_spec_excludes_halo_extended_executors(self):
+        x = jnp.ones((2, 32), jnp.float32)
+        cands, pruned = tdp.default_space(
+            double2, tdp.Target("xla"),
+            executors=("xla", "pallas_windowed"))
+        labels = [c.label for c in cands]
+        assert "pallas_windowed" not in labels
+        assert any("halo_extended" in why for _, why in pruned)
+        del x
+
+    def test_pointwise_pallas_axis_sweeps_declared_block_knobs(self):
+        cands, _ = tdp.default_space(
+            double2, tdp.Target("xla"),
+            executors=("xla", "pallas_interpret"))
+        knobs = {k for c in cands for k, _ in c.tuning}
+        assert "block_f" in knobs                  # declared tunable
+        assert "plane_block" not in knobs          # not on this executor
+
+    def test_stencil_spec_plane_block_candidates(self):
+        lat = Lattice((12, 4, 4))
+        feasible, pruned = tdp.plane_block_candidates(star_sum, WT, lat)
+        assert feasible == [1, 2, 3, 4, 6, 12]
+        assert pruned == []
+        feasible, pruned = tdp.plane_block_candidates(
+            star_sum, WT, lat, vmem_limit=0)
+        assert feasible == [] and len(pruned) == 6
+
+
+# ---------------------------------------------------------------------------
+# selection with a fake timer
+# ---------------------------------------------------------------------------
+
+class TestSelection:
+    def test_best_candidate_wins(self, tmp_path):
+        timer = ScriptedTimer({"plane_block=4": 0.01, "xla": 0.5},
+                              default=1.0)
+        tuned, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            cache_dir=str(tmp_path), reps=3, warmup=0, measure_steps=1)
+        assert report.best.label == "pallas_windowed_interpret[plane_block=4]"
+        assert tuned.backend == "pallas_windowed" and tuned.interpret
+        assert tuned.tune("plane_block") == 4
+        assert report.best_median_s == pytest.approx(0.01)
+        assert report.default_median_s == pytest.approx(1.0)
+        assert report.best_median_s <= report.default_median_s
+
+    def test_base_target_always_candidate_zero(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)   # flat costs: base wins ties
+        tuned, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert report.results[0].candidate.label == \
+            "pallas_windowed_interpret"
+        assert tuned.executor == WT.executor
+
+    def test_budget_keeps_base_and_prunes_tail(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        _, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            cache_dir=str(tmp_path), budget=2, reps=1, warmup=0)
+        assert len(report.results) == 2
+        assert report.results[0].candidate.label == \
+            "pallas_windowed_interpret"
+        assert any("over budget" in why for _, why in report.pruned)
+
+    def test_explicit_space_of_targets(self, tmp_path):
+        timer = ScriptedTimer({"xla": 0.1}, default=1.0)
+        tuned, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            space=["xla", WT.with_tuning(plane_block=2)],
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert tuned.executor == "xla"
+        # the base was prepended even though the space didn't name it
+        assert report.results[0].candidate.label == \
+            "pallas_windowed_interpret"
+
+    def test_explicit_space_listing_base_elsewhere_keeps_it_first(
+            self, tmp_path):
+        """Candidate 0 is the base target even when the space lists it at
+        a later index — the default-median baseline must be the base."""
+        timer = ScriptedTimer({"xla": 0.1}, default=1.0)
+        _, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            space=["xla", WT], cache_dir=str(tmp_path), reps=1, warmup=0)
+        labels = [r.candidate.label for r in report.results]
+        assert labels[0] == "pallas_windowed_interpret"
+        assert labels.count("pallas_windowed_interpret") == 1
+        assert report.default_median_s == pytest.approx(1.0)   # not xla's
+
+    def test_program_autotune_convenience(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        tuned, report = fused_prog().autotune(
+            WT, lb_state(), timer=timer, cache_dir=str(tmp_path),
+            reps=1, warmup=0)
+        assert isinstance(report, tdp.TuneReport)
+        assert tuned.executor == WT.executor
+
+    def test_unrunnable_candidate_is_pruned_not_fatal(self, tmp_path):
+        calls = {"n": 0}
+
+        def exploding(target, run):
+            calls["n"] += 1
+            if target.executor == "xla":
+                raise RuntimeError("boom")
+            return 1.0
+
+        _, report = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=exploding,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert any("boom" in why for label, why in report.pruned
+                   if label == "xla")
+        assert all(r.candidate.label != "xla" for r in report.results)
+
+
+# ---------------------------------------------------------------------------
+# the on-disk cache
+# ---------------------------------------------------------------------------
+
+class TestCache:
+    def test_miss_writes_then_hit_skips_measurement(self, tmp_path):
+        timer = ScriptedTimer({"plane_block=2": 0.01}, default=1.0)
+        prog = fused_prog()
+        tuned1, rep1 = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                                    cache_dir=str(tmp_path), reps=1,
+                                    warmup=0)
+        assert not rep1.cache_hit
+        path = os.path.join(str(tmp_path), f"{rep1.cache_key}.json")
+        assert os.path.exists(path)
+        n_calls = len(timer.calls)
+        assert n_calls > 0
+
+        tuned2, rep2 = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                                    cache_dir=str(tmp_path), reps=1,
+                                    warmup=0)
+        assert rep2.cache_hit
+        assert len(timer.calls) == n_calls          # no re-measurement
+        assert tuned2 == tuned1
+        assert rep2.best == rep1.best
+
+    def test_cache_key_discriminates_grid_backend_and_graph(self):
+        prog = fused_prog()
+        k = cache_key(prog, WT, (8, 8, 8))
+        assert k != cache_key(prog, WT, (16, 8, 8))
+        assert k != cache_key(prog, tdp.Target("xla"), (8, 8, 8))
+        assert k != cache_key(fused_prog("one_launch"), WT, (8, 8, 8))
+        # interpreter-measured tuning must never answer for compiled runs
+        assert k != cache_key(prog, tdp.Target("pallas_windowed"),
+                              (8, 8, 8))
+        # stable across calls (no PYTHONHASHSEED dependence)
+        assert k == cache_key(fused_prog(), WT, (8, 8, 8))
+
+    def test_corrupt_cache_entry_is_a_miss(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        prog = fused_prog()
+        _, rep = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                              cache_dir=str(tmp_path), reps=1, warmup=0)
+        path = os.path.join(str(tmp_path), f"{rep.cache_key}.json")
+        with open(path, "w") as fh:
+            fh.write("{not json")
+        _, rep2 = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                               cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert not rep2.cache_hit                   # re-measured
+        with open(path) as fh:
+            assert json.load(fh)["cache_key"] == rep.cache_key
+
+    def test_cache_dir_none_disables(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                              cache_dir=None, reps=1, warmup=0)
+        assert not rep.cache_hit
+        assert os.listdir(str(tmp_path)) == []
+
+    def test_report_round_trips_through_json(self, tmp_path):
+        timer = ScriptedTimer({"xla": 0.25}, default=1.0)
+        _, rep = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                              cache_dir=str(tmp_path), reps=2, warmup=0)
+        rebuilt = tdp.TuneReport.from_dict(rep.as_dict(), cache_hit=True)
+        assert rebuilt.best == rep.best
+        assert rebuilt.results == rep.results
+        assert rebuilt.cache_key == rep.cache_key
+        assert rebuilt.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# correctness is decoupled from tuning
+# ---------------------------------------------------------------------------
+
+class TestCorrectnessDecoupling:
+    @pytest.mark.parametrize("mode", ["one_launch", "two_launch"])
+    def test_five_step_trajectories_bit_identical_under_all_candidates(
+            self, mode):
+        """Every candidate in the small space — xla and the tuned
+        pallas_interpret / pallas_windowed_interpret variants — steps the
+        LB program to bit-identical 5-step trajectories."""
+        prog = fused_prog(mode)
+        state = lb_state()
+        space = [
+            tdp.Target("xla"),
+            tdp.Target("pallas_interpret"),
+            WT,                                       # plane_block default
+            WT.with_tuning(plane_block=2),
+            WT.with_tuning(plane_block=4),
+        ]
+        ref = None
+        for tgt in space:
+            exe = prog.compile(tgt, grid_shape=GRID)
+            out = exe.run(dict(state), 5)
+            got = {k: np.asarray(v) for k, v in out.items()}
+            if ref is None:
+                ref = got
+                continue
+            for k in ref:
+                np.testing.assert_array_equal(
+                    ref[k], got[k],
+                    err_msg=f"{tgt} diverges from xla on field {k!r}")
+
+    def test_check_identical_accepts_honest_candidates(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            cache_dir=str(tmp_path), reps=1, warmup=0, measure_steps=2,
+            check_identical=True)
+        # xla and every feasible plane_block variant all survive
+        assert {r.candidate.label for r in rep.results} >= {
+            "pallas_windowed_interpret", "xla"}
+        assert not any("bit-identical" in why for _, why in rep.pruned)
+
+    def test_check_identical_prunes_a_lying_executor(self, tmp_path):
+        def lying(plan, prepared):
+            outs = tdp.xla_executor(plan, prepared)
+            return tuple(o + 1e-3 for o in outs)
+
+        tdp.register_executor("lying_xla", lying)
+        try:
+            timer = ScriptedTimer({"lying_xla": 0.001}, default=1.0)
+            tuned, rep = tdp.autotune(
+                fused_prog(), tdp.Target("xla"), lb_state(), timer=timer,
+                space=[tdp.Target("lying_xla")], cache_dir=str(tmp_path),
+                reps=1, warmup=0, check_identical=True)
+            assert any("bit-identical" in why for label, why in rep.pruned
+                       if label == "lying_xla")
+            assert tuned.executor == "xla"      # cheapest honest candidate
+        finally:
+            tdp.unregister_executor("lying_xla")

@@ -1,0 +1,126 @@
+"""CLI contract of ``benchmarks/run.py`` — subprocess smokes on tiny
+grids.
+
+Pins the PR 5 surface:
+
+* ``--sweep`` is *generalized*: any ``key=v1,v2,...`` tuning knob the
+  windowed executor declares runs (values land under the record's
+  ``"sweep"`` key); a knob the executor ignores exits 2 up front
+  (a silently ignored sweep would read as "ran");
+* ``--autotune`` extends ``BENCH_fused_step.json`` with the
+  ``"tuning"`` / ``"autotune"`` keys (schema *extension* — the PR 3/4
+  variant records stay intact) and persists the choice in the tuning
+  cache, so a re-run reproduces it via ``cache_hit`` without
+  re-measuring;
+* ``--json`` schema stability for the pre-existing keys.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_bench(*argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *argv],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=timeout)
+
+
+class TestSweepCLI:
+    def test_generalized_sweep_records_per_value_medians(self, tmp_path):
+        out = str(tmp_path / "bench")
+        r = run_bench("--only", "stream", "--grid", "6", "--steps", "1",
+                      "--json", "--sweep", "plane_block=1,2",
+                      "--out", out)
+        assert r.returncode == 0, r.stderr
+        rec = json.load(open(os.path.join(out, "BENCH_stream.json")))
+        # pre-existing schema intact …
+        assert rec["bench"] == "stream"
+        assert rec["grid"] == [6, 6, 6]
+        for key in ("xla", "pallas_interpret", "pallas_windowed"):
+            v = rec["variants"][key]
+            assert {"median_s", "min_s", "executor",
+                    "hbm_bytes_estimate"} <= set(v)
+        # … and the sweep landed, keyed knob → value → median
+        assert set(rec["sweep"]["plane_block"]) == {"1", "2"}
+        for v in rec["sweep"]["plane_block"].values():
+            assert v["median_s"] > 0
+        # per-value variants ride along under the stable pb spelling
+        assert "pallas_windowed_pb1" in rec["variants"]
+        assert "pallas_windowed_pb2" in rec["variants"]
+
+    def test_ignored_knob_exits_2(self, tmp_path):
+        r = run_bench("--only", "stream", "--sweep", "bogus_knob=1,2",
+                      "--out", str(tmp_path / "bench"))
+        assert r.returncode == 2
+        assert "bogus_knob" in r.stderr
+        assert "pallas_windowed" in r.stderr      # names the executor
+        assert "plane_block" in r.stderr          # … and what IS declared
+
+    def test_malformed_sweep_exits_2(self, tmp_path):
+        r = run_bench("--only", "stream", "--sweep", "plane_block",
+                      "--out", str(tmp_path / "bench"))
+        assert r.returncode == 2
+        assert "key=v1,v2" in r.stderr
+
+    def test_non_integer_sweep_value_exits_2(self, tmp_path):
+        """Bad values fail fast at parse time, not deep inside plan
+        construction mid-bench."""
+        r = run_bench("--only", "stream", "--sweep", "plane_block=abc",
+                      "--out", str(tmp_path / "bench"))
+        assert r.returncode == 2
+        assert "must be integers" in r.stderr
+
+    def test_sweep_with_no_consuming_bench_exits_2(self, tmp_path):
+        r = run_bench("--only", "lm_step", "--sweep", "plane_block=1",
+                      "--out", str(tmp_path / "bench"))
+        assert r.returncode == 2
+        assert "no effect" in r.stderr
+
+
+class TestAutotuneCLI:
+    def test_autotune_needs_fused_step_selected(self, tmp_path):
+        r = run_bench("--only", "stream", "--autotune",
+                      "--out", str(tmp_path / "bench"))
+        assert r.returncode == 2
+        assert "fused_step" in r.stderr
+
+    @pytest.mark.slow
+    def test_autotune_extends_schema_and_caches(self, tmp_path):
+        """Two runs: the first measures and writes the tuning cache, the
+        second reproduces the choice from disk (cache_hit) — the
+        'tuning'/'autotune' keys EXTEND the PR 3/4 record schema."""
+        out = str(tmp_path / "bench")
+        cache = str(tmp_path / "tuning")
+        argv = ("--only", "fused_step", "--autotune", "--grid", "6",
+                "--steps", "1", "--json", "--out", out,
+                "--tuning-cache", cache)
+        r = run_bench(*argv)
+        assert r.returncode == 0, r.stderr
+        rec = json.load(open(os.path.join(out, "BENCH_fused_step.json")))
+        # PR 3/4 schema intact
+        for key in ("unfused", "fused", "fused_two", "fused_windowed",
+                    "fused_program_scan"):
+            assert "median_s" in rec["variants"][key]
+        # the new keys
+        assert rec["tuning"]["backend"] in ("pallas_windowed", "xla")
+        at = rec["autotune"]
+        assert at["cache_hit"] is False
+        assert at["best"]["median_s"] <= at["default_median_s"]
+        assert at["candidates"][0]["label"] == "pallas_windowed_interpret"
+        cached = os.listdir(cache)
+        assert len(cached) == 1 and cached[0].endswith(".json")
+
+        r2 = run_bench(*argv)
+        assert r2.returncode == 0, r2.stderr
+        rec2 = json.load(open(os.path.join(out, "BENCH_fused_step.json")))
+        assert rec2["autotune"]["cache_hit"] is True
+        assert rec2["autotune"]["best"] == at["best"]
+        assert rec2["tuning"] == rec["tuning"]

@@ -72,6 +72,79 @@ class TestTdpProperties:
         np.testing.assert_allclose(a.data, f.data, rtol=1e-6)
 
 
+class TestAutotuneProperties:
+    """Invariants of ``tdp.autotune``'s space construction
+    (repro/core/autotune.py)."""
+
+    @staticmethod
+    def _star_spec(ndim, radius):
+        """A radius-``radius`` axis star stencil spec (1-component)."""
+        from repro.core import FieldSpec, KernelSpec, Stencil
+        offs = [(0,) * ndim]
+        for d in range(ndim):
+            for k in range(1, radius + 1):
+                for sign in (1, -1):
+                    o = [0] * ndim
+                    o[d] = sign * k
+                    offs.append(tuple(o))
+        stc = Stencil(f"star{ndim}d_r{radius}", tuple(offs))
+        return KernelSpec(lambda p: p.sum(0, keepdims=True),
+                          fields=(FieldSpec(ncomp=1, stencil=stc),),
+                          out=(1,), name=f"star_r{radius}")
+
+    @SET
+    @given(st.lists(st.integers(4, 24), min_size=1, max_size=3),
+           st.integers(1, 2),
+           st.sampled_from([0, 2 ** 14, 2 ** 20]))
+    def test_plane_block_space_divides_and_fits(self, dims, radius,
+                                                vmem_limit):
+        """Every emitted plane_block divides the launch's (extended)
+        plane count AND passes the vmem_bytes_estimate() filter; every
+        divisor is either emitted or pruned with a vmem reason."""
+        from repro import tdp
+        shape = tuple(dims)
+        spec = self._star_spec(len(shape), radius)
+        lat = Lattice(shape)
+        tgt = tdp.Target("pallas_windowed", interpret=True)
+        feasible, pruned = tdp.plane_block_candidates(
+            spec, tgt, lat, vmem_limit=vmem_limit)
+        nplanes = tdp.launch_plan(spec, tgt, lattice=lat).shape[0]
+        assert nplanes == shape[0]
+        for p in feasible:
+            assert nplanes % p == 0
+            plan = tdp.launch_plan(spec, tgt.with_tuning(plane_block=p),
+                                   lattice=lat)
+            assert plan.vmem_bytes_estimate() <= vmem_limit
+        emitted = set(feasible) | {v for v, _ in pruned}
+        assert emitted == {d for d in range(1, nplanes + 1)
+                           if nplanes % d == 0}
+        for v, why in pruned:
+            assert "vmem estimate" in why
+
+    @SET
+    @given(st.dictionaries(
+        st.sampled_from(["plane_block", "block_f", "block_q", "vjp"]),
+        st.integers(1, 512), max_size=4),
+        st.permutations(["plane_block", "block_f", "block_q", "vjp"]))
+    def test_with_tuning_round_trips_freeze_and_hash(self, tuning, order):
+        """Equal tuning ⇒ equal Target ⇒ equal hash (the plan-cache-key
+        contract), regardless of knob insertion order."""
+        from repro import tdp
+        base = tdp.Target("pallas_windowed", interpret=True)
+        a = base.with_tuning(tuning)
+        b = base
+        for k in order:                       # knob-at-a-time, any order
+            if k in tuning:
+                b = b.with_tuning({k: tuning[k]})
+        assert a == b
+        assert hash(a) == hash(b)
+        assert a.tuning_dict() == dict(tuning)
+        # merge preserves unrelated knobs; replace-spelling drops them
+        c = a.with_tuning(extra=7)
+        assert c.tuning_dict() == {**tuning, "extra": 7}
+        assert a.with_(tuning={"extra": 7}).tuning_dict() == {"extra": 7}
+
+
 class TestAttentionProperties:
     @SET
     @given(st.integers(2, 24), st.integers(1, 4), st.booleans())
