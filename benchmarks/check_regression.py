@@ -1,0 +1,159 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` records.
+
+``benchmarks/run.py --json`` writes one machine-readable record per
+bench (median/min wall seconds per variant).  This checker diffs a
+*fresh* set of those records against the *baseline* set committed under
+``results/bench/`` and exits non-zero when any matching variant's median
+regressed by more than the threshold (default 15%).
+
+Two variants match only when their full identity agrees — bench name,
+grid, variant key, executor, and tuning-bearing fields (``vvl``,
+``mesh``, ``scan_length``); anything else (a regridded bench, a renamed
+variant, a retuned sweep point) is reported as *unmatched* and never
+gates.  Medians below ``--min-seconds`` are noise on a shared CI host
+and are skipped.
+
+Usage (the nightly lane)::
+
+    python -m benchmarks.run --json --out results/bench-nightly
+    python -m benchmarks.check_regression \
+        --baseline results/bench --fresh results/bench-nightly
+
+Exit codes: 0 ok (including "nothing matched"), 1 regression(s), 2 bad
+invocation (missing/empty directories).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: record fields that are part of a variant's identity (tuning and
+#: shape), not of its measurement — a mismatch means "not comparable".
+_IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length")
+
+#: measurement field preference: run.py's program benches write
+#: ``median_s`` (and ``t_s`` aliases it); older records only ``t_s``.
+_MEDIAN_KEYS = ("median_s", "t_s")
+
+
+def load_records(path: str) -> dict[str, dict]:
+    """``{bench_name: record}`` from every ``BENCH_*.json`` under
+    ``path``.  Unreadable/corrupt files are skipped with a warning —
+    one bad artifact must not disable the whole gate."""
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        try:
+            with open(fn) as fh:
+                rec = json.load(fh)
+        except (OSError, ValueError) as e:
+            print(f"[check_regression] skipping {fn}: {e}",
+                  file=sys.stderr)
+            continue
+        name = rec.get("bench") or os.path.basename(fn)[6:-5]
+        out[name] = rec
+    return out
+
+
+def _median(variant: dict):
+    for k in _MEDIAN_KEYS:
+        v = variant.get(k)
+        if isinstance(v, (int, float)) and v > 0:
+            return float(v)
+    return None
+
+
+def _identity(bench: str, rec: dict, key: str, variant: dict) -> tuple:
+    return (bench, tuple(rec.get("grid") or ()), key,
+            tuple((k, variant.get(k)) for k in _IDENTITY_KEYS))
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            threshold: float = 0.15, min_seconds: float = 0.0) -> dict:
+    """Pure comparison — the unit-testable core.
+
+    Returns ``{"regressions": [...], "improvements": [...],
+    "matched": n, "unmatched": [...]}`` where each finding is
+    ``(bench, variant, base_s, fresh_s, ratio)`` and ``ratio`` is
+    ``fresh/base - 1`` (positive = slower).
+    """
+    regressions, improvements, unmatched = [], [], []
+    matched = 0
+    base_ids = {}
+    for bench, rec in baseline.items():
+        for key, var in (rec.get("variants") or {}).items():
+            m = _median(var)
+            if m is not None:
+                base_ids[_identity(bench, rec, key, var)] = m
+    for bench, rec in fresh.items():
+        for key, var in (rec.get("variants") or {}).items():
+            m = _median(var)
+            if m is None:
+                continue
+            ident = _identity(bench, rec, key, var)
+            base = base_ids.get(ident)
+            if base is None:
+                unmatched.append((bench, key))
+                continue
+            matched += 1
+            if base < min_seconds or m < min_seconds:
+                continue
+            ratio = m / base - 1.0
+            row = (bench, key, base, m, ratio)
+            if ratio > threshold:
+                regressions.append(row)
+            elif ratio < -threshold:
+                improvements.append(row)
+    return {"regressions": regressions, "improvements": improvements,
+            "matched": matched, "unmatched": unmatched}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when fresh bench medians regress vs committed")
+    ap.add_argument("--baseline", default="results/bench",
+                    help="directory of committed BENCH_*.json records")
+    ap.add_argument("--fresh", required=True,
+                    help="directory of freshly produced records")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="median regression ratio that fails the gate "
+                         "(0.15 = 15%%)")
+    ap.add_argument("--min-seconds", type=float, default=1e-4,
+                    help="ignore medians below this (timer noise)")
+    args = ap.parse_args(argv)
+
+    if args.threshold <= 0:
+        print("[check_regression] --threshold must be positive",
+              file=sys.stderr)
+        return 2
+    baseline = load_records(args.baseline)
+    fresh = load_records(args.fresh)
+    if not baseline or not fresh:
+        which = "baseline" if not baseline else "fresh"
+        print(f"[check_regression] no BENCH_*.json records in the "
+              f"{which} directory", file=sys.stderr)
+        return 2
+
+    rep = compare(baseline, fresh, threshold=args.threshold,
+                  min_seconds=args.min_seconds)
+    for bench, key, b, f, r in rep["improvements"]:
+        print(f"[check_regression] improved  {bench}/{key}: "
+              f"{b*1e3:.2f} → {f*1e3:.2f} ms ({r:+.0%})")
+    for bench, key in rep["unmatched"]:
+        print(f"[check_regression] unmatched {bench}/{key} "
+              f"(no comparable baseline variant — not gated)")
+    for bench, key, b, f, r in rep["regressions"]:
+        print(f"[check_regression] REGRESSED {bench}/{key}: "
+              f"{b*1e3:.2f} → {f*1e3:.2f} ms ({r:+.0%} > "
+              f"{args.threshold:.0%})")
+    print(f"[check_regression] {rep['matched']} variant(s) compared, "
+          f"{len(rep['regressions'])} regression(s), "
+          f"{len(rep['improvements'])} improvement(s), "
+          f"{len(rep['unmatched'])} unmatched")
+    return 1 if rep["regressions"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

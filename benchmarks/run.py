@@ -272,6 +272,80 @@ def bench_masked_copy(quick=False):
 # fused vs unfused LB timestep (stencil-aware launch)
 # ---------------------------------------------------------------------------
 
+#: subprocess body for the sharded pencil variant: this process owns the
+#: single-device benches, so the multi-device run gets its own
+#: interpreter with forced host devices (same pattern as
+#: tests/test_distributed.py).  Prints one JSON doc on the last line.
+_SHARDED_BENCH_SRC = r"""
+import json, os, sys, time
+import jax, numpy as np
+from repro.launch.mesh import make_test_mesh
+from repro.lb.params import LBParams
+from repro.lb.sim import BinaryFluidSim
+
+grid, reps, steps = json.loads(sys.argv[1])
+grid = tuple(grid)
+p = LBParams(A=0.125, B=0.125, kappa=0.02)
+mesh = make_test_mesh((2, 2), ("px", "py"))
+
+def median_step_s(sim):
+    st = sim.init_spinodal(seed=0, noise=0.05)
+    ws = sim.programs["collide"].step({"f": st.f, "g": st.g})
+    exe = sim.programs["fused"]
+    run = lambda: jax.block_until_ready(exe.run(dict(ws), steps))
+    run()                                    # compile + warm
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) / steps, exe
+
+out = {}
+for key, overlap in (("fused_pencil_2x2", False),
+                     ("fused_pencil_2x2_overlap", True)):
+    sim = BinaryFluidSim(grid, params=p, fused="two_launch", mesh=mesh,
+                         shard_axis=("px", "py"), overlap=overlap)
+    t, exe = median_step_s(sim)
+    cs = exe.comm_stats()
+    out[key] = {"median_s": t, "overlap": cs["overlap"],
+                "decomposition": cs["decomposition"],
+                "interior_fraction": cs["interior_fraction"],
+                "exchanged_bytes_per_step": cs["exchanged_bytes_per_step"],
+                "ppermutes_per_step": cs["ppermutes_per_step"]}
+print(json.dumps(out))
+"""
+
+
+def _bench_sharded_fused(grid, reps, steps):
+    """Run the 2×2-pencil fused two_launch bench in a 4-fake-device
+    subprocess; returns the per-variant records (or None on failure —
+    the sharded lane is additive, never fatal to the bench)."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", _SHARDED_BENCH_SRC,
+             json.dumps([list(grid), reps, steps])],
+            capture_output=True, text=True, timeout=1200, env=env)
+    except (subprocess.TimeoutExpired, OSError) as e:
+        print(f"[benchmarks] sharded fused bench skipped: {e}",
+              file=sys.stderr)
+        return None
+    if res.returncode != 0:
+        print(f"[benchmarks] sharded fused bench failed:\n{res.stderr}",
+              file=sys.stderr)
+        return None
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
 def bench_fused_step(quick=False):
     import warnings
 
@@ -400,6 +474,37 @@ def bench_fused_step(quick=False):
     rows.append((f"fused_two, Program scan×{K} (donated)",
                  f"{t*1e3:.2f}", f"{t/n*1e9:.1f}", f"{n/t/1e6:.1f}",
                  f"{base_t/t:.2f}×", f"{hbm['fused_two']/2**20:.1f}"))
+
+    # Sharded lane: the 2×2-pencil decomposition of the same fused_two
+    # step on 4 forced host devices (own subprocess), overlap off vs on.
+    # The record carries the analytic exchange budget (comm_stats) and
+    # the achieved overlap — the fraction of the no-overlap step the
+    # interior/boundary split hides.  These CPU numbers demonstrate the
+    # *schedule* (collectives per step, bytes on the wire); wall-clock
+    # gains need real inter-chip links.
+    sharded = _bench_sharded_fused(grid, reps=REPS_OVERRIDE or 3, steps=5)
+    if sharded is not None:
+        for key, v in sharded.items():
+            rec["variants"][key] = {
+                **v, "t_s": v["median_s"],
+                "ns_per_site_step": v["median_s"] / n * 1e9,
+                "executor": "xla", "mesh": "2x2",
+            }
+            rows.append((f"{key.replace('_', ' ')} (4 host devices)",
+                         f"{v['median_s']*1e3:.2f}",
+                         f"{v['median_s']/n*1e9:.1f}",
+                         f"{n/v['median_s']/1e6:.1f}",
+                         f"{base_t/v['median_s']:.2f}×", "-"))
+        t_off = sharded["fused_pencil_2x2"]["median_s"]
+        t_on = sharded["fused_pencil_2x2_overlap"]["median_s"]
+        rec["sharded"] = {
+            "mesh": [2, 2], "decomposition": "pencil",
+            "exchanged_bytes_per_step":
+                sharded["fused_pencil_2x2"]["exchanged_bytes_per_step"],
+            "ppermutes_per_step":
+                sharded["fused_pencil_2x2"]["ppermutes_per_step"],
+            "achieved_overlap": 1.0 - t_on / t_off,
+        }
 
     RESULTS["fused_step"] = rec
     BENCH_RECORDS["fused_step"] = rec

@@ -42,18 +42,48 @@ def main():
                     help="donate the hot-loop field buffers in each "
                          "scanned chunk (ping-pong aliasing; no per-step "
                          "reallocation)")
+    ap.add_argument("--mesh", default=None, metavar="NxM[xK]",
+                    help="shard the grid over the process's devices: "
+                         "'4' = slab, '2x2' = pencil, '2x2x2' = block "
+                         "(mesh axis k shards grid dim k; run under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to fake devices on CPU)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="launch each stage's interior while the ghost "
+                         "exchanges are in flight (sharded runs; "
+                         "trajectories match to ~1 ULP, not bitwise — "
+                         "see docs/targetdp_api.md)")
     args = ap.parse_args()
+
+    mesh = None
+    shard_axis = "data"
+    if args.mesh:
+        from repro.launch.mesh import make_test_mesh
+        shape = tuple(int(s) for s in args.mesh.lower().split("x"))
+        shard_axis = tuple(f"p{'xyz'[d]}" for d in range(len(shape)))
+        mesh = make_test_mesh(shape, shard_axis)
+        print(f"[lb_spinodal] mesh {dict(zip(shard_axis, shape))}: "
+              f"{'slab pencil block'.split()[len(shape) - 1]} "
+              f"decomposition")
 
     params = LBParams(A=0.125, B=0.125, kappa=0.02)
     sim = BinaryFluidSim((args.grid,) * 3, params=params,
                          target=tdp.Target(args.backend, vvl=args.vvl),
-                         fused=args.fused)
+                         fused=args.fused, mesh=mesh, shard_axis=shard_axis,
+                         overlap=args.overlap)
     hot = sim.programs["fused" if args.fused else "step"]
     plan = hot.plan()
     print(f"[lb_spinodal] hot-loop Program "
           f"{hot.program.name!r}: stages "
           f"{[r['stage'] + '@' + r['executor'] for r in plan.per_stage()]}, "
           f"est. per-step HBM {plan.hbm_bytes_estimate() / 2**20:.1f} MiB")
+    if mesh is not None:
+        cs = hot.comm_stats()
+        print(f"[lb_spinodal] exchange schedule {hot.exchange_schedule}: "
+              f"{cs['exchanged_bytes_per_step'] / 2**10:.1f} KiB and "
+              f"{cs['ppermutes_per_step']} ppermutes per step"
+              + (f"; overlap interior fraction "
+                 f"{cs['interior_fraction']:.2f}" if cs["overlap"] else ""))
     state = sim.init_spinodal(seed=0, noise=0.05)
 
     obs0 = sim.observables(state)

@@ -66,6 +66,8 @@ from .program import (
     CompiledProgram,
     Program,
     ProgramPlan,
+    exchange_ghosts,
+    exchange_stats,
     Stage,
     program,
     stage,
@@ -104,6 +106,7 @@ __all__ = [
     "compatible_executors", "list_executors", "registry_version",
     # step graphs
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
+    "exchange_ghosts", "exchange_stats",
     "stage",
     # autotuning
     "autotune", "default_space", "plane_block_candidates",

@@ -122,6 +122,13 @@ def halo_extend(x: jax.Array, shape: tuple[int, ...],
                 g = jax.lax.slice_in_dim(g, h - rd, h + rd + s, axis=d + 1)
             widths.append((0, 0))
         else:
+            if rd > s:
+                raise ValueError(
+                    f"stencil {stencil.name!r} radius {rd} in dim {d} "
+                    f"exceeds the periodic extent {s}; refusing to "
+                    f"wrap-pad more than one full period — supply "
+                    f">= {rd} exchanged ghost planes in dim {d} "
+                    f"(halo > 0) or enlarge the dimension")
             widths.append((rd, rd))
     if any(w != (0, 0) for w in widths):
         g = jnp.pad(g, widths, mode="wrap")
@@ -361,6 +368,31 @@ def _validate_arrays(spec: KernelSpec, arrays, lattice, halo):
     return None
 
 
+def _validate_wrap_extents(spec: KernelSpec, lattice, halo):
+    """Plan-build guard for :func:`halo_extend`'s periodic path: a
+    ``wants="halo_extended"`` launch wrap-pads every dimension whose halo
+    is 0 by the stencil radius, which this framework refuses when the
+    radius exceeds the extent (e.g. a radius-2 stencil meeting a 1-plane
+    pencil).  Raising here names the dim/radius/extent *before* tracing,
+    instead of surfacing deep inside the jitted launch."""
+    if lattice is None or not spec.has_stencil:
+        return
+    h = halo if halo is not None else (0,) * lattice.ndim
+    for i, fs in enumerate(spec.fields):
+        s = fs.stencil
+        if s is None:
+            continue
+        for d, r in enumerate(s.radius_per_dim()):
+            if r and h[d] == 0 and r > lattice.shape[d]:
+                raise ValueError(
+                    f"{fs.label(i)} of kernel {spec.name!r}: stencil "
+                    f"{s.name!r} radius {r} in dim {d} exceeds the "
+                    f"periodic extent {lattice.shape[d]} (halo_extend "
+                    f"cannot wrap-pad a dimension thinner than the "
+                    f"stencil radius); supply >= {r} ghost planes in "
+                    f"dim {d} or enlarge it")
+
+
 # ---------------------------------------------------------------------------
 # the launch itself
 # ---------------------------------------------------------------------------
@@ -470,6 +502,8 @@ def launch(spec: KernelSpec, target: Target | str | None = None, /,
                 f"kernel {spec.name!r} does not declare const(s) "
                 f"{unknown}; declared: {sorted(spec.consts)}")
     h = _validate_arrays(spec, arrays, lattice, halo)
+    if entry.wants == "halo_extended":
+        _validate_wrap_extents(spec, lattice, h)
     vvl = tgt.resolve_vvl()
     out_ncomp = spec.out if spec.out is not None else (int(arrays[0].shape[0]),)
     key = _consts_cache_key(all_consts)
@@ -505,6 +539,8 @@ def launch_plan(spec: KernelSpec, target: Target | str | None = None, *,
                          f"launch_plan needs the lattice")
     h = (_normalize_halo(halo, lattice.ndim)
          if lattice is not None and spec.has_stencil else None)
+    if entry.wants == "halo_extended":
+        _validate_wrap_extents(spec, lattice, h)
     if spec.out is not None:
         out_ncomp = spec.out
     elif spec.fields[0].ncomp is not None:

@@ -48,6 +48,7 @@ import hashlib
 import json
 import math
 import os
+import tempfile
 import time
 from typing import Any, Callable, Mapping, NamedTuple, Sequence
 
@@ -485,10 +486,28 @@ def load_cached(cache_dir: str, key: str) -> TuneReport | None:
 
 
 def store_cached(cache_dir: str, report: TuneReport) -> str:
+    """Atomically persist ``report`` under its cache key.
+
+    The entry is serialised to a private tempfile in ``cache_dir`` (same
+    filesystem, so the final rename is atomic) and ``os.replace``\\ d
+    into place: an interrupted run can never leave a truncated entry
+    behind, and concurrent writers (two bench processes sharing
+    ``results/tuning/``) each land a complete file — last one wins."""
     os.makedirs(cache_dir, exist_ok=True)
     path = _cache_path(cache_dir, report.cache_key)
-    with open(path, "w") as fh:
-        json.dump(report.as_dict(), fh, indent=1, default=str)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir,
+                               prefix=f".{report.cache_key}-",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(report.as_dict(), fh, indent=1, default=str)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path
 
 

@@ -44,7 +44,21 @@ d. **aggregated memory models** — :meth:`Program.plan` /
    :meth:`CompiledProgram.plan` build one
    :class:`~repro.core.api.LaunchPlan` per stage and aggregate the PR 3
    ``vmem_bytes_estimate`` / ``hbm_bytes_estimate`` models across the
-   step.
+   step;
+e. **pencil/block decomposition with comm/compute overlap** — the mesh
+   may shard up to ``ndim`` grid dimensions (mesh axis *k* ↔ grid dim
+   *k*; one axis = slab, two = pencil, three = block).  Ghost exchanges
+   run as **ordered per-dimension sweeps** (dim 0 first): the dim-1
+   exchange transfers the already-dim-0-extended planes, so corner and
+   edge ghosts arrive via the orthogonal neighbour without any explicit
+   diagonal ``ppermute``.  With ``overlap=True``, each step's launches
+   are split into an **interior** region that reads only local data —
+   XLA's latency-hiding scheduler runs it while the ``ppermute``\\ s are
+   in flight — plus two **boundary** slabs per sharded dim launched on
+   the exchanged arrays (:func:`_overlap_regions`); the split is
+   data-exact but region-shaped codegen may reassociate at ≤1 ULP, so
+   it is opt-in.  :meth:`CompiledProgram.comm_stats` reports the
+   analytic exchanged-bytes/ppermute budget per step.
 
 :meth:`Program.execute` is the uncompiled single-step entry for callers
 that manage their own ghost planes (``repro.kernels.ops.lb_fused_step``);
@@ -410,14 +424,22 @@ class Program:
 
     def compile(self, target: Target | str | None = None, *,
                 grid_shape: Sequence[int], mesh=None,
-                shard_axis: str | None = None) -> "CompiledProgram":
+                shard_axis: str | Sequence[str] | None = None,
+                overlap: bool | None = None) -> "CompiledProgram":
         """Lower to one jitted step function (see
         :class:`CompiledProgram`).  ``mesh``/``shard_axis`` default to the
         target's hints; with a mesh, the step runs under ``shard_map``
-        with slab decomposition along dimension 0 and one ghost exchange
-        per field per step."""
+        with mesh axis *k* sharding grid dim *k* (one name = slab, two =
+        pencil, three = block) and one ghost-exchange round per field per
+        sharded dim per step.  ``overlap=True`` opts into the
+        comm/compute overlap schedule (interior launched while the
+        exchanges are in flight); it is numerically equivalent but not
+        bit-reproducible against the default unsplit schedule — XLA
+        codegen for the region shapes reassociates at the ≤1-ULP level —
+        so the default (``None``/``False``) keeps the bit-identical
+        trajectory."""
         return CompiledProgram(self, target, grid_shape, mesh=mesh,
-                               shard_axis=shard_axis)
+                               shard_axis=shard_axis, overlap=overlap)
 
     def autotune(self, target: Target | str | None,
                  example_state: Mapping[str, jax.Array], **kw):
@@ -446,28 +468,193 @@ class Program:
 # the compiled step
 # ---------------------------------------------------------------------------
 
-def _exchange_dim0(arr: jax.Array, axis_name: str, width: int) -> jax.Array:
-    """Extend a local slab ``(ncomp, Xl, ...)`` by ``width`` exchanged
-    ghost planes on each side of dimension 0.
+def _shard_axes(shard_axis) -> tuple[str, ...]:
+    """Normalise a ``shard_axis`` argument (name or sequence of names) to
+    the ordered tuple of mesh axis names; axis *k* shards grid dim *k*."""
+    if shard_axis is None:
+        return ()
+    if isinstance(shard_axis, str):
+        return (shard_axis,)
+    return tuple(str(a) for a in shard_axis)
+
+
+def _exchange_hops(width: int, local_extent: int) -> list[tuple[int, int]]:
+    """Hop plan for a ``width``-plane ghost exchange across shards of
+    ``local_extent`` planes: ``[(hop, take), ...]`` — hop *j* transfers
+    the ``take`` boundary planes of the rank ``±j`` neighbour.  One hop
+    when the neighbour covers the width; one extra hop per additional
+    shard when ``width > local_extent`` (maximal decompositions: a
+    1-plane pencil feeding a radius-2 schedule reads from ranks ±2)."""
+    hops = -(-width // local_extent)         # ceil: shards per side
+    return [(j, min(local_extent, width - (j - 1) * local_extent))
+            for j in range(1, hops + 1)]
+
+
+def exchange_ghosts(arr: jax.Array, dim: int, width: int, nranks: int,
+                    permute) -> jax.Array:
+    """Extend a local shard ``(ncomp, *local)`` by ``width`` exchanged
+    ghost planes on each side of grid dimension ``dim``.
 
     The transfer set is exactly the boundary planes (the paper's
-    masked-copy idea) — one ``ppermute`` pair when the neighbour slab
-    covers the width, and one extra hop per additional slab when
-    ``width > Xl`` (maximal decompositions: a 1-plane slab feeding a
-    radius-2 schedule reads from ranks ±2)."""
-    n = compat.axis_size(axis_name)
-    xl = arr.shape[1]
-    hops = -(-width // xl)                   # ceil: slabs per side
+    masked-copy idea), concatenated in global-coordinate order: the hop-j
+    left ghosts sit left of the hop-(j-1) ones, mirroring on the right.
+    ``permute(x, pairs)`` is the rank-permutation primitive —
+    ``jax.lax.ppermute`` under ``shard_map`` (:func:`_exchange_dim`);
+    tests inject a stacked-shard fake to cross-check the hop plan against
+    a single-device roll reference.
+    """
+    ax = dim + 1                             # grid dim d is array axis d+1
+    xl = arr.shape[ax]
     left, right = [], []
-    for j in range(1, hops + 1):
-        t = min(xl, width - (j - 1) * xl)    # planes taken from rank ±j
-        fwd = [(i, (i + j) % n) for i in range(n)]   # receive from rank -j
-        bwd = [(i, (i - j) % n) for i in range(n)]   # receive from rank +j
-        last = jax.lax.slice_in_dim(arr, xl - t, xl, axis=1)
-        first = jax.lax.slice_in_dim(arr, 0, t, axis=1)
-        left.insert(0, jax.lax.ppermute(last, axis_name, fwd))
-        right.append(jax.lax.ppermute(first, axis_name, bwd))
-    return jnp.concatenate(left + [arr] + right, axis=1)
+    for j, t in _exchange_hops(width, xl):
+        fwd = [(i, (i + j) % nranks) for i in range(nranks)]  # recv from -j
+        bwd = [(i, (i - j) % nranks) for i in range(nranks)]  # recv from +j
+        last = jax.lax.slice_in_dim(arr, xl - t, xl, axis=ax)
+        first = jax.lax.slice_in_dim(arr, 0, t, axis=ax)
+        left.insert(0, permute(last, fwd))
+        right.append(permute(first, bwd))
+    return jnp.concatenate(left + [arr] + right, axis=ax)
+
+
+def _exchange_dim(arr: jax.Array, axis_name: str, width: int,
+                  dim: int) -> jax.Array:
+    """:func:`exchange_ghosts` under ``shard_map``: mesh axis
+    ``axis_name`` shards grid dim ``dim``."""
+    n = compat.axis_size(axis_name)
+    return exchange_ghosts(
+        arr, dim, width, n,
+        lambda x, pairs: jax.lax.ppermute(x, axis_name, pairs))
+
+
+def exchange_stats(widths: Mapping[str, Sequence[int]],
+                   ncomp: Mapping[str, int | None],
+                   local: Sequence[int], shard_dims: Sequence[int],
+                   itemsize: int = 4) -> dict:
+    """Analytic per-device cost of one step's exchange round.
+
+    Mirrors the compiled sweep exactly: fields exchange dim by dim in
+    ``shard_dims`` order, and a later dim's planes span the earlier
+    dims' already-extended extents (that is how corner/edge ghosts
+    travel), so its per-plane byte count grows accordingly.  Returns
+    ``per_field`` rows plus the step totals ``exchanged_bytes_per_step``
+    and ``ppermutes_per_step`` (the latter is checkable against
+    ``collective-permute`` ops in the lowered HLO).
+    """
+    per_field = {}
+    total_bytes = total_pp = 0
+    for f, w in widths.items():
+        c = int(ncomp.get(f) or 1)
+        ext = list(int(s) for s in local)
+        fbytes = fpp = 0
+        sched = {}
+        for d in shard_dims:
+            wd = int(w[d])
+            if not wd:
+                continue
+            plane = 1
+            for dd, e in enumerate(ext):
+                if dd != d:
+                    plane *= e
+            fbytes += 2 * wd * plane * c * itemsize
+            fpp += 2 * len(_exchange_hops(wd, int(local[d])))
+            sched[d] = wd
+            ext[d] += 2 * wd
+        per_field[f] = {"widths": sched, "bytes": fbytes,
+                        "ppermutes": fpp}
+        total_bytes += fbytes
+        total_pp += fpp
+    return {"per_field": per_field,
+            "exchanged_bytes_per_step": total_bytes,
+            "ppermutes_per_step": total_pp}
+
+
+def _overlap_regions(local: Sequence[int], W: Sequence[int],
+                     shard_dims: Sequence[int]):
+    """The comm/compute-overlap partition of the local domain.
+
+    ``W[d]`` is the step's max exchange width in dim ``d``.  Returns
+    ``(interior, boundaries)`` where every region is ``(start, shape)``
+    in local interior coordinates:
+
+    * ``interior`` — the block at distance ≥ ``W[d]`` from every
+      exchanged face: computable from local data alone, so it launches
+      while the ``ppermute``\\ s are in flight;
+    * ``boundaries`` — ``[(dim, lo_region, hi_region), ...]``, two
+      ``W[d]``-thick slabs per exchanged dim, launched on the exchanged
+      arrays.  The dim-*d* slabs span the *interior* extent in exchanged
+      dims < *d* and the full local extent in dims > *d*, so the regions
+      tile the local domain exactly once (corners belong to the lowest
+      exchanged dim's slabs).
+    """
+    ndim = len(local)
+    active = [d for d in shard_dims if W[d] > 0]
+    i_start = tuple(W[d] if d in active else 0 for d in range(ndim))
+    i_shape = tuple(local[d] - 2 * W[d] if d in active else local[d]
+                    for d in range(ndim))
+    bounds = []
+    for d in active:
+        start = tuple(W[dd] if (dd in active and dd < d) else 0
+                      for dd in range(ndim))
+        shape = tuple(W[d] if dd == d
+                      else (local[dd] - 2 * W[dd]
+                            if (dd in active and dd < d) else local[dd])
+                      for dd in range(ndim))
+        hi_start = tuple(local[d] - W[d] if dd == d else start[dd]
+                         for dd in range(ndim))
+        bounds.append((d, (start, shape), (hi_start, shape)))
+    return (i_start, i_shape), bounds
+
+
+def _run_region(program: Program, stage_targets, geo, widths, fields,
+                sources: Mapping[str, tuple[jax.Array, tuple[int, ...]]],
+                start: tuple[int, ...], shape: tuple[int, ...],
+                zeros: tuple[int, ...]) -> dict:
+    """Run the whole stage pipeline over one region of the local domain.
+
+    ``sources[f] = (array, src_ext)`` covers interior coordinates
+    ``[-src_ext[d], local[d] + src_ext[d])`` — raw local arrays
+    (``src_ext = 0``, the interior region) or exchanged arrays
+    (``src_ext = widths[f]``, boundary regions).  Each field is sliced to
+    the region plus its own schedule width, so the region's launches see
+    exactly the ghost geometry the full-domain pipeline would.
+    """
+    env = {}
+    for f in fields:
+        a, src_ext = sources[f]
+        w = widths[f]
+        for d in range(len(shape)):
+            lo = start[d] - w[d] + src_ext[d]
+            ln = shape[d] + 2 * w[d]
+            if lo == 0 and ln == a.shape[d + 1]:
+                continue
+            a = jax.lax.slice_in_dim(a, lo, lo + ln, axis=d + 1)
+        env[f] = (a, w)
+    env = program._run_stages(stage_targets, shape, geo, env)
+    return {f: _grid_trim(env[f][0], shape, env[f][1], zeros)
+            for f in fields}
+
+
+def _validate_decomposition(program: Program, grid_shape, open_mask):
+    """Compile-time guard: every stencil-read dimension left *unsharded*
+    wraps periodically inside each launch, which is only meaningful while
+    the extent covers the stencil radius — a pencil misconfiguration
+    (e.g. a radius-2 stencil on an unsharded extent-1 dim) must fail
+    here, not deep inside ``lax.scan``."""
+    for st in program.stages:
+        for s in st.spec.stencils:
+            if s is None:
+                continue
+            for d, r in enumerate(s.radius_per_dim()):
+                if r and not open_mask[d] and r > grid_shape[d]:
+                    sharded = [i for i, o in enumerate(open_mask) if o]
+                    raise ValueError(
+                        f"program {program.name!r} stage {st.name!r}: "
+                        f"stencil {s.name!r} radius {r} in dim {d} "
+                        f"exceeds the unsharded (periodic) extent "
+                        f"{grid_shape[d]} — this decomposition (sharded "
+                        f"dims {sharded}) leaves dim {d} too thin to "
+                        f"wrap; shard dim {d} with a mesh axis or "
+                        f"enlarge the grid")
 
 
 class CompiledProgram:
@@ -478,14 +665,21 @@ class CompiledProgram:
       (``donate=True`` donates the field buffers: XLA aliases state in
       and out, the ping-pong);
     * :meth:`plan` — the aggregated :class:`ProgramPlan`;
-    * ``halo_schedule`` — field → exchange width (sharded compiles only);
+    * :meth:`comm_stats` — the analytic exchange budget per step;
+    * ``halo_schedule`` — field → dim-0 exchange width (sharded compiles
+      only; the legacy slab view of ``exchange_schedule``);
+    * ``exchange_schedule`` — field → ``{dim: width}`` over the sharded
+      dims with a non-zero width (one exchange round each per step);
+    * ``overlap`` — whether the compiled step uses the interior/boundary
+      overlap split;
     * ``stage_targets`` — the per-stage routed targets (capability
       fallback applied).
     """
 
     def __init__(self, program: Program, target: Target | str | None,
                  grid_shape: Sequence[int], *, mesh=None,
-                 shard_axis: str | None = None):
+                 shard_axis: str | Sequence[str] | None = None,
+                 overlap: bool | None = None):
         self.program = program
         tgt = as_target(target)
         self.target = tgt
@@ -494,65 +688,149 @@ class CompiledProgram:
         self.mesh = mesh if mesh is not None else tgt.mesh
         self.shard_axis = (shard_axis if shard_axis is not None
                            else (tgt.shard_axis or "data"))
+        self.shard_axes = (_shard_axes(self.shard_axis)
+                           if self.mesh is not None else ())
         self.stage_targets = tuple(resolve_stage_target(tgt, st.spec)
                                    for st in program.stages)
         fields = program.fields
+        zeros = (0,) * ndim
 
         if self.mesh is None:
             self.local_shape = self.grid_shape
             open_mask = (False,) * ndim
             widths, geo = program.schedule(ndim, open_mask)
+            _validate_decomposition(program, self.grid_shape, open_mask)
             self.halo_schedule: dict[str, int] = {}
+            self.exchange_schedule: dict[str, dict[int, int]] = {}
             self._geo = geo
+            self._widths = widths
+            self._shard_dims: tuple[int, ...] = ()
+            self._interior_shape = self.grid_shape
+            self.overlap = False
 
             def core(*arrays):
-                env = {f: (a, (0,) * ndim)
-                       for f, a in zip(fields, arrays)}
+                env = {f: (a, zeros) for f, a in zip(fields, arrays)}
                 env = program._run_stages(self.stage_targets,
                                           self.grid_shape, geo, env)
                 return tuple(env[f][0] for f in fields)
 
         else:
-            nsh = int(self.mesh.shape[self.shard_axis])
-            if self.grid_shape[0] % nsh != 0:
+            axes = self.shard_axes
+            if not axes:
                 raise ValueError(
-                    f"X extent {self.grid_shape[0]} not divisible by "
-                    f"mesh axis {self.shard_axis}={nsh}")
-            local = (self.grid_shape[0] // nsh,) + self.grid_shape[1:]
+                    f"program {program.name!r}: a mesh was given but "
+                    f"shard_axis is empty — name the mesh axis(es) that "
+                    f"shard grid dims 0..k")
+            if len(axes) != len(set(axes)):
+                raise ValueError(f"duplicate shard axes {axes}")
+            if len(axes) > ndim:
+                raise ValueError(
+                    f"{len(axes)} shard axes {axes} for a {ndim}-D grid; "
+                    f"mesh axis k shards grid dim k, so at most {ndim} "
+                    f"axes apply")
+            local = list(self.grid_shape)
+            for d, ax in enumerate(axes):
+                if ax not in self.mesh.shape:
+                    raise ValueError(
+                        f"shard axis {ax!r} is not a mesh axis "
+                        f"(mesh has {tuple(self.mesh.shape)})")
+                nsh = int(self.mesh.shape[ax])
+                if self.grid_shape[d] % nsh != 0:
+                    raise ValueError(
+                        f"{'XYZ'[d] if d < 3 else f'dim-{d}'} extent "
+                        f"{self.grid_shape[d]} not divisible by mesh "
+                        f"axis {ax}={nsh}")
+                local[d] = self.grid_shape[d] // nsh
+            local = tuple(local)
             self.local_shape = local
-            open_mask = (True,) + (False,) * (ndim - 1)
+            shard_dims = tuple(range(len(axes)))
+            self._shard_dims = shard_dims
+            open_mask = tuple(d < len(axes) for d in range(ndim))
             widths, geo = program.schedule(ndim, open_mask)
             self._geo = geo
+            self._widths = widths
             self.halo_schedule = {f: widths[f][0] for f in fields}
-            w_max = max(self.halo_schedule.values(), default=0)
-            if w_max >= self.grid_shape[0]:
-                raise ValueError(
-                    f"program {program.name!r} needs a {w_max}-plane "
-                    f"ghost exchange but the global X extent is only "
-                    f"{self.grid_shape[0]} plane(s)")
-            axis = self.shard_axis
-            zeros = (0,) * ndim
+            self.exchange_schedule = {
+                f: {d: widths[f][d] for d in shard_dims if widths[f][d]}
+                for f in fields}
+            for d in shard_dims:
+                w_max = max((widths[f][d] for f in fields), default=0)
+                if w_max >= self.grid_shape[d]:
+                    raise ValueError(
+                        f"program {program.name!r} needs a {w_max}-plane "
+                        f"ghost exchange in dim {d} but the global "
+                        f"extent is only {self.grid_shape[d]} plane(s)")
+            _validate_decomposition(program, self.grid_shape, open_mask)
 
-            def core_local(*arrays):
-                env = {}
+            # Overlap is opt-in: splitting a launch into region-shaped
+            # launches is *data*-exact (the eager split is bitwise equal
+            # to the full launch) but XLA codegen for the region shapes
+            # may reassociate float ops at the ≤1-ULP level, so the
+            # default keeps the unsplit schedule and its bit-identical-
+            # to-single-device guarantee.  Feasibility: the interior must
+            # be non-empty in every exchanged dim (thin pencils where the
+            # exchange width swallows the whole shard stay unsplit).
+            W = tuple(max((widths[f][d] for f in fields), default=0)
+                      if open_mask[d] else 0 for d in range(ndim))
+            (i_start, i_shape), bounds = _overlap_regions(local, W,
+                                                          shard_dims)
+            can_overlap = any(W) and all(s > 0 for s in i_shape)
+            self.overlap = bool(overlap) and can_overlap
+            self._interior_shape = i_shape if self.overlap else local
+
+            def _exchange_all(arrays):
+                """Ordered per-dim sweep: dim 1 transfers the already-
+                dim-0-extended planes, so corner ghosts arrive via the
+                orthogonal neighbour (no diagonal ppermute)."""
+                out = {}
                 for f, a in zip(fields, arrays):
                     w = widths[f]
-                    if w[0]:
-                        a = _exchange_dim0(a, axis, w[0])
-                    env[f] = (a, w)
-                env = program._run_stages(self.stage_targets, local, geo,
-                                          env)
-                return tuple(_grid_trim(env[f][0], local, env[f][1],
-                                        zeros) for f in fields)
+                    for d, ax in enumerate(axes):
+                        if w[d]:
+                            a = _exchange_dim(a, ax, w[d], d)
+                    out[f] = a
+                return out
 
-            spec = PartitionSpec(*((None, axis) + (None,) * (ndim - 1)))
+            if not self.overlap:
+                def core_local(*arrays):
+                    ex = _exchange_all(arrays)
+                    env = {f: (ex[f], widths[f]) for f in fields}
+                    env = program._run_stages(self.stage_targets, local,
+                                              geo, env)
+                    return tuple(_grid_trim(env[f][0], local, env[f][1],
+                                            zeros) for f in fields)
+            else:
+                def core_local(*arrays):
+                    # Interior first, fed the *raw* local arrays — no
+                    # data dependency on any ppermute, so XLA is free to
+                    # run it while the exchanges are in flight.
+                    raw = {f: (a, zeros) for f, a in zip(fields, arrays)}
+                    out = _run_region(program, self.stage_targets, geo,
+                                      widths, fields, raw, i_start,
+                                      i_shape, zeros)
+                    ex = _exchange_all(arrays)
+                    exd = {f: (ex[f], widths[f]) for f in fields}
+                    for d, lo, hi in reversed(bounds):
+                        o_lo = _run_region(program, self.stage_targets,
+                                           geo, widths, fields, exd,
+                                           *lo, zeros)
+                        o_hi = _run_region(program, self.stage_targets,
+                                           geo, widths, fields, exd,
+                                           *hi, zeros)
+                        out = {f: jnp.concatenate(
+                                   [o_lo[f], out[f], o_hi[f]], axis=d + 1)
+                               for f in fields}
+                    return tuple(out[f] for f in fields)
+
+            pspec = PartitionSpec(*((None,) + axes
+                                    + (None,) * (ndim - len(axes))))
             # pallas_call has no shard_map replication rule on jax 0.4.x:
             # drop the check whenever any stage dispatches off-xla.
             check = all(t.executor == "xla" for t in self.stage_targets)
             core = compat.shard_map(
                 core_local, mesh=self.mesh,
-                in_specs=(spec,) * len(fields),
-                out_specs=(spec,) * len(fields), check_vma=check)
+                in_specs=(pspec,) * len(fields),
+                out_specs=(pspec,) * len(fields), check_vma=check)
 
         self._core = core
         self._jit_step = jax.jit(core)
@@ -614,7 +892,46 @@ class CompiledProgram:
         """Aggregated memory models for this compile's local geometry."""
         return _build_program_plan(self.program, self.stage_targets,
                                    self.local_shape, self._geo,
-                                   self.halo_schedule)
+                                   self.halo_schedule,
+                                   self.exchange_schedule)
+
+    def comm_stats(self, itemsize: int = 4) -> dict:
+        """The analytic communication budget of one compiled step.
+
+        Per-device, per-step: exchanged ghost bytes and ``ppermute``
+        count (:func:`exchange_stats` — checkable against
+        ``collective-permute`` ops in the lowered HLO), plus the
+        decomposition shape and the overlap split's interior fraction
+        (the share of local sites whose compute does not wait on any
+        exchange).  ``itemsize`` defaults to float32 fields.
+        """
+        if self.mesh is None:
+            return {"decomposition": "single", "shard_axes": (),
+                    "mesh_axis_sizes": (), "local_shape": self.local_shape,
+                    "exchange_schedule": {},
+                    "exchanged_bytes_per_step": 0,
+                    "ppermutes_per_step": 0, "per_field": {},
+                    "overlap": False, "interior_fraction": 1.0}
+        stats = exchange_stats(self._widths, self.program.ncomp,
+                               self.local_shape, self._shard_dims,
+                               itemsize)
+        kinds = {1: "slab", 2: "pencil", 3: "block"}
+        n_loc = 1
+        for s in self.local_shape:
+            n_loc *= s
+        n_int = 1
+        for s in self._interior_shape:
+            n_int *= s
+        stats.update(
+            decomposition=kinds.get(len(self.shard_axes), "block"),
+            shard_axes=self.shard_axes,
+            mesh_axis_sizes=tuple(int(self.mesh.shape[a])
+                                  for a in self.shard_axes),
+            local_shape=self.local_shape,
+            exchange_schedule=self.exchange_schedule,
+            overlap=self.overlap,
+            interior_fraction=(n_int / n_loc if self.overlap else 0.0))
+        return stats
 
     def __repr__(self):
         return (f"CompiledProgram({self.program.name!r}, "
@@ -638,12 +955,14 @@ class ProgramPlan:
     run sequentially, fast memory is reused.
     """
 
-    __slots__ = ("name", "stages", "halo_schedule")
+    __slots__ = ("name", "stages", "halo_schedule", "exchange_schedule")
 
-    def __init__(self, name: str, stages, halo_schedule):
+    def __init__(self, name: str, stages, halo_schedule,
+                 exchange_schedule=None):
         self.name = name
         self.stages = tuple(stages)          # (stage_name, LaunchPlan)
         self.halo_schedule = dict(halo_schedule)
+        self.exchange_schedule = dict(exchange_schedule or {})
 
     def hbm_bytes_estimate(self, itemsize: int = 4) -> int:
         return sum(p.hbm_bytes_estimate(itemsize) for _, p in self.stages)
@@ -668,8 +987,8 @@ class ProgramPlan:
 
 
 def _build_program_plan(program: Program, stage_targets,
-                        shape: tuple[int, ...], geo,
-                        halo_schedule) -> ProgramPlan:
+                        shape: tuple[int, ...], geo, halo_schedule,
+                        exchange_schedule=None) -> ProgramPlan:
     plans = []
     for st, tgt, (e_out, h) in zip(program.stages, stage_targets, geo):
         lat = Lattice(tuple(s + 2 * e for s, e in zip(shape, e_out)))
@@ -677,7 +996,8 @@ def _build_program_plan(program: Program, stage_targets,
                           halo=h if any(h) else None,
                           consts=st.consts_dict())
         plans.append((st.name, lp))
-    return ProgramPlan(program.name, plans, halo_schedule)
+    return ProgramPlan(program.name, plans, halo_schedule,
+                       exchange_schedule)
 
 
 # ---------------------------------------------------------------------------

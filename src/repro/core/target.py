@@ -70,7 +70,9 @@ class Target:
       interpret: run Pallas semantics on CPU (validation mode).
       mesh / shard_axis: optional sharding hints for mesh-aware callers
         (e.g. :class:`repro.lb.sim.BinaryFluidSim`); the core launch does
-        not act on them, it only carries them.
+        not act on them, it only carries them.  ``shard_axis`` is one
+        mesh-axis name (slab decomposition) or a tuple of names
+        (pencil/block: axis *k* shards grid dim *k*).
       tuning: executor/op-specific knobs, stored as a sorted tuple of
         pairs so the Target stays hashable.  Established keys:
         ``block_f`` / ``block_q`` / ... (pointwise Pallas block sizes,
@@ -84,7 +86,7 @@ class Target:
     vvl: int | None = None
     interpret: bool = False
     mesh: Any = None
-    shard_axis: str | None = None
+    shard_axis: str | tuple[str, ...] | None = None
     tuning: tuple[tuple[str, Any], ...] = field(default=())
 
     def __post_init__(self):
@@ -99,6 +101,11 @@ class Target:
             if int(self.vvl) <= 0:
                 raise ValueError(f"vvl must be positive, got {self.vvl}")
             object.__setattr__(self, "vvl", int(self.vvl))
+        # multi-axis decompositions name one mesh axis per sharded grid
+        # dim; freeze to a tuple so the Target stays hashable
+        if isinstance(self.shard_axis, (list, tuple)):
+            object.__setattr__(self, "shard_axis",
+                               tuple(str(a) for a in self.shard_axis))
         object.__setattr__(self, "tuning", _freeze_tuning(self.tuning))
 
     @property

@@ -77,7 +77,9 @@ class BinaryFluidSim:
     def __init__(self, grid_shape=(32, 32, 32), params: LBParams | None = None,
                  *, target: Target | str | None = None,
                  backend: str = "xla", vvl: int = 128,
-                 mesh: Mesh | None = None, shard_axis: str = "data",
+                 mesh: Mesh | None = None,
+                 shard_axis: str | tuple[str, ...] = "data",
+                 overlap: bool | None = None,
                  fused: bool | str = False, dtype=jnp.float32):
         self.grid_shape = tuple(int(s) for s in grid_shape)
         self.params = params or LBParams()
@@ -118,7 +120,7 @@ class BinaryFluidSim:
         consts = lbp.collision_consts(dtype=np.dtype(dtype),
                                       **self.params.as_kwargs())
         kw = dict(grid_shape=self.grid_shape, mesh=mesh,
-                  shard_axis=shard_axis)
+                  shard_axis=shard_axis, overlap=overlap)
         if fused:
             self.programs = {
                 "collide": lbp.collide_program(consts).compile(target, **kw),
@@ -161,7 +163,10 @@ class BinaryFluidSim:
     def _sharding(self):
         if self.mesh is None:
             return None
-        return NamedSharding(self.mesh, P(None, self.shard_axis, None, None))
+        axes = ((self.shard_axis,) if isinstance(self.shard_axis, str)
+                else tuple(self.shard_axis))
+        spec = P(*((None,) + axes + (None,) * (3 - len(axes))))
+        return NamedSharding(self.mesh, spec)
 
     # -- stepping ------------------------------------------------------------
 

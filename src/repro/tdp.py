@@ -67,6 +67,8 @@ from repro.core.program import (  # noqa: F401
     CompiledProgram,
     Program,
     ProgramPlan,
+    exchange_ghosts,
+    exchange_stats,
     Stage,
     program,
     stage,
@@ -109,6 +111,7 @@ __all__ = [
     "launch", "launch_plan", "LaunchPlan", "xla_executor",
     "gather_neighbors", "halo_extend", "pad_sites",
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
+    "exchange_ghosts", "exchange_stats",
     "stage",
     "autotune", "default_space", "plane_block_candidates",
     "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",

@@ -265,6 +265,82 @@ class TestCache:
         with open(path) as fh:
             assert json.load(fh)["cache_key"] == rep.cache_key
 
+    def test_interrupted_write_preserves_previous_entry(self, tmp_path,
+                                                        monkeypatch):
+        """A writer killed mid-``json.dump`` must not clobber the existing
+        cache entry: the dump goes to a tempfile and only a completed one
+        is ``os.replace``d over the real path."""
+        import importlib
+        at = importlib.import_module("repro.core.autotune")
+
+        timer = ScriptedTimer({"plane_block=2": 0.01}, default=1.0)
+        prog = fused_prog()
+        _, rep1 = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                               cache_dir=str(tmp_path), reps=1, warmup=0)
+        path = os.path.join(str(tmp_path), f"{rep1.cache_key}.json")
+        with open(path) as fh:
+            before = fh.read()
+
+        real_dump = json.dump
+
+        def dying_dump(obj, fh, **kw):
+            fh.write('{"cache_key": "half-writ')    # partial bytes...
+            fh.flush()
+            raise KeyboardInterrupt("killed mid-write")   # ...then death
+
+        monkeypatch.setattr(at.json, "dump", dying_dump)
+        rep_fake = at.TuneReport.from_dict(rep1.as_dict(), cache_hit=False)
+        with pytest.raises(KeyboardInterrupt):
+            at.store_cached(str(tmp_path), rep_fake)
+        monkeypatch.setattr(at.json, "dump", real_dump)
+
+        with open(path) as fh:
+            assert fh.read() == before          # old entry intact
+        assert json.loads(before)["cache_key"] == rep1.cache_key
+        # no orphaned tempfiles left behind
+        leftovers = [n for n in os.listdir(str(tmp_path))
+                     if n.endswith(".tmp")]
+        assert leftovers == []
+        # and the entry still replays as a hit
+        _, rep2 = tdp.autotune(prog, WT, lb_state(), timer=timer,
+                               cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert rep2.cache_hit
+
+    def test_concurrent_writers_leave_valid_entry(self, tmp_path):
+        """N threads racing ``store_cached`` on the same key: the final
+        file is one complete JSON document (some writer's replace wins
+        whole — never an interleaving)."""
+        import importlib
+        import threading
+
+        at = importlib.import_module("repro.core.autotune")
+
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                              cache_dir=str(tmp_path), reps=1, warmup=0)
+        path = os.path.join(str(tmp_path), f"{rep.cache_key}.json")
+        errs = []
+
+        def write(i):
+            try:
+                r = at.TuneReport.from_dict(rep.as_dict(), cache_hit=False)
+                for _ in range(20):
+                    at.store_cached(str(tmp_path), r)
+            except Exception as e:       # pragma: no cover - failure path
+                errs.append(e)
+
+        threads = [threading.Thread(target=write, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errs == []
+        with open(path) as fh:
+            assert json.load(fh)["cache_key"] == rep.cache_key
+        assert not [n for n in os.listdir(str(tmp_path))
+                    if n.endswith(".tmp")]
+
     def test_cache_dir_none_disables(self, tmp_path):
         timer = ScriptedTimer({}, default=1.0)
         _, rep = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,

@@ -85,6 +85,108 @@ class TestSweepCLI:
         assert "no effect" in r.stderr
 
 
+def _write_bench(d, name, grid, variants):
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"BENCH_{name}.json"), "w") as fh:
+        json.dump({"bench": name, "grid": list(grid),
+                   "variants": variants}, fh)
+
+
+class TestCheckRegression:
+    """``benchmarks/check_regression.py`` — the nightly perf gate."""
+
+    def test_compare_matches_on_full_identity(self):
+        from benchmarks.check_regression import compare
+        base = {"b": {"grid": [8, 8], "variants": {
+            "v": {"median_s": 1.0, "executor": "xla", "vvl": 128},
+            "w": {"median_s": 1.0, "executor": "xla"}}}}
+        fresh = {"b": {"grid": [8, 8], "variants": {
+            # same identity, 30% slower → regression
+            "v": {"median_s": 1.3, "executor": "xla", "vvl": 128},
+            # retuned (vvl changed) → unmatched, not gated
+            "w": {"median_s": 9.9, "executor": "xla", "vvl": 64}}}}
+        rep = compare(base, fresh, threshold=0.15)
+        assert [(r[0], r[1]) for r in rep["regressions"]] == [("b", "v")]
+        assert rep["regressions"][0][4] == pytest.approx(0.3)
+        assert ("b", "w") in rep["unmatched"]
+        assert rep["matched"] == 1
+
+    def test_compare_threshold_and_improvements(self):
+        from benchmarks.check_regression import compare
+        base = {"b": {"grid": [8], "variants": {
+            "v": {"median_s": 1.0, "executor": "xla"},
+            "u": {"median_s": 1.0, "executor": "xla"}}}}
+        fresh = {"b": {"grid": [8], "variants": {
+            "v": {"median_s": 1.10, "executor": "xla"},    # within 15%
+            "u": {"median_s": 0.5, "executor": "xla"}}}}   # faster
+        rep = compare(base, fresh)
+        assert rep["regressions"] == []
+        assert [(r[0], r[1]) for r in rep["improvements"]] == [("b", "u")]
+
+    def test_compare_grid_change_never_gates(self):
+        from benchmarks.check_regression import compare
+        base = {"b": {"grid": [8, 8], "variants": {
+            "v": {"median_s": 1.0, "executor": "xla"}}}}
+        fresh = {"b": {"grid": [16, 16], "variants": {
+            "v": {"median_s": 99.0, "executor": "xla"}}}}
+        rep = compare(base, fresh)
+        assert rep["regressions"] == [] and rep["matched"] == 0
+        assert rep["unmatched"] == [("b", "v")]
+
+    def test_compare_min_seconds_skips_timer_noise(self):
+        from benchmarks.check_regression import compare
+        base = {"b": {"grid": [], "variants": {
+            "v": {"median_s": 2e-5, "executor": "xla"}}}}
+        fresh = {"b": {"grid": [], "variants": {
+            "v": {"median_s": 6e-5, "executor": "xla"}}}}
+        assert compare(base, fresh)["regressions"] != []       # 3× slower
+        assert compare(base, fresh,
+                       min_seconds=1e-4)["regressions"] == []
+
+    def _run_checker(self, *argv, timeout=120):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.check_regression", *argv],
+            cwd=REPO, env=env, capture_output=True, text=True,
+            timeout=timeout)
+
+    def test_cli_exit_codes(self, tmp_path):
+        base, fresh = str(tmp_path / "base"), str(tmp_path / "fresh")
+        _write_bench(base, "b", (8,),
+                     {"v": {"median_s": 1.0, "executor": "xla"}})
+        _write_bench(fresh, "b", (8,),
+                     {"v": {"median_s": 1.05, "executor": "xla"}})
+        r = self._run_checker("--baseline", base, "--fresh", fresh)
+        assert r.returncode == 0, r.stderr + r.stdout
+        assert "1 variant(s) compared" in r.stdout
+
+        _write_bench(fresh, "b", (8,),
+                     {"v": {"median_s": 2.0, "executor": "xla"}})
+        r = self._run_checker("--baseline", base, "--fresh", fresh)
+        assert r.returncode == 1
+        assert "REGRESSED b/v" in r.stdout
+
+        # a looser threshold passes the same pair
+        r = self._run_checker("--baseline", base, "--fresh", fresh,
+                              "--threshold", "1.5")
+        assert r.returncode == 0
+
+        # empty dirs are an invocation error, not a silent pass
+        r = self._run_checker("--baseline", base,
+                              "--fresh", str(tmp_path / "nothing"))
+        assert r.returncode == 2
+
+    def test_cli_gates_the_committed_records_against_themselves(self):
+        """The committed results/bench baseline compared to itself is 0
+        regressions — the nightly wiring's happy path."""
+        r = self._run_checker("--baseline", "results/bench",
+                              "--fresh", "results/bench")
+        assert r.returncode == 0, r.stderr + r.stdout
+        assert "0 regression(s)" in r.stdout
+
+
 class TestAutotuneCLI:
     def test_autotune_needs_fused_step_selected(self, tmp_path):
         r = run_bench("--only", "stream", "--autotune",

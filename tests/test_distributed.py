@@ -269,6 +269,114 @@ np.testing.assert_array_equal(np.asarray(ua.g), np.asarray(ub.g))
 print("LB_PROGRAM_4WAY_OK")
 """)
 
+    def test_lb_pencil_2x2_matches_local(self):
+        """The tentpole pin: a 2-D pencil decomposition (mesh axes
+        (px, py) sharding grid dims 0 and 1) is bit-identical to the
+        single-device trajectory over 10 steps at 16³, with one exchange
+        round per field per sharded dim — the per-dim widths mirror the
+        slab schedule and the lowered HLO carries exactly the analytic
+        ppermute count."""
+        run_sub(PRELUDE + """
+from repro.lb.sim import BinaryFluidSim
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 2), ("px", "py"))
+s_loc = BinaryFluidSim((16, 16, 16), fused="two_launch")
+s_sh = BinaryFluidSim((16, 16, 16), mesh=mesh, shard_axis=("px", "py"),
+                      fused="two_launch")
+exe = s_sh.programs["fused"]
+assert exe.exchange_schedule == {"f": {0: 1, 1: 1}, "g": {0: 2, 1: 2}}, \\
+    exe.exchange_schedule
+assert exe.halo_schedule == {"f": 1, "g": 2}     # legacy dim-0 view
+assert s_sh.programs["collide"].exchange_schedule == \\
+    {"f": {}, "g": {0: 1, 1: 1}}
+cs = exe.comm_stats()
+assert cs["decomposition"] == "pencil" and cs["mesh_axis_sizes"] == (2, 2)
+assert cs["local_shape"] == (8, 8, 16)
+# one round per field per sharded dim, single-hop: 2 ppermutes each
+assert cs["ppermutes_per_step"] == 8, cs
+assert cs["exchanged_bytes_per_step"] > 0
+st0 = s_loc.init_spinodal(seed=3)
+st1 = s_sh.init_spinodal(seed=3)
+a = s_loc.step(st0, 10)
+b = s_sh.step(st1, 10)
+np.testing.assert_array_equal(np.asarray(a.f), np.asarray(b.f))
+np.testing.assert_array_equal(np.asarray(a.g), np.asarray(b.g))
+c = s_sh.run(s_sh.init_spinodal(seed=3), 10)
+np.testing.assert_array_equal(np.asarray(a.f), np.asarray(c.f))
+np.testing.assert_array_equal(np.asarray(a.g), np.asarray(c.g))
+# the per-step exchange count matches the schedule: count the
+# collective permutes in the lowered step HLO
+txt = jax.jit(exe._core).lower(*exe._as_tuple(
+    {"f": st1.f, "g": st1.g})).as_text()
+n_cp = txt.count("collective-permute") + txt.count("collective_permute")
+assert n_cp == cs["ppermutes_per_step"], (n_cp, cs["ppermutes_per_step"])
+print("LB_PENCIL_2X2_OK")
+""")
+
+    def test_lb_pencil_overlap_schedule(self):
+        """overlap=True splits every stage into interior + boundary
+        regions (interior launched off the raw local arrays, no ppermute
+        dependency).  The split is data-exact but region-shaped XLA
+        codegen reassociates at <=1 ULP, so the pin is allclose at
+        float32 tightness plus the schedule introspection."""
+        run_sub(PRELUDE + """
+from repro.lb.sim import BinaryFluidSim
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 2), ("px", "py"))
+s_loc = BinaryFluidSim((16, 16, 16), fused="two_launch")
+s_ov = BinaryFluidSim((16, 16, 16), mesh=mesh, shard_axis=("px", "py"),
+                      fused="two_launch", overlap=True)
+exe = s_ov.programs["fused"]
+assert exe.overlap is True
+cs = exe.comm_stats()
+assert cs["overlap"] is True
+# interior (8-2*2)^2*16 of 8*8*16 local sites
+assert abs(cs["interior_fraction"] - 16.0 / 64.0) < 1e-12
+a = s_loc.step(s_loc.init_spinodal(seed=3), 10)
+b = s_ov.step(s_ov.init_spinodal(seed=3), 10)
+np.testing.assert_allclose(np.asarray(a.f), np.asarray(b.f),
+                           rtol=1e-5, atol=1e-7)
+np.testing.assert_allclose(np.asarray(a.g), np.asarray(b.g),
+                           rtol=1e-5, atol=1e-7)
+# default compile stays unsplit (bit-identity guarantee)
+assert BinaryFluidSim((16, 16, 16), mesh=mesh, shard_axis=("px", "py"),
+                      fused="two_launch").programs["fused"].overlap is False
+print("LB_PENCIL_OVERLAP_OK")
+""")
+
+    def test_lb_block_and_thin_pencil(self):
+        """Degenerate 3-D block decomposition and the multi-hop thin
+        pencil (1-plane local extent under a width-2 schedule reads from
+        ranks ±2 along that mesh axis) both stay bit-identical."""
+        run_sub(PRELUDE + """
+from repro.lb.sim import BinaryFluidSim
+from repro.launch.mesh import make_test_mesh
+# 2x2x2 block at 16^3
+mb = make_test_mesh((2, 2, 2), ("bx", "by", "bz"))
+s_loc = BinaryFluidSim((16, 16, 16), fused="two_launch")
+s_bl = BinaryFluidSim((16, 16, 16), mesh=mb,
+                      shard_axis=("bx", "by", "bz"), fused="two_launch")
+assert s_bl.programs["fused"].comm_stats()["decomposition"] == "block"
+a = s_loc.step(s_loc.init_spinodal(seed=3), 5)
+b = s_bl.step(s_bl.init_spinodal(seed=3), 5)
+np.testing.assert_array_equal(np.asarray(a.f), np.asarray(b.f))
+np.testing.assert_array_equal(np.asarray(a.g), np.asarray(b.g))
+
+# thin pencil: mesh (2,4) on (8,4,8) -> local (4,1,8); g's width-2
+# exchange in dim 1 needs 2 hops per side (4 ppermutes)
+mt = make_test_mesh((2, 4), ("tx", "ty"))
+t_loc = BinaryFluidSim((8, 4, 8), fused="two_launch")
+t_sh = BinaryFluidSim((8, 4, 8), mesh=mt, shard_axis=("tx", "ty"),
+                      fused="two_launch")
+cs = t_sh.programs["fused"].comm_stats()
+assert cs["per_field"]["g"]["ppermutes"] == 6, cs   # 2 (dim0) + 4 (dim1)
+ua = t_loc.step(t_loc.init_spinodal(seed=1), 5)
+ub = t_sh.step(t_sh.init_spinodal(seed=1), 5)
+np.testing.assert_array_equal(np.asarray(ua.f), np.asarray(ub.f))
+np.testing.assert_array_equal(np.asarray(ua.g), np.asarray(ub.g))
+print("LB_BLOCK_THIN_OK")
+""")
+
     def test_trainer_on_mesh_with_compression(self):
         run_sub(PRELUDE + """
 import tempfile

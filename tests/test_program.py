@@ -378,6 +378,198 @@ class TestCompiledProgram:
         assert w == {"f": (2, 0, 0), "g": (2, 0, 0)}
 
 
+def _fake_exchange(shards, dim, width):
+    """Run :func:`exchange_ghosts` over stacked shards on one device.
+
+    ``shards`` is ``(nranks, ncomp, *local)``; the injected permute
+    reindexes the leading rank axis the way ``ppermute``'s
+    ``(src, dst)`` pairs would route buffers, so the hop plan is
+    exercised exactly as compiled — minus the mesh."""
+    import importlib
+    P = importlib.import_module("repro.core.program")
+    n = shards.shape[0]
+
+    def permute(x, pairs):
+        idx = np.zeros(n, int)
+        for src, dst in pairs:
+            idx[dst] = src
+        return x[jnp.asarray(idx)]
+
+    # dim d of the *shard* is axis d+2 of the stack; exchange_ghosts
+    # slices axis dim+1, so shift dim by one to skip the rank axis.
+    return P.exchange_ghosts(shards, dim + 1, width, n, permute)
+
+
+class TestPencilExchange:
+    """The generalized (any-dim, any-hop-count) exchange round and the
+    overlap partition — single-device unit pins; the end-to-end pencil /
+    block / thin-pencil trajectories live in test_distributed.py."""
+
+    def _prog_module(self):
+        import importlib
+        return importlib.import_module("repro.core.program")
+
+    def test_exchange_hop_plan(self):
+        P = self._prog_module()
+        assert P._exchange_hops(2, 8) == [(1, 2)]       # neighbour covers
+        assert P._exchange_hops(8, 8) == [(1, 8)]       # exactly one shard
+        assert P._exchange_hops(3, 2) == [(1, 2), (2, 1)]
+        assert P._exchange_hops(5, 2) == [(1, 2), (2, 2), (3, 1)]
+        assert P._exchange_hops(2, 1) == [(1, 1), (2, 1)]
+        assert sum(t for _, t in P._exchange_hops(5, 2)) == 5
+
+    @pytest.mark.parametrize("nranks,loc,width", [
+        (2, 4, 1), (2, 4, 3), (4, 2, 2),
+        (4, 1, 2),            # thin pencil: 2 hops
+        (3, 2, 5),            # width > 2 shards: 3 hops
+        (8, 1, 4),            # maximal decomposition
+    ])
+    def test_exchange_matches_global_reference(self, nranks, loc, width,
+                                               rng):
+        """Enumerated fallback for the hypothesis property: the exchanged
+        shard equals the wrap-indexed global array for every hop count —
+        ghost planes concatenate in global-coordinate order."""
+        glob = nranks * loc
+        g = rng.normal(size=(2, glob)).astype(np.float32)
+        shards = jnp.asarray(
+            np.stack([g[:, i * loc:(i + 1) * loc] for i in range(nranks)]))
+        got = np.asarray(_fake_exchange(shards, 0, width))
+        assert got.shape == (nranks, 2, loc + 2 * width)
+        for i in range(nranks):
+            want = g[:, np.arange(i * loc - width,
+                                  (i + 1) * loc + width) % glob]
+            np.testing.assert_array_equal(got[i], want)
+
+    def test_exchange_2d_shard_any_dim(self, rng):
+        """Same reference check when the exchanged dim is not dim 0."""
+        nranks, loc = 4, 2
+        g = rng.normal(size=(1, 3, nranks * loc)).astype(np.float32)
+        shards = jnp.asarray(np.stack(
+            [g[:, :, i * loc:(i + 1) * loc] for i in range(nranks)]))
+        got = np.asarray(_fake_exchange(shards, 1, 3))   # 2 hops
+        for i in range(nranks):
+            want = g[:, :, np.arange(i * loc - 3,
+                                     (i + 1) * loc + 3) % (nranks * loc)]
+            np.testing.assert_array_equal(got[i], want)
+
+    @pytest.mark.parametrize("local,W,shard_dims", [
+        ((8, 8, 16), (1, 1, 0), (0, 1)),
+        ((8, 8, 16), (2, 2, 0), (0, 1)),
+        ((4, 4, 4), (1, 1, 1), (0, 1, 2)),
+        ((8, 4, 8), (2, 0, 0), (0, 1)),      # dim 1 unexchanged
+        ((6, 8), (2, 1), (0, 1)),
+    ])
+    def test_overlap_regions_tile_exactly_once(self, local, W, shard_dims):
+        """Interior + boundary slabs partition the local domain: every
+        site covered exactly once (corners belong to the lowest exchanged
+        dim's slabs)."""
+        P = self._prog_module()
+        (i_start, i_shape), bounds = P._overlap_regions(local, W,
+                                                        shard_dims)
+        cover = np.zeros(local, np.int32)
+
+        def mark(start, shape):
+            cover[tuple(slice(s, s + n) for s, n in zip(start, shape))] += 1
+
+        mark(i_start, i_shape)
+        for d, lo, hi in bounds:
+            mark(*lo)
+            mark(*hi)
+        assert (cover == 1).all()
+        # interior sits W away from every exchanged face
+        for d in shard_dims:
+            if W[d]:
+                assert i_start[d] == W[d]
+                assert i_shape[d] == local[d] - 2 * W[d]
+
+    def test_exchange_stats_arithmetic(self):
+        P = self._prog_module()
+        cs = P.exchange_stats({"f": (1, 1, 0), "g": (2, 2, 0)},
+                              {"f": 19, "g": 19}, (8, 8, 16), (0, 1))
+        f = cs["per_field"]["f"]
+        # dim 0: 2*1*(8*16) planes; dim 1 spans the dim-0-extended
+        # extent: 2*1*(10*16)
+        assert f["bytes"] == (2 * 8 * 16 + 2 * 10 * 16) * 19 * 4
+        assert f["ppermutes"] == 4
+        g = cs["per_field"]["g"]
+        assert g["bytes"] == (2 * 2 * 8 * 16 + 2 * 2 * 12 * 16) * 19 * 4
+        assert cs["exchanged_bytes_per_step"] == f["bytes"] + g["bytes"]
+        assert cs["ppermutes_per_step"] == 8
+        # a thin dim multiplies ppermutes (multi-hop), not bytes
+        th = P.exchange_stats({"g": (2,)}, {"g": 1}, (1,), (0,))
+        assert th["per_field"]["g"]["ppermutes"] == 2 * 2
+        assert th["per_field"]["g"]["bytes"] == 2 * 2 * 1 * 4
+
+    # -- compile-time validation (the bugfix sweep) ------------------------
+
+    def consts(self):
+        return lbp.collision_consts(**PARAMS.as_kwargs())
+
+    class _Mesh2x2:
+        shape = {"px": 2, "py": 2}
+
+    def test_pencil_divisibility_error_names_dim_and_axis(self):
+        with pytest.raises(ValueError, match=r"Y extent 9 not divisible "
+                                             r"by mesh axis py=2"):
+            lbp.fused_program("one_launch", self.consts()).compile(
+                "xla", grid_shape=(8, 9, 8), mesh=self._Mesh2x2(),
+                shard_axis=("px", "py"))
+
+    def test_pencil_unknown_and_duplicate_axes(self):
+        prog = lbp.fused_program("one_launch", self.consts())
+        with pytest.raises(ValueError, match="not a mesh axis"):
+            prog.compile("xla", grid_shape=(8, 8, 8), mesh=self._Mesh2x2(),
+                         shard_axis=("px", "pz"))
+        with pytest.raises(ValueError, match="duplicate shard axes"):
+            prog.compile("xla", grid_shape=(8, 8, 8), mesh=self._Mesh2x2(),
+                         shard_axis=("px", "px"))
+        with pytest.raises(ValueError, match="at most 2"):
+            prog.compile("xla", grid_shape=(8, 8), mesh=self._Mesh2x2(),
+                         shard_axis=("px", "py", "px2"))
+
+    def test_pencil_width_vs_global_extent_any_dim(self):
+        """The slab-era width check now runs per sharded dim: a dim-1
+        global extent the schedule cannot fit fails at compile."""
+        with pytest.raises(ValueError, match="ghost exchange in dim 1"):
+            lbp.fused_program("one_launch", self.consts()).compile(
+                "xla", grid_shape=(8, 2, 8), mesh=self._Mesh2x2(),
+                shard_axis=("px", "py"))
+
+    def test_closed_dim_thinner_than_radius_fails_at_compile(self):
+        """An *unsharded* stencil-read dim wraps periodically inside each
+        launch — a radius-2 schedule meeting an extent-1 closed dim must
+        fail at compile with the decomposition named, not deep inside
+        lax.scan."""
+        prog = lbp.fused_program("one_launch", self.consts())
+
+        class Slab:
+            shape = {"data": 2}
+        with pytest.raises(ValueError,
+                           match=r"unsharded \(periodic\) extent 1"):
+            prog.compile("xla", grid_shape=(8, 8, 1), mesh=Slab(),
+                         shard_axis="data")
+        # unsharded compiles hit the same guard
+        with pytest.raises(ValueError, match="shard dim 2 with a mesh"):
+            prog.compile("xla", grid_shape=(8, 8, 1))
+
+    def test_halo_extend_wrap_thinner_than_radius(self):
+        """Satellite pin for the halo_extend bugfix: the periodic path
+        refuses a wrap wider than one period, naming dim/radius/extent."""
+        from repro.core import halo_extend
+        from repro.lb.stencil import FUSED_SPEC
+        stc = max((s for s in FUSED_SPEC.stencils if s is not None),
+                  key=lambda s: max(s.radius_per_dim()))
+        assert max(stc.radius_per_dim()) == 2
+        x = jnp.ones((1, 8 * 8 * 1), jnp.float32)
+        with pytest.raises(ValueError, match="radius 2 in dim 2 exceeds "
+                                             "the periodic extent 1"):
+            halo_extend(x, (8, 8, 1), (0, 0, 0), stc)
+        # and the launch-level guard fires before tracing
+        with pytest.raises(ValueError, match="cannot wrap-pad"):
+            tdp.launch_plan(lbst.FUSED_SPEC, WINDOWED,
+                            lattice=Lattice((8, 8, 1)))
+
+
 class TestProgramPlan:
     """Program.plan aggregates the PR 3 memory models across stages."""
 

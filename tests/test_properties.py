@@ -72,6 +72,54 @@ class TestTdpProperties:
         np.testing.assert_allclose(a.data, f.data, rtol=1e-6)
 
 
+class TestExchangeProperties:
+    """The generalized ghost exchange (repro/core/program.py) against a
+    wrap-indexed global reference — any dim, any hop count, widths wider
+    than the pencil thickness.  The enumerated fallback (same machinery,
+    fixed cases) runs without hypothesis in
+    test_program.py::TestPencilExchange."""
+
+    @SET
+    @given(st.integers(2, 6),            # nranks
+           st.integers(1, 4),            # local extent (1 = thin pencil)
+           st.integers(1, 7),            # requested width
+           st.integers(1, 3),            # ncomp
+           st.integers(0, 1))            # which grid dim is exchanged
+    def test_exchange_matches_wrap_indexed_global(self, nranks, loc,
+                                                  width, ncomp, dim):
+        import importlib
+        P = importlib.import_module("repro.core.program")
+        glob = nranks * loc
+        width = min(width, glob - 1)     # the compile-time width bound
+        other = 3                        # extent of the unexchanged dim
+        shape = (ncomp, other, glob) if dim == 1 else (ncomp, glob, other)
+        rng = np.random.default_rng(nranks * 100 + loc * 10 + width)
+        g = rng.normal(size=shape).astype(np.float32)
+        ax = dim + 1
+        shards = jnp.asarray(np.stack(
+            [np.take(g, np.arange(i * loc, (i + 1) * loc), axis=ax)
+             for i in range(nranks)]))
+
+        def permute(x, pairs):
+            idx = np.zeros(nranks, int)
+            for src, dst in pairs:
+                idx[dst] = src
+            return x[jnp.asarray(idx)]
+
+        # shard dim d is axis d+2 of the stack; exchange_ghosts slices
+        # axis dim+1, so shift dim past the rank axis
+        got = np.asarray(P.exchange_ghosts(shards, dim + 1, width,
+                                           nranks, permute))
+        hops = P._exchange_hops(width, loc)
+        assert hops[-1][0] == -(-width // loc)
+        assert sum(t for _, t in hops) == width
+        for i in range(nranks):
+            want = np.take(g, np.arange(i * loc - width,
+                                        (i + 1) * loc + width) % glob,
+                           axis=ax)
+            np.testing.assert_array_equal(got[i], want)
+
+
 class TestAutotuneProperties:
     """Invariants of ``tdp.autotune``'s space construction
     (repro/core/autotune.py)."""
