@@ -8,7 +8,7 @@ regressed by more than the threshold (default 15%).
 
 Two variants match only when their full identity agrees — bench name,
 grid, variant key, executor, and tuning-bearing fields (``vvl``,
-``mesh``, ``scan_length``); anything else (a regridded bench, a renamed
+``mesh``, ``scan_length``, ``batch``); anything else (a regridded bench, a renamed
 variant, a retuned sweep point) is reported as *unmatched* and never
 gates.  Medians below ``--min-seconds`` are noise on a shared CI host
 and are skipped.
@@ -32,7 +32,7 @@ import sys
 
 #: record fields that are part of a variant's identity (tuning and
 #: shape), not of its measurement — a mismatch means "not comparable".
-_IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length")
+_IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length", "batch")
 
 #: measurement field preference: run.py's program benches write
 #: ``median_s`` (and ``t_s`` aliases it); older records only ``t_s``.

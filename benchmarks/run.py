@@ -594,6 +594,64 @@ def bench_grad(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# fleet — batched ensemble throughput (steps/sec/device vs batch)
+# ---------------------------------------------------------------------------
+
+def bench_fleet(quick=False):
+    """Ensemble-execution throughput: one fused LB step graph vmapped
+    over batch ∈ {1, 8, 64} (``CompiledProgram.vmap`` — the tdp.fleet
+    layer).  The figure of merit is member steps/sec/device.
+
+    On this single-core CPU container the per-member arithmetic cost is
+    strictly linear in batch, so the measurable fleet win is the *fixed*
+    per-launch cost (host dispatch + XLA prologue) amortised over the
+    ensemble — which dominates at service-sized member grids, hence the
+    small default lattice.  On a real accelerator the same curve also
+    captures idle-parallelism recovery (small members underfill the
+    chip), so throughput/device rises with batch until bandwidth
+    saturates."""
+    from repro import tdp
+    from repro.lb.params import LBParams
+    from repro.lb.sim import BinaryFluidSim
+
+    grid = _grid((4, 4, 4))
+    n = int(np.prod(grid))
+    ndev = jax.device_count()
+    p = LBParams(A=0.125, B=0.125, kappa=0.02)
+    sim = BinaryFluidSim(grid, params=p, fused="two_launch")
+    fused = sim.programs["fused"]
+    st = sim.init_spinodal(seed=0, noise=0.05)
+    ws = sim.programs["collide"].step({"f": st.f, "g": st.g})
+
+    K = 1           # member steps per timed fleet launch
+    batches = (1, 8) if quick else (1, 8, 64)
+    rows, rec = [], {"grid": list(grid), "scan_length": K,
+                     "devices": ndev, "variants": {}}
+    for b in batches:
+        fleet = fused.vmap(b)
+        state = tdp.ProgramState.stack([ws] * b)
+        ts = _time_stats(lambda s: fleet.run(s, K), state,
+                         reps=REPS_OVERRIDE or 15, warmup=2)
+        t = ts["median_s"]
+        sps_dev = b * K / t / ndev
+        rec["variants"][f"batch{b}"] = {
+            **ts, "executor": "xla", "batch": b, "scan_length": K,
+            "steps_per_s_per_device": sps_dev,
+            "msites_per_s": b * K * n / t / 1e6,
+        }
+        rows.append((b, f"{t*1e3:.2f}", f"{sps_dev:.1f}",
+                     f"{b*K*n/t/1e6:.2f}",
+                     f"{rec['variants'][f'batch{b}']['steps_per_s_per_device'] / rec['variants']['batch1']['steps_per_s_per_device']:.2f}×"))
+    RESULTS["fleet"] = rec
+    BENCH_RECORDS["fleet"] = rec
+    return _table(
+        f"Fleet ensemble throughput (fused_two, {grid} lattice, "
+        f"{K}-step scans, {ndev} device(s))",
+        rows, ["batch", "ms/launch", "member steps/s/device", "Msites/s",
+               "throughput/device vs batch=1"])
+
+
+# ---------------------------------------------------------------------------
 # LM pointwise family through tdp backends
 # ---------------------------------------------------------------------------
 
@@ -641,6 +699,7 @@ BENCHES = {
     "fused_step": bench_fused_step,
     "stream": bench_stream,
     "grad": bench_grad,
+    "fleet": bench_fleet,
     "lm_step": bench_lm_step,
 }
 

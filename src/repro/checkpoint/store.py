@@ -54,6 +54,28 @@ def _tree_paths(tree):
     return keys, leaves, treedef
 
 
+# Leaves that are plain python values (a step counter, a bucket id, a
+# flag) round-trip through the manifest itself ("py" entries) instead of
+# .npy files: np.asarray would turn a str into a numpy 'U' array (whose
+# dtype name resolves through neither np.sctypeDict nor ml_dtypes on
+# restore) and an int into a 0-d array (restored as a jax scalar — a
+# type infidelity for metadata like fleet ticket step counters).
+_PY_LEAF_TYPES = (str, bool, int, float)
+
+
+def _is_py_leaf(leaf: Any) -> bool:
+    return isinstance(leaf, _PY_LEAF_TYPES) and not isinstance(
+        leaf, np.generic)
+
+
+def _to_host(leaf: Any):
+    """Host snapshot of one leaf: arrays device_get, python scalars and
+    strings pass through untouched (type-faithful round-trip)."""
+    if _is_py_leaf(leaf):
+        return leaf
+    return np.asarray(jax.device_get(leaf))
+
+
 def _sha256(path: str) -> str:
     h = hashlib.sha256()
     with open(path, "rb") as f:
@@ -70,7 +92,7 @@ def save_checkpoint(root: str, step: int, tree, *, extra: dict | None = None,
                     nshards: int = 4) -> str:
     """Synchronous atomic save.  Returns the final directory path."""
     keys, leaves, treedef = _tree_paths(tree)
-    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    host_leaves = [_to_host(l) for l in leaves]
 
     final = _step_dir(root, step)
     tmp = final + ".tmp"
@@ -81,6 +103,10 @@ def save_checkpoint(root: str, step: int, tree, *, extra: dict | None = None,
     entries = []
     fid = 0
     for key, arr in zip(keys, host_leaves):
+        if _is_py_leaf(arr):
+            entries.append({"key": key, "py": arr,
+                            "pytype": type(arr).__name__, "files": []})
+            continue
         # non-native dtypes (bfloat16, fp8, ...) are stored as raw bytes;
         # the manifest keeps the true dtype for reconstruction
         raw = arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict
@@ -129,7 +155,7 @@ def verify_checkpoint(path: str) -> bool:
     except (OSError, json.JSONDecodeError):
         return False
     for e in man["leaves"]:
-        for fl in e["files"]:
+        for fl in e.get("files", []):
             fp = os.path.join(path, fl["file"])
             if not os.path.exists(fp) or _sha256(fp) != fl["sha256"]:
                 return False
@@ -174,6 +200,11 @@ def restore_checkpoint(root: str, tree_like, *, step: Optional[int] = None,
         e = by_key.get(key)
         if e is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
+        if "py" in e:
+            # python-scalar/str leaf: the manifest IS the storage; JSON
+            # already preserves str/bool/int/float exactly
+            out.append(e["py"])
+            continue
         parts = [np.load(os.path.join(path, fl["file"])) for fl in e["files"]]
         arr = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
         if e.get("raw"):
@@ -219,7 +250,7 @@ class CheckpointManager:
              blocking: bool = False):
         self.wait()
         keys, leaves, treedef = _tree_paths(tree)
-        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        host = [_to_host(l) for l in leaves]
         snapshot = treedef.unflatten(host)
 
         def work():

@@ -30,6 +30,7 @@ from .lattice import (
 )
 from .field import Field, field_like
 from .memory import (
+    BatchedConst,
     TargetConst,
     copy_constant_to_target,
     copy_from_target,
@@ -72,6 +73,8 @@ from .program import (
     program,
     stage,
 )
+from .state import ProgramState, validate_field
+from .fleet import FleetDriver, FleetProgram, Ticket
 from .autotune import (
     Candidate,
     TuneReport,
@@ -108,6 +111,9 @@ __all__ = [
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
     "exchange_ghosts", "exchange_stats",
     "stage",
+    # fleets (ensemble execution + async service)
+    "BatchedConst", "ProgramState", "validate_field",
+    "FleetProgram", "FleetDriver", "Ticket",
     # autotuning
     "autotune", "default_space", "plane_block_candidates",
     "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",

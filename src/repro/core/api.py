@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from .lattice import Lattice, Stencil
-from .memory import TargetConst
+from .memory import BatchedConst, TargetConst
 from .registry import (
     get_executor_entry,
     register_executor,
@@ -156,6 +156,30 @@ def _consts_cache_key(consts: Mapping[str, object]):
     return tuple(items)
 
 
+def _split_consts(consts: Mapping[str, object]):
+    """Partition launch consts into *static* values (hashable — closed
+    over at jit time, in the plan cache key by content) and *dynamic*
+    ones (jax arrays / tracers — per-call operands threaded into the
+    jitted launch as trailing arguments; the cache key carries only
+    their ``(name, shape, dtype)`` signature).  Dynamic consts are how
+    per-member fleet parameters (``BatchedConst`` sweeps vmapped over an
+    ensemble axis) flow through the shared plan cache without ever
+    leaking a tracer into it."""
+    static, dyn = {}, {}
+    for k, v in consts.items():
+        if isinstance(v, BatchedConst):
+            raise ValueError(
+                f"const {k!r} is a BatchedConst (per-member ensemble "
+                f"sweep); a bare launch has no ensemble axis — bind it "
+                f"through a Program stage and compile a fleet with "
+                f"CompiledProgram.vmap(batch) (tdp.fleet)")
+        if isinstance(v, jax.Array):
+            dyn[k] = v
+        else:
+            static[k] = v
+    return static, dyn
+
+
 def _normalize_halo(halo, ndim) -> tuple[int, ...]:
     if halo is None:
         return (0,) * ndim
@@ -210,6 +234,16 @@ class LaunchPlan:
         self.field_ncomp = (tuple(field_ncomp)
                             if field_ncomp is not None else None)
         self.wants = wants
+
+    def with_consts(self, consts: Mapping[str, object]) -> "LaunchPlan":
+        """Shallow copy with ``consts`` replaced — the per-call plan the
+        dynamic-const path hands to the executor (same kernel, geometry
+        and tuning; traced const values merged in)."""
+        p = LaunchPlan.__new__(LaunchPlan)
+        for s in LaunchPlan.__slots__:
+            setattr(p, s, getattr(self, s))
+        p.consts = dict(consts)
+        return p
 
     # -- memory models ----------------------------------------------------
     #
@@ -415,8 +449,10 @@ def _make_plan(spec: KernelSpec, target: Target, vvl: int,
 @functools.lru_cache(maxsize=4096)
 def _build_plan(spec: KernelSpec, target: Target, vvl: int,
                 out_ncomp: tuple[int, ...], lattice: Lattice | None,
-                halo: tuple[int, ...] | None, const_key, _registry_version):
+                halo: tuple[int, ...] | None, const_key, dyn_sig,
+                _registry_version):
     consts = _unwrap_consts(dict(const_key))
+    dyn_names = tuple(k for k, _, _ in dyn_sig)
     entry = get_executor_entry(target.executor)
     executor = entry.fn
     plan = _make_plan(spec, target, vvl, out_ncomp, lattice, halo, consts,
@@ -424,6 +460,7 @@ def _build_plan(spec: KernelSpec, target: Target, vvl: int,
     stencils = spec.stencils
     shape = lattice.shape if lattice is not None else None
     n_out = len(out_ncomp)
+    nf = len(spec.fields)
 
     if entry.wants == "halo_extended":
         # Capability-aware prologue: pad each stencil field once instead
@@ -434,9 +471,15 @@ def _build_plan(spec: KernelSpec, target: Target, vvl: int,
         def prepare(x, s):
             return x if s is None else gather_neighbors(x, shape, halo, s)
 
-    def run(*arrays):
+    def run(*args):
+        # trailing args past the declared fields are dynamic const values
+        arrays, dvals = args[:nf], args[nf:]
+        p = plan
+        if dyn_names:
+            p = plan.with_consts({**plan.consts,
+                                  **dict(zip(dyn_names, dvals))})
         prepared = tuple(prepare(x, s) for x, s in zip(arrays, stencils))
-        outs = executor(plan, prepared)
+        outs = executor(p, prepared)
         outs = (outs,) if not isinstance(outs, (tuple, list)) else tuple(outs)
         if len(outs) != n_out:
             raise ValueError(
@@ -506,10 +549,14 @@ def launch(spec: KernelSpec, target: Target | str | None = None, /,
         _validate_wrap_extents(spec, lattice, h)
     vvl = tgt.resolve_vvl()
     out_ncomp = spec.out if spec.out is not None else (int(arrays[0].shape[0]),)
-    key = _consts_cache_key(all_consts)
-    fn = _build_plan(spec, tgt, vvl, out_ncomp, lattice, h, key,
+    static_consts, dyn_consts = _split_consts(all_consts)
+    key = _consts_cache_key(static_consts)
+    dyn_names = tuple(sorted(dyn_consts))
+    dyn_sig = tuple((k, tuple(int(s) for s in dyn_consts[k].shape),
+                     str(dyn_consts[k].dtype)) for k in dyn_names)
+    fn = _build_plan(spec, tgt, vvl, out_ncomp, lattice, h, key, dyn_sig,
                      registry_version())
-    return fn(*arrays)
+    return fn(*arrays, *(dyn_consts[k] for k in dyn_names))
 
 
 def launch_plan(spec: KernelSpec, target: Target | str | None = None, *,

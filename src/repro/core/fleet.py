@@ -1,0 +1,777 @@
+"""``tdp.fleet`` — batched ensemble execution of Programs behind an
+async simulation service.
+
+The targetDP layers below this one run *one* lattice simulation well;
+the ROADMAP north star wants *throughput* — many independent
+trajectories (parameter sweeps, per-user simulations) per device.  Every
+:class:`~repro.core.program.CompiledProgram` step is a pure pytree
+function, so ``vmap`` lifts it over a leading **ensemble axis** for
+free, and members never interact — a fleet trajectory is bit-identical
+to running its members one by one.  Three layers:
+
+1. **Ensemble execution** — :class:`FleetProgram` (built by
+   ``compiled.vmap(batch)``): the compiled core vmapped over axis 0 of
+   every field.  State is a :class:`~repro.core.state.ProgramState` with
+   ``ensemble=batch`` (plain mappings of pre-stacked arrays work too).
+   Per-member parameters (mobility/viscosity sweeps) are
+   :class:`~repro.core.memory.BatchedConst` stage bindings — their
+   values thread through the launch machinery as *dynamic* consts, so
+   one jitted fleet step serves the whole sweep.  Sharded compiles
+   compose the vmap **outside** ``shard_map``: a decomposed fleet still
+   runs one halo-exchange round per step.
+2. **The async service driver** — :class:`FleetDriver`:
+   ``submit(program, params, nsteps) -> ticket`` / ``poll`` /
+   ``stream(ticket, every=k)`` / ``drain()``.  Pending requests batch
+   into grid-shape **buckets**; each bucket owns one ``FleetProgram``
+   (one jit for all its members) and a launch loop fills slots, steps
+   the fleet, and scatters results back per ticket — the
+   ``examples/serve_lm.py`` prefill/decode request loop, for lattices.
+   A submitted grid outside the configured buckets warns **once** and
+   falls back to per-member execution instead of silently compiling a
+   fresh jit per request.
+3. **Durability** — in-flight trajectories checkpoint through
+   :mod:`repro.checkpoint.store` (atomic, checksummed, async): member
+   states plus ticket metadata (step counter, RNG key, bucket id).  A
+   killed driver :meth:`FleetDriver.restore`\\ s every ticket at its
+   last saved step; deterministic stepping makes the resumed trajectory
+   match an uninterrupted run bit-for-bit.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import warnings
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .memory import BatchedConst, TargetConst
+from .program import CompiledProgram, Program, Stage
+from .state import ProgramState, validate_field
+from .target import Target, as_target
+
+
+__all__ = ["FleetProgram", "FleetDriver", "Ticket"]
+
+
+# ---------------------------------------------------------------------------
+# layer 1 — the vmapped ensemble step
+# ---------------------------------------------------------------------------
+
+class FleetProgram:
+    """``batch`` independent trajectories of one compiled Program,
+    stepped by a single jitted launch (``jax.vmap`` of the compiled
+    core over a leading ensemble axis).
+
+    Build with :meth:`CompiledProgram.vmap`::
+
+        fleet = prog.compile(target, grid_shape=(16,) * 3).vmap(8)
+        state = ProgramState.stack([member0, member1, ...])   # ensemble=8
+        state = fleet.run(state, 100)
+
+    Per-member consts: stages binding a :class:`BatchedConst` receive
+    member *i*'s row in member *i*'s trajectory.  The baked sweep is the
+    default; ``step``/``run`` accept a ``consts=`` mapping overriding
+    any batched const with a fresh ``(batch, ...)`` array (the driver's
+    slot values) without recompiling.
+    """
+
+    def __init__(self, compiled: CompiledProgram, batch: int):
+        if not isinstance(compiled, CompiledProgram):
+            raise TypeError(f"FleetProgram wraps a CompiledProgram, got "
+                            f"{type(compiled).__name__}")
+        self.compiled = compiled
+        self.batch = int(batch)
+        if self.batch < 1:
+            raise ValueError(f"fleet batch must be >= 1, got {batch}")
+        self.program = compiled.program
+        self.grid_shape = compiled.grid_shape
+        for name, bc in compiled.batched_consts.items():
+            if bc.batch != self.batch:
+                raise ValueError(
+                    f"program {self.program.name!r}: batched const "
+                    f"{name!r} sweeps {bc.batch} member value(s) but the "
+                    f"fleet batch is {self.batch}; the ensemble extents "
+                    f"must agree")
+        self._defaults = {k: jnp.asarray(bc.value)
+                          for k, bc in compiled.batched_consts.items()}
+        # vmap over axis 0 of every field array and every dynamic const
+        self._vcore = jax.vmap(compiled._core)
+        self._jit_step = jax.jit(self._vcore)
+        self._run_cache: dict = {}
+
+    # -- state plumbing ----------------------------------------------------
+
+    def _as_tuple(self, state: Mapping[str, jax.Array]):
+        if isinstance(state, ProgramState):
+            if state.ensemble is None:
+                raise ValueError(
+                    f"fleet state for program {self.program.name!r} "
+                    f"must carry an ensemble axis; got a single-member "
+                    f"ProgramState — build one with ProgramState.stack "
+                    f"or ProgramState(arrays, ensemble={self.batch})")
+            if state.ensemble != self.batch:
+                raise ValueError(
+                    f"fleet state ensemble extent {state.ensemble} != "
+                    f"fleet batch {self.batch} "
+                    f"(program {self.program.name!r})")
+        arrays = []
+        for f in self.program.fields:
+            if f not in state:
+                raise ValueError(
+                    f"fleet state for program {self.program.name!r} is "
+                    f"missing field {f!r}; present: {sorted(state)}")
+            a = state[f]
+            validate_field(f, a, ncomp=self.program.ncomp.get(f),
+                           grid_shape=self.grid_shape,
+                           ensemble=self.batch,
+                           program=self.program.name)
+            arrays.append(a)
+        return tuple(arrays)
+
+    def _wrap(self, state, outs):
+        out = dict(zip(self.program.fields, outs))
+        if isinstance(state, ProgramState):
+            return ProgramState(out, ensemble=self.batch)
+        return out
+
+    def _dyn_values(self, consts: Mapping[str, Any] | None):
+        names = self.compiled.dyn_names
+        over = dict(consts or {})
+        unknown = sorted(set(over) - set(names))
+        if unknown:
+            raise ValueError(
+                f"program {self.program.name!r} binds no batched "
+                f"const(s) {unknown}; batched: {list(names)}")
+        vals = []
+        for k in names:
+            v = jnp.asarray(over[k]) if k in over else self._defaults[k]
+            if v.ndim < 1 or int(v.shape[0]) != self.batch:
+                raise ValueError(
+                    f"batched const {k!r}: leading (ensemble) extent is "
+                    f"{v.shape[0] if v.ndim else '(scalar)'}, expected "
+                    f"the fleet batch {self.batch}")
+            vals.append(v)
+        return tuple(vals)
+
+    # -- stepping ----------------------------------------------------------
+
+    def stack(self, states: Sequence[Mapping[str, jax.Array]]
+              ) -> ProgramState:
+        """Stack ``batch`` single-member states into fleet state."""
+        states = list(states)
+        if len(states) != self.batch:
+            raise ValueError(f"need exactly {self.batch} member state(s) "
+                             f"to fill the fleet, got {len(states)}")
+        return ProgramState.stack(states)
+
+    def step(self, state, *, consts: Mapping[str, Any] | None = None):
+        """One fleet step: every member advances one program step."""
+        outs = self._jit_step(*self._as_tuple(state),
+                              *self._dyn_values(consts))
+        return self._wrap(state, outs)
+
+    def run(self, state, nsteps: int, *,
+            consts: Mapping[str, Any] | None = None,
+            donate: bool = False):
+        """``nsteps`` fleet steps under one jitted ``lax.scan``
+        (``donate=True`` ping-pongs the ensemble field buffers).
+        Compiled once per ``(nsteps, donate)``; const overrides are
+        traced operands, so fresh sweep values never recompile."""
+        if nsteps <= 0:
+            return self._wrap(state, tuple(state[f]
+                                           for f in self.program.fields))
+        key = (int(nsteps), bool(donate))
+        fn = self._run_cache.get(key)
+        if fn is None:
+            vcore, n = self._vcore, int(nsteps)
+
+            def many(arrays, dvals):
+                def body(carry, _):
+                    return vcore(*carry, *dvals), None
+                out, _ = jax.lax.scan(body, arrays, None, length=n)
+                return out
+
+            fn = jax.jit(many, donate_argnums=(0,) if donate else ())
+            self._run_cache[key] = fn
+        outs = fn(self._as_tuple(state), self._dyn_values(consts))
+        return self._wrap(state, outs)
+
+    # -- introspection -----------------------------------------------------
+
+    def plan(self):
+        """The per-member :class:`ProgramPlan` (multiply HBM by
+        ``batch`` for the fleet footprint)."""
+        return self.compiled.plan()
+
+    def comm_stats(self, itemsize: int = 4) -> dict:
+        """Per-member exchange budget; the vmap sits outside
+        ``shard_map``, so per-device bytes scale by ``batch`` while the
+        ppermute *count* per fleet step stays the single-member count."""
+        return self.compiled.comm_stats(itemsize)
+
+    def __repr__(self):
+        return (f"FleetProgram({self.program.name!r}, "
+                f"batch={self.batch}, grid={self.grid_shape}, "
+                f"sharded={self.compiled.mesh is not None})")
+
+
+# ---------------------------------------------------------------------------
+# layer 2 — the service driver
+# ---------------------------------------------------------------------------
+
+class Ticket:
+    """Handle for one submitted trajectory (see
+    :meth:`FleetDriver.submit`)."""
+
+    __slots__ = ("id", "program_name", "nsteps", "step", "grid_shape",
+                 "consts", "rng", "bucket_id", "done", "_state", "_slot",
+                 "_bucket", "_solo", "_stream_every", "_snapshots")
+
+    def __init__(self, tid: str, program_name: str, nsteps: int,
+                 grid_shape: tuple[int, ...], state: dict, consts: dict,
+                 rng, step: int = 0):
+        self.id = tid
+        self.program_name = program_name
+        self.nsteps = int(nsteps)
+        self.step = int(step)
+        self.grid_shape = grid_shape
+        self.consts = dict(consts)
+        self.rng = rng
+        self.bucket_id = ""          # assigned on placement ("" = solo)
+        self.done = False
+        self._state = state          # latest member state (dict f -> arr)
+        self._slot: int | None = None
+        self._bucket = None
+        self._solo: CompiledProgram | None = None
+        self._stream_every: int | None = None
+        self._snapshots: collections.deque = collections.deque()
+
+    def __repr__(self):
+        return (f"Ticket({self.id!r}, step={self.step}/{self.nsteps}, "
+                f"done={self.done})")
+
+
+class _Bucket:
+    """One (program, grid, const-signature) equivalence class: a shared
+    :class:`FleetProgram` plus slot bookkeeping."""
+
+    __slots__ = ("key", "label", "fleet", "slots", "pending", "state",
+                 "const_rows", "dyn_names")
+
+    def __init__(self, key, label: str, fleet: FleetProgram,
+                 const_shapes: dict):
+        self.key = key
+        self.label = label
+        self.fleet = fleet
+        self.slots: list[Ticket | None] = [None] * fleet.batch
+        self.pending: collections.deque = collections.deque()
+        self.state: dict | None = None     # f -> (B, ncomp, *grid)
+        self.dyn_names = fleet.compiled.dyn_names
+        # host-side per-slot const rows, mutated on placement
+        self.const_rows = {
+            k: np.zeros((fleet.batch,) + shape, dtype)
+            for k, (shape, dtype) in const_shapes.items()}
+
+    def free_slot(self) -> int | None:
+        for i, t in enumerate(self.slots):
+            if t is None:
+                return i
+        return None
+
+    def active(self):
+        return [(i, t) for i, t in enumerate(self.slots)
+                if t is not None and not t.done]
+
+
+def _override_consts(program: Program, overrides: Mapping[str, Any]
+                     ) -> Program:
+    """Rebuild ``program`` with const ``name`` rebound to ``value`` in
+    every stage that binds it (the driver's sweep-substitution: a
+    ``BatchedConst`` placeholder for bucket compiles, a ``TargetConst``
+    for solo fallbacks)."""
+    if not overrides:
+        return program
+    bound: set[str] = set()
+    stages = []
+    for st in program.stages:
+        cd = st.consts_dict()
+        hit = False
+        for k, v in overrides.items():
+            if k in cd:
+                cd[k] = v
+                bound.add(k)
+                hit = True
+        stages.append(Stage(st.spec, st.reads, st.writes, consts=tuple(
+            sorted(cd.items())), name=st.name) if hit else st)
+    missing = sorted(set(overrides) - bound)
+    if missing:
+        raise ValueError(
+            f"program {program.name!r}: no stage binds const(s) "
+            f"{missing} — submitted params['consts'] must name consts "
+            f"the program's stages already bind")
+    return Program(program.name, stages, fields=program.fields,
+                   intermediates=program.intermediates)
+
+
+def _program_digest(program: Program) -> str:
+    from .autotune import _subject_digest
+    return _subject_digest(program)[1]
+
+
+class FleetDriver:
+    """The async simulation service: submit trajectories, poll/stream
+    progress, drain results — requests batched into fleet steps.
+
+    Args:
+      target: the :class:`Target` every bucket compiles under.
+      batch: slots per bucket (the fleet/ensemble extent).
+      grid_shapes: optional whitelist of bucketable grid shapes.  When
+        given, a submitted grid outside it warns **once** (per driver
+        and grid) and runs solo (per-member ``CompiledProgram``) instead
+        of minting a fresh fleet jit; when ``None`` (default) every new
+        grid opens a bucket.
+      steps_per_launch: member steps per fleet launch (request-batching
+        granularity; streams and completions stay exact — a launch never
+        overshoots a ticket's ``nsteps`` or stream mark).
+      checkpoint_dir / checkpoint_every: durability — every
+        ``checkpoint_every`` pump rounds the driver snapshots all
+        in-flight tickets through :class:`repro.checkpoint.store.
+        CheckpointManager` (atomic + checksummed, written off-thread).
+      mesh / shard_axis / overlap: forwarded to ``Program.compile`` —
+        buckets of decomposed fleets (vmap outside ``shard_map``).
+
+    Lifecycle: ``submit`` places tickets; stepping happens inside
+    :meth:`pump` — called inline by :meth:`drain`/:meth:`stream`, or
+    continuously from the background thread :meth:`start`\\ s.
+    """
+
+    def __init__(self, target: Target | str | None = None, *,
+                 batch: int = 8,
+                 grid_shapes: Sequence[Sequence[int]] | None = None,
+                 steps_per_launch: int = 1,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int | None = None,
+                 mesh=None, shard_axis=None, overlap=None):
+        self.target = as_target(target)
+        self.batch = int(batch)
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.grid_shapes = (None if grid_shapes is None else
+                            {tuple(int(s) for s in g) for g in grid_shapes})
+        self.steps_per_launch = max(1, int(steps_per_launch))
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self._mesh, self._shard_axis, self._overlap = mesh, shard_axis, \
+            overlap
+        self._buckets: dict = {}
+        self._solo_cache: dict = {}
+        self._solo_active: list[Ticket] = []
+        self._tickets: dict[str, Ticket] = {}
+        self._programs: dict[str, Program] = {}
+        self._counter = 0
+        self._pumps = 0
+        self._warned_grids: set = set()
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._ckpt = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint.store import CheckpointManager
+            self._ckpt = CheckpointManager(checkpoint_dir)
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, program: Program, params: Mapping[str, Any],
+               nsteps: int) -> Ticket:
+        """Queue one trajectory: ``params = {"state": <field mapping or
+        ProgramState (single member)>, "consts": {name: value, ...}
+        (optional per-member sweep values), "rng": <PRNGKey> (optional,
+        carried through checkpoints)}``.  Returns a :class:`Ticket`."""
+        if not isinstance(program, Program):
+            raise TypeError(f"submit expects a Program, got "
+                            f"{type(program).__name__}")
+        if int(nsteps) < 1:
+            raise ValueError(f"nsteps must be >= 1, got {nsteps}")
+        state = params["state"]
+        if isinstance(state, ProgramState) and state.ensemble is not None:
+            raise ValueError(
+                "submit takes one member per ticket (no ensemble axis); "
+                "submit each member separately — the driver does the "
+                "batching")
+        member = {f: jnp.asarray(state[f]) for f in program.fields}
+        first = member[program.fields[0]]
+        grid = tuple(int(s) for s in first.shape[1:])
+        consts = {k: np.asarray(v)
+                  for k, v in dict(params.get("consts") or {}).items()}
+        with self._lock:
+            self._counter += 1
+            t = Ticket(f"t{self._counter:04d}", program.name, nsteps,
+                       grid, member, consts, params.get("rng"))
+            self._tickets[t.id] = t
+            self._programs.setdefault(program.name, program)
+            self._place(t, program)
+            self._cond.notify_all()
+        return t
+
+    def _place(self, t: Ticket, program: Program):
+        if self.grid_shapes is not None and t.grid_shape not in \
+                self.grid_shapes:
+            if t.grid_shape not in self._warned_grids:
+                self._warned_grids.add(t.grid_shape)
+                warnings.warn(
+                    f"fleet driver: grid {t.grid_shape} fits no "
+                    f"configured bucket {sorted(self.grid_shapes)}; "
+                    f"falling back to per-member execution for this "
+                    f"grid (one CompiledProgram, stepped solo)",
+                    stacklevel=3)
+            t._solo = self._solo_program(program, t)
+            self._solo_active.append(t)
+            return
+        bucket = self._bucket_for(t, program)
+        t._bucket = bucket
+        t.bucket_id = bucket.label
+        slot = bucket.free_slot()
+        if slot is None:
+            bucket.pending.append(t)
+        else:
+            self._occupy(bucket, slot, t)
+
+    def _const_sig(self, consts: Mapping[str, np.ndarray]):
+        return tuple((k, tuple(int(s) for s in consts[k].shape),
+                      str(consts[k].dtype)) for k in sorted(consts))
+
+    def _bucket_for(self, t: Ticket, program: Program) -> _Bucket:
+        sig = self._const_sig(t.consts)
+        static = tuple(
+            (st.name, tuple((k, v) for k, v in st.consts
+                            if k not in t.consts))
+            for st in program.stages)
+        key = (program.name, _program_digest(program), t.grid_shape,
+               sig, static)
+        bucket = self._buckets.get(key)
+        if bucket is not None:
+            return bucket
+        sweeps = {
+            k: BatchedConst(np.zeros((self.batch,) + shape,
+                                     np.dtype(dtype)))
+            for k, shape, dtype in sig}
+        fleet = _override_consts(program, sweeps).compile(
+            self.target, grid_shape=t.grid_shape, mesh=self._mesh,
+            shard_axis=self._shard_axis,
+            overlap=self._overlap).vmap(self.batch)
+        label = (f"{program.name}@{'x'.join(map(str, t.grid_shape))}"
+                 f"#{len(self._buckets)}")
+        bucket = _Bucket(key, label,
+                         fleet, {k: (shape, np.dtype(dtype))
+                                 for k, shape, dtype in sig})
+        self._buckets[key] = bucket
+        return bucket
+
+    def _solo_program(self, program: Program, t: Ticket
+                      ) -> CompiledProgram:
+        overrides = {k: TargetConst(v) for k, v in t.consts.items()}
+        key = (program.name, _program_digest(program), t.grid_shape,
+               tuple((k, TargetConst(v)) for k, v in
+                     sorted(t.consts.items())))
+        cp = self._solo_cache.get(key)
+        if cp is None:
+            cp = _override_consts(program, overrides).compile(
+                self.target, grid_shape=t.grid_shape, mesh=self._mesh,
+                shard_axis=self._shard_axis, overlap=self._overlap)
+            self._solo_cache[key] = cp
+        return cp
+
+    def _occupy(self, bucket: _Bucket, slot: int, t: Ticket):
+        t._slot = slot
+        bucket.slots[slot] = t
+        if bucket.state is None:
+            # first member defines the bucket arrays; idle slots carry a
+            # copy of it (valid fields — no NaN poisoning, results of
+            # idle slots are never read back)
+            bucket.state = {
+                f: jnp.stack([t._state[f]] * bucket.fleet.batch)
+                for f in bucket.fleet.program.fields}
+        else:
+            bucket.state = {
+                f: bucket.state[f].at[slot].set(t._state[f])
+                for f in bucket.fleet.program.fields}
+        for k in bucket.dyn_names:
+            if k in t.consts:
+                bucket.const_rows[k][slot] = t.consts[k]
+
+    # -- the step loop -----------------------------------------------------
+
+    def _chunk_for(self, tickets) -> int:
+        chunk = self.steps_per_launch
+        for t in tickets:
+            chunk = min(chunk, t.nsteps - t.step)
+            if t._stream_every:
+                to_mark = -t.step % t._stream_every
+                if to_mark:
+                    chunk = min(chunk, to_mark)
+        return max(1, chunk)
+
+    def _advance_ticket(self, t: Ticket, chunk: int, state: dict):
+        t.step += chunk
+        t._state = state
+        hit_mark = t._stream_every and t.step % t._stream_every == 0
+        if t.step >= t.nsteps:
+            t.done = True
+        if t._stream_every and (hit_mark or t.done):
+            t._snapshots.append((t.step, dict(state)))
+
+    def _pump_bucket(self, bucket: _Bucket) -> bool:
+        active = bucket.active()
+        if not active:
+            return False
+        chunk = self._chunk_for([t for _, t in active])
+        consts = {k: jnp.asarray(v)
+                  for k, v in bucket.const_rows.items()}
+        bucket.state = bucket.fleet.run(bucket.state, chunk,
+                                        consts=consts)
+        for slot, t in active:
+            self._advance_ticket(
+                t, chunk,
+                {f: bucket.state[f][slot]
+                 for f in bucket.fleet.program.fields})
+            if t.done:
+                bucket.slots[slot] = None
+                t._slot = None
+                if bucket.pending:
+                    self._occupy(bucket, slot, bucket.pending.popleft())
+        return True
+
+    def _pump_solo(self, t: Ticket) -> bool:
+        if t.done:
+            return False
+        chunk = self._chunk_for([t])
+        state = t._solo.run(dict(t._state), chunk)
+        self._advance_ticket(t, chunk, dict(state))
+        return True
+
+    def pump(self, rounds: int = 1) -> bool:
+        """Advance every bucket (and solo ticket) by up to ``rounds``
+        launch chunks.  Returns whether any ticket progressed — the
+        inline spelling of the background loop, and the unit the
+        checkpoint cadence counts."""
+        progressed_any = False
+        with self._lock:
+            for _ in range(max(1, int(rounds))):
+                progressed = False
+                for bucket in self._buckets.values():
+                    progressed |= self._pump_bucket(bucket)
+                for t in list(self._solo_active):
+                    progressed |= self._pump_solo(t)
+                    if t.done:
+                        self._solo_active.remove(t)
+                if progressed:
+                    self._pumps += 1
+                    if (self._ckpt is not None and self.checkpoint_every
+                            and self._pumps % self.checkpoint_every == 0):
+                        self._checkpoint_locked()
+                progressed_any |= progressed
+                self._cond.notify_all()
+                if not progressed:
+                    break
+        return progressed_any
+
+    def _unfinished(self):
+        return [t for t in self._tickets.values() if not t.done]
+
+    # -- service surface ---------------------------------------------------
+
+    def poll(self, ticket: Ticket) -> dict:
+        """Non-blocking progress: ``{"id", "step", "nsteps", "done",
+        "state"}`` (``state`` = the member's latest fields)."""
+        with self._lock:
+            return {"id": ticket.id, "step": ticket.step,
+                    "nsteps": ticket.nsteps, "done": ticket.done,
+                    "state": dict(ticket._state)}
+
+    def stream(self, ticket: Ticket, every: int = 1):
+        """Iterate ``(step, state)`` snapshots every ``every`` member
+        steps (plus the final step).  Call before the ticket advances
+        past its first mark.  Without a background thread the generator
+        pumps the driver inline; with one it blocks on progress."""
+        if int(every) < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        with self._lock:
+            ticket._stream_every = int(every)
+        while True:
+            with self._lock:
+                if ticket._snapshots:
+                    yield ticket._snapshots.popleft()
+                    continue
+                if ticket.done:
+                    return
+                if self._thread is not None:
+                    self._cond.wait(timeout=1.0)
+                    continue
+            if not self.pump():
+                raise RuntimeError(
+                    f"fleet driver made no progress streaming "
+                    f"{ticket.id} (step {ticket.step}/{ticket.nsteps})")
+
+    def drain(self) -> dict[str, dict]:
+        """Run until every submitted ticket completes; returns
+        ``{ticket_id: final_state}``.  Pumps inline unless the
+        background loop is running (then it waits on it)."""
+        while True:
+            with self._lock:
+                if not self._unfinished():
+                    break
+                if self._thread is not None:
+                    self._cond.wait(timeout=1.0)
+                    continue
+            if not self.pump():
+                stuck = [t.id for t in self._unfinished()]
+                raise RuntimeError(
+                    f"fleet driver made no progress with unfinished "
+                    f"ticket(s) {stuck}")
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        return {t.id: dict(t._state) for t in self._tickets.values()}
+
+    # -- background loop ---------------------------------------------------
+
+    def start(self):
+        """Run the step loop on a daemon thread until :meth:`stop`."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.pump():
+                    with self._lock:
+                        self._cond.wait(timeout=0.05)
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="fleet-driver")
+        self._thread.start()
+
+    def stop(self):
+        """Stop the background loop (tickets keep their progress)."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        with self._lock:
+            self._cond.notify_all()
+        self._thread.join()
+        self._thread = None
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+    # -- durability --------------------------------------------------------
+
+    def _snapshot_tree(self):
+        tickets, meta = {}, {}
+        for t in self._tickets.values():
+            entry = {"state": dict(t._state), "step": int(t.step),
+                     "bucket": t.bucket_id}
+            if t.rng is not None:
+                entry["rng"] = t.rng
+            tickets[t.id] = entry
+            meta[t.id] = {
+                "program": t.program_name, "nsteps": int(t.nsteps),
+                "step": int(t.step),
+                "grid_shape": list(t.grid_shape),
+                "fields": list(t._state),
+                "has_rng": t.rng is not None,
+                "consts": {k: {"value": np.asarray(v).tolist(),
+                               "dtype": str(np.asarray(v).dtype)}
+                           for k, v in t.consts.items()},
+            }
+        return {"tickets": tickets}, {"tickets": meta,
+                                      "batch": self.batch}
+
+    def _checkpoint_locked(self, blocking: bool = False):
+        tree, extra = self._snapshot_tree()
+        self._ckpt.save(self._pumps, tree, extra=extra,
+                        blocking=blocking)
+
+    def checkpoint(self, blocking: bool = True):
+        """Snapshot every ticket now (atomic, checksummed)."""
+        if self._ckpt is None:
+            raise ValueError("driver has no checkpoint_dir configured")
+        with self._lock:
+            self._checkpoint_locked(blocking=blocking)
+
+    @classmethod
+    def restore(cls, checkpoint_dir: str,
+                programs: Mapping[str, Program] | Program,
+                **driver_kw) -> "FleetDriver":
+        """Rebuild a driver from the latest checkpoint under
+        ``checkpoint_dir``: every in-flight ticket resumes at its saved
+        step (ids, step counters, RNG keys and const sweeps restored;
+        completed tickets come back completed).  ``programs`` maps
+        program name → :class:`Program` (or a single Program when only
+        one was served) — graphs are code, not data, so the caller
+        re-supplies them.  Deterministic stepping makes resumed
+        trajectories bit-identical to uninterrupted ones."""
+        from repro.checkpoint.store import (_load_manifest, _step_dir,
+                                            latest_step,
+                                            restore_checkpoint)
+        step = latest_step(checkpoint_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no fleet checkpoints under {checkpoint_dir}")
+        extra = _load_manifest(_step_dir(checkpoint_dir,
+                                         step)).get("extra", {})
+        meta = extra.get("tickets", {})
+        if isinstance(programs, Program):
+            programs = {programs.name: programs}
+        missing = sorted({m["program"] for m in meta.values()}
+                         - set(programs))
+        if missing:
+            raise ValueError(
+                f"checkpoint references program(s) {missing} not in the "
+                f"supplied mapping {sorted(programs)}")
+        driver_kw.setdefault("batch", int(extra.get("batch", 8)))
+        driver_kw.setdefault("checkpoint_dir", checkpoint_dir)
+        drv = cls(**driver_kw)
+
+        tree_like = {"tickets": {}}
+        for tid, m in meta.items():
+            entry = {"state": {f: 0.0 for f in m["fields"]},
+                     "step": 0, "bucket": ""}
+            if m.get("has_rng"):
+                entry["rng"] = 0
+            tree_like["tickets"][tid] = entry
+        tree, _, _ = restore_checkpoint(checkpoint_dir, tree_like,
+                                        step=step, verify=True)
+
+        with drv._lock:
+            for tid in sorted(meta, key=lambda s: int(s[1:])):
+                m, saved = meta[tid], tree["tickets"][tid]
+                program = programs[m["program"]]
+                consts = {k: np.asarray(c["value"],
+                                        np.dtype(c["dtype"]))
+                          for k, c in m["consts"].items()}
+                t = Ticket(tid, m["program"], m["nsteps"],
+                           tuple(m["grid_shape"]),
+                           {f: jnp.asarray(saved["state"][f])
+                            for f in m["fields"]},
+                           consts, saved.get("rng"),
+                           step=int(saved["step"]))
+                drv._tickets[tid] = t
+                drv._programs.setdefault(program.name, program)
+                drv._counter = max(drv._counter, int(tid[1:]))
+                if t.step >= t.nsteps:
+                    t.done = True
+                    t.bucket_id = str(saved["bucket"])
+                else:
+                    drv._place(t, program)
+        return drv
+
+    def __repr__(self):
+        with self._lock:
+            n_done = sum(t.done for t in self._tickets.values())
+            return (f"FleetDriver(batch={self.batch}, "
+                    f"buckets={len(self._buckets)}, "
+                    f"tickets={len(self._tickets)} ({n_done} done), "
+                    f"running={self._thread is not None})")

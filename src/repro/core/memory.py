@@ -204,6 +204,44 @@ class TargetConst:
         return f"TargetConst(shape={self.value.shape}, dtype={self.value.dtype})"
 
 
+class BatchedConst(TargetConst):
+    """A :class:`TargetConst` with a leading **ensemble axis**: row *i*
+    is member *i*'s value of the constant (a parameter sweep — per-member
+    mobility, viscosity, ...).
+
+    A Program stage binding a ``BatchedConst`` can only execute inside a
+    fleet (:meth:`repro.core.program.CompiledProgram.vmap`): the compiled
+    core receives the per-member slice as a *dynamic* const (a traced
+    value threaded through the launch as an operand instead of being
+    closed over), so one jitted fleet step serves every member of the
+    sweep.  Content-hashing is inherited — two sweeps with equal values
+    share plan-cache entries.
+    """
+
+    __slots__ = ()
+
+    def __init__(self, value: Any):
+        super().__init__(value)
+        if self.value.ndim < 1:
+            raise ValueError(
+                f"BatchedConst needs a leading ensemble axis; got a "
+                f"0-d value (shape {self.value.shape}) — wrap a plain "
+                f"scalar in TargetConst instead")
+
+    @property
+    def batch(self) -> int:
+        """The ensemble extent (leading-axis length)."""
+        return int(self.value.shape[0])
+
+    def member_shape(self) -> tuple:
+        return tuple(self.value.shape[1:])
+
+    def __repr__(self):
+        return (f"BatchedConst(batch={self.batch}, "
+                f"member_shape={self.member_shape()}, "
+                f"dtype={self.value.dtype})")
+
+
 def copy_constant_to_target(value: Any) -> TargetConst:
     """Family stand-in for ``copyConstant<Double|Int|...>ToTarget``."""
     return TargetConst(value)

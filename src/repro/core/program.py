@@ -79,8 +79,10 @@ from .api import launch as _launch
 from .api import launch_plan as _launch_plan
 from .api import _normalize_halo
 from .lattice import Lattice
+from .memory import BatchedConst
 from .registry import executor_wants
 from .spec import KernelSpec
+from .state import ProgramState, validate_field
 from .target import Target, as_target
 
 
@@ -301,6 +303,27 @@ class Program:
             for w, oc in zip(st.writes, st.spec.out):
                 _record(w, oc, f"stage {st.name!r} write")
 
+    def batched_consts(self) -> dict:
+        """The program's per-member ensemble sweeps: ordered mapping of
+        const name → :class:`~repro.core.memory.BatchedConst` over every
+        stage binding one.  A name bound by several stages must bind the
+        *same* sweep (content equality) — the fleet threads one value
+        per name through the whole step."""
+        out: dict[str, BatchedConst] = {}
+        for st in self.stages:
+            for k, v in st.consts:
+                if not isinstance(v, BatchedConst):
+                    continue
+                prev = out.get(k)
+                if prev is not None and prev != v:
+                    raise ValueError(
+                        f"program {self.name!r}: const {k!r} is bound to "
+                        f"two different BatchedConst sweeps (stage "
+                        f"{st.name!r} disagrees with an earlier stage); "
+                        f"every stage must share one sweep per name")
+                out[k] = v
+        return out
+
     def __repr__(self):
         return (f"Program({self.name!r}, stages="
                 f"{[st.name for st in self.stages]}, "
@@ -358,10 +381,14 @@ class Program:
     # -- stage execution core (shared by execute / compile) ----------------
 
     def _run_stages(self, stage_targets, shape: tuple[int, ...],
-                    geo, env: dict) -> dict:
+                    geo, env: dict, dyn: Mapping[str, Any] | None = None
+                    ) -> dict:
         """Run all stages over ``env`` (name → ``(grid_array, ext)``),
         mutating and returning it.  ``geo`` is :meth:`schedule`'s
-        per-stage ``(ext_out, halo)`` list."""
+        per-stage ``(ext_out, halo)`` list.  ``dyn`` maps batched const
+        names to this call's (possibly traced) per-member values —
+        stages binding a :class:`BatchedConst` launch with the dynamic
+        value instead of the baked sweep."""
         for st, tgt, (e_out, h) in zip(self.stages, stage_targets, geo):
             lat_shape = tuple(s + 2 * e for s, e in zip(shape, e_out))
             lat = Lattice(lat_shape)
@@ -372,9 +399,14 @@ class Program:
                         else tuple(e + hh for e, hh in zip(e_out, h)))
                 arr = _grid_trim(arr, shape, ext, want)
                 arrays.append(arr.reshape(arr.shape[0], -1))
+            consts = st.consts_dict()
+            if dyn:
+                for k, v in consts.items():
+                    if isinstance(v, BatchedConst) and k in dyn:
+                        consts[k] = dyn[k]
             outs = _launch(st.spec, tgt, *arrays, lattice=lat,
                            halo=h if any(h) else None,
-                           consts=st.consts_dict())
+                           consts=consts)
             outs = (outs,) if not isinstance(outs, tuple) else outs
             for w, o in zip(st.writes, outs):
                 env[w] = (o.reshape(o.shape[0], *lat_shape), e_out)
@@ -608,7 +640,7 @@ def _overlap_regions(local: Sequence[int], W: Sequence[int],
 def _run_region(program: Program, stage_targets, geo, widths, fields,
                 sources: Mapping[str, tuple[jax.Array, tuple[int, ...]]],
                 start: tuple[int, ...], shape: tuple[int, ...],
-                zeros: tuple[int, ...]) -> dict:
+                zeros: tuple[int, ...], dyn=None) -> dict:
     """Run the whole stage pipeline over one region of the local domain.
 
     ``sources[f] = (array, src_ext)`` covers interior coordinates
@@ -629,7 +661,7 @@ def _run_region(program: Program, stage_targets, geo, widths, fields,
                 continue
             a = jax.lax.slice_in_dim(a, lo, lo + ln, axis=d + 1)
         env[f] = (a, w)
-    env = program._run_stages(stage_targets, shape, geo, env)
+    env = program._run_stages(stage_targets, shape, geo, env, dyn=dyn)
     return {f: _grid_trim(env[f][0], shape, env[f][1], zeros)
             for f in fields}
 
@@ -694,6 +726,16 @@ class CompiledProgram:
                                    for st in program.stages)
         fields = program.fields
         zeros = (0,) * ndim
+        # Per-member ensemble sweeps: their (traced) values enter the
+        # core as trailing arguments after the field arrays, so one
+        # compiled step serves every member under vmap (tdp.fleet).
+        self.batched_consts = program.batched_consts()
+        self.dyn_names = tuple(self.batched_consts)
+        dyn_names = self.dyn_names
+        nfields = len(fields)
+
+        def _split(args):
+            return args[:nfields], dict(zip(dyn_names, args[nfields:]))
 
         if self.mesh is None:
             self.local_shape = self.grid_shape
@@ -708,10 +750,12 @@ class CompiledProgram:
             self._interior_shape = self.grid_shape
             self.overlap = False
 
-            def core(*arrays):
+            def core(*args):
+                arrays, dyn = _split(args)
                 env = {f: (a, zeros) for f, a in zip(fields, arrays)}
                 env = program._run_stages(self.stage_targets,
-                                          self.grid_shape, geo, env)
+                                          self.grid_shape, geo, env,
+                                          dyn=dyn)
                 return tuple(env[f][0] for f in fields)
 
         else:
@@ -792,31 +836,33 @@ class CompiledProgram:
                 return out
 
             if not self.overlap:
-                def core_local(*arrays):
+                def core_local(*args):
+                    arrays, dyn = _split(args)
                     ex = _exchange_all(arrays)
                     env = {f: (ex[f], widths[f]) for f in fields}
                     env = program._run_stages(self.stage_targets, local,
-                                              geo, env)
+                                              geo, env, dyn=dyn)
                     return tuple(_grid_trim(env[f][0], local, env[f][1],
                                             zeros) for f in fields)
             else:
-                def core_local(*arrays):
+                def core_local(*args):
+                    arrays, dyn = _split(args)
                     # Interior first, fed the *raw* local arrays — no
                     # data dependency on any ppermute, so XLA is free to
                     # run it while the exchanges are in flight.
                     raw = {f: (a, zeros) for f, a in zip(fields, arrays)}
                     out = _run_region(program, self.stage_targets, geo,
                                       widths, fields, raw, i_start,
-                                      i_shape, zeros)
+                                      i_shape, zeros, dyn=dyn)
                     ex = _exchange_all(arrays)
                     exd = {f: (ex[f], widths[f]) for f in fields}
                     for d, lo, hi in reversed(bounds):
                         o_lo = _run_region(program, self.stage_targets,
                                            geo, widths, fields, exd,
-                                           *lo, zeros)
+                                           *lo, zeros, dyn=dyn)
                         o_hi = _run_region(program, self.stage_targets,
                                            geo, widths, fields, exd,
-                                           *hi, zeros)
+                                           *hi, zeros, dyn=dyn)
                         out = {f: jnp.concatenate(
                                    [o_lo[f], out[f], o_hi[f]], axis=d + 1)
                                for f in fields}
@@ -829,7 +875,8 @@ class CompiledProgram:
             check = all(t.executor == "xla" for t in self.stage_targets)
             core = compat.shard_map(
                 core_local, mesh=self.mesh,
-                in_specs=(pspec,) * len(fields),
+                in_specs=(pspec,) * len(fields)
+                + (PartitionSpec(),) * len(dyn_names),
                 out_specs=(pspec,) * len(fields), check_vma=check)
 
         self._core = core
@@ -839,39 +886,61 @@ class CompiledProgram:
     # -- running -----------------------------------------------------------
 
     def _as_tuple(self, state: Mapping[str, jax.Array]):
+        if isinstance(state, ProgramState) and state.ensemble is not None:
+            raise ValueError(
+                f"program {self.program.name!r}: state carries an "
+                f"ensemble axis (ensemble={state.ensemble}) but this is "
+                f"a single-member compile — run it through a fleet "
+                f"(.vmap({state.ensemble})) or pass state.member(i)")
         arrays = []
         for f in self.program.fields:
             if f not in state:
-                raise ValueError(f"program {self.program.name!r}: state "
-                                 f"is missing field {f!r}")
-            a = state[f]
-            c = self.program.ncomp.get(f)
-            if (getattr(a, "ndim", 0) != 1 + len(self.grid_shape)
-                    or tuple(a.shape[1:]) != self.grid_shape
-                    or (c is not None and int(a.shape[0]) != c)):
                 raise ValueError(
-                    f"field {f!r} must be ({c or '?'}, "
-                    f"{', '.join(map(str, self.grid_shape))}); got "
-                    f"{getattr(a, 'shape', None)}")
+                    f"state for program {self.program.name!r} is missing "
+                    f"field {f!r}; present: {sorted(state)}")
+            a = state[f]
+            validate_field(f, a, ncomp=self.program.ncomp.get(f),
+                           grid_shape=self.grid_shape,
+                           program=self.program.name)
             arrays.append(a)
         return tuple(arrays)
 
-    def step(self, state: Mapping[str, jax.Array]) -> dict:
-        """One step: field dict in, field dict out."""
+    def _wrap(self, state, outs) -> Mapping[str, jax.Array]:
+        out = dict(zip(self.program.fields, outs))
+        if isinstance(state, ProgramState):
+            return ProgramState(out)
+        return out
+
+    def _require_unbatched(self, what: str):
+        if self.dyn_names:
+            raise ValueError(
+                f"program {self.program.name!r} binds batched const(s) "
+                f"{list(self.dyn_names)} (per-member ensemble sweeps); "
+                f"{what} has no ensemble axis — compile a fleet with "
+                f".vmap(batch) (tdp.fleet) instead")
+
+    def step(self, state: Mapping[str, jax.Array]):
+        """One step: field mapping in (dict or
+        :class:`~repro.core.state.ProgramState`), same kind out."""
+        self._require_unbatched("CompiledProgram.step")
         outs = self._jit_step(*self._as_tuple(state))
-        return dict(zip(self.program.fields, outs))
+        return self._wrap(state, outs)
 
     def run(self, state: Mapping[str, jax.Array], nsteps: int, *,
-            donate: bool = False) -> dict:
+            donate: bool = False):
         """``nsteps`` steps under one jitted ``lax.scan``.
 
         ``donate=True`` donates the input field buffers so XLA aliases
         them with the outputs (no per-step reallocation; the caller's
         arrays are consumed — feed each call the previous call's output,
         the ping-pong).  Compiled once per ``(nsteps, donate)``.
+        Accepts a plain dict or a :class:`ProgramState`; returns the
+        same kind.
         """
+        self._require_unbatched("CompiledProgram.run")
         if nsteps <= 0:
-            return {f: state[f] for f in self.program.fields}
+            return self._wrap(state, tuple(state[f]
+                                           for f in self.program.fields))
         key = (int(nsteps), bool(donate))
         fn = self._run_cache.get(key)
         if fn is None:
@@ -886,7 +955,18 @@ class CompiledProgram:
             fn = jax.jit(many, donate_argnums=(0,) if donate else ())
             self._run_cache[key] = fn
         outs = fn(self._as_tuple(state))
-        return dict(zip(self.program.fields, outs))
+        return self._wrap(state, outs)
+
+    def vmap(self, batch: int) -> "repro.core.fleet.FleetProgram":  # noqa: F821
+        """Lift this compiled step over a leading ensemble axis: a
+        :class:`~repro.core.fleet.FleetProgram` stepping ``batch``
+        independent trajectories (one per ensemble member) in one jitted
+        launch — members never interact, so the fleet trajectory is
+        bit-identical to ``batch`` single runs.  Sharded compiles
+        compose the vmap *outside* ``shard_map``, so a decomposed fleet
+        still runs one halo-exchange round per step."""
+        from .fleet import FleetProgram
+        return FleetProgram(self, batch)
 
     def plan(self) -> "ProgramPlan":
         """Aggregated memory models for this compile's local geometry."""

@@ -29,6 +29,10 @@ host step glue      :func:`tdp.program` — multi-launch step graphs with
 per-device tuning   :func:`tdp.autotune` — measured selection over
                     ``Target.tuning`` / the executor axis, cached on
                     disk per (program, grid, device)
+ensemble serving    ``compiled.vmap(batch)`` / :class:`FleetDriver` —
+                    batched trajectories behind submit/poll/stream,
+                    ``BatchedConst`` parameter sweeps, durable tickets
+                    (:mod:`repro.core.fleet`)
 ==================  =====================================================
 """
 from repro.core.target import (  # noqa: F401
@@ -92,7 +96,15 @@ from repro.core.lattice import (  # noqa: F401
     STENCIL_GRAD_19PT,
     token_lattice,
 )
+from repro.core import fleet  # noqa: F401  (module: tdp.fleet)
+from repro.core.fleet import (  # noqa: F401
+    FleetDriver,
+    FleetProgram,
+    Ticket,
+)
+from repro.core.state import ProgramState, validate_field  # noqa: F401
 from repro.core.memory import (  # noqa: F401
+    BatchedConst,
     TargetConst,
     copy_constant_to_target,
     copy_from_target,
@@ -121,4 +133,6 @@ __all__ = [
     "STENCIL_D3Q19_PULL", "STENCIL_GRAD_6PT", "STENCIL_GRAD_19PT",
     "TargetConst", "copy_constant_to_target", "copy_to_target",
     "copy_from_target", "sync_target", "target_free", "target_malloc",
+    "fleet", "FleetProgram", "FleetDriver", "Ticket",
+    "ProgramState", "BatchedConst", "validate_field",
 ]

@@ -52,6 +52,63 @@ class TestRoundtrip:
         np.testing.assert_array_equal(got["x"], big["x"])
 
 
+class TestPythonLeaves:
+    def test_python_scalar_and_str_leaves_roundtrip(self, tmp_path):
+        """Fleet ticket metadata — a python step counter, a bucket-id
+        string, a flag — round-trips type-faithfully (manifest "py"
+        entries, not .npy files coerced through np.asarray)."""
+        tree = {"step": 17, "bucket": "lb_step@8x8x8#0", "resumable": True,
+                "lr": 2.5e-4, "x": jnp.arange(3.0),
+                "rng": jax.random.PRNGKey(7)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        like = {"step": 0, "bucket": "", "resumable": False, "lr": 0.0,
+                "x": 0.0, "rng": 0}
+        got, _, _ = restore_checkpoint(str(tmp_path), like, verify=True)
+        assert got["step"] == 17 and type(got["step"]) is int
+        assert got["bucket"] == "lb_step@8x8x8#0" and \
+            type(got["bucket"]) is str
+        assert got["resumable"] is True
+        assert got["lr"] == 2.5e-4 and type(got["lr"]) is float
+        np.testing.assert_array_equal(np.asarray(got["x"]),
+                                      np.arange(3.0))
+        np.testing.assert_array_equal(np.asarray(got["rng"]),
+                                      np.asarray(jax.random.PRNGKey(7)))
+
+    def test_verify_tolerates_py_entries(self, tmp_path):
+        save_checkpoint(str(tmp_path), 2, {"tag": "abc", "n": 3})
+        d = os.path.join(str(tmp_path), "step_000000000002")
+        assert verify_checkpoint(d)
+
+    def test_manager_preserves_py_leaves(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(4, {"step": 4, "w": jnp.ones(2)}, blocking=True)
+        got, _, _ = mgr.restore_latest({"step": 0, "w": 0.0})
+        assert got["step"] == 4 and type(got["step"]) is int
+
+    def test_midflight_program_state_roundtrip(self, tmp_path):
+        """A mid-flight fleet member (ProgramState + metadata) restores
+        exactly — the FleetDriver durability contract's storage half."""
+        from repro import tdp
+        rng = np.random.default_rng(0)
+        state = tdp.ProgramState(
+            {"f": jnp.asarray(rng.normal(size=(19, 4, 4, 4)),
+                              jnp.float32),
+             "g": jnp.asarray(rng.normal(size=(19, 4, 4, 4)),
+                              jnp.float32)})
+        tree = {"state": state, "step": 12, "bucket": "lb@4x4x4#0",
+                "rng": jax.random.PRNGKey(3)}
+        save_checkpoint(str(tmp_path), 12, tree)
+        like = {"state": tdp.ProgramState({"f": 0.0, "g": 0.0}),
+                "step": 0, "bucket": "", "rng": 0}
+        got, _, _ = restore_checkpoint(str(tmp_path), like, verify=True)
+        assert isinstance(got["state"], tdp.ProgramState)
+        assert got["state"].fields == ("f", "g")
+        for f in ("f", "g"):
+            np.testing.assert_array_equal(np.asarray(got["state"][f]),
+                                          np.asarray(state[f]))
+        assert got["step"] == 12 and got["bucket"] == "lb@4x4x4#0"
+
+
 class TestFaultTolerance:
     def test_atomic_no_partial_visible(self, tmp_path, tree):
         """A leftover .tmp dir is never picked up as a checkpoint."""
