@@ -32,7 +32,11 @@ import sys
 
 #: record fields that are part of a variant's identity (tuning and
 #: shape), not of its measurement — a mismatch means "not comparable".
-_IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length", "batch")
+#: "health" separates guarded fleet variants (HealthPolicy checks
+#: between chunks) from unguarded ones: the guard cost is measured on
+#: purpose and must never gate the guard-off trajectory.
+_IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length", "batch",
+                  "health")
 
 #: measurement field preference: run.py's program benches write
 #: ``median_s`` (and ``t_s`` aliases it); older records only ``t_s``.
@@ -66,8 +70,13 @@ def _median(variant: dict):
 
 
 def _identity(bench: str, rec: dict, key: str, variant: dict) -> tuple:
-    return (bench, tuple(rec.get("grid") or ()), key,
-            tuple((k, variant.get(k)) for k in _IDENTITY_KEYS))
+    ident = []
+    for k in _IDENTITY_KEYS:
+        v = variant.get(k)
+        if k == "health" and v is None:
+            v = "off"    # records predating the guard field are unguarded
+        ident.append((k, v))
+    return (bench, tuple(rec.get("grid") or ()), key, tuple(ident))
 
 
 def compare(baseline: dict[str, dict], fresh: dict[str, dict],

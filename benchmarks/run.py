@@ -636,12 +636,37 @@ def bench_fleet(quick=False):
         sps_dev = b * K / t / ndev
         rec["variants"][f"batch{b}"] = {
             **ts, "executor": "xla", "batch": b, "scan_length": K,
+            "health": "off",
             "steps_per_s_per_device": sps_dev,
             "msites_per_s": b * K * n / t / 1e6,
         }
         rows.append((b, f"{t*1e3:.2f}", f"{sps_dev:.1f}",
                      f"{b*K*n/t/1e6:.2f}",
                      f"{rec['variants'][f'batch{b}']['steps_per_s_per_device'] / rec['variants']['batch1']['steps_per_s_per_device']:.2f}×"))
+    # guard cost: the largest measured batch re-timed with a per-chunk
+    # NaN/Inf health check (tdp.HealthPolicy(every=1) — the worst case;
+    # every=k amortises this by k).  health_check_overhead is the
+    # fractional slowdown vs the unguarded run of the same batch.
+    bmax = batches[-1]
+    policy = tdp.HealthPolicy(every=1)
+    fleet = fused.vmap(bmax)
+    state = tdp.ProgramState.stack([ws] * bmax)
+    gts = _time_stats(lambda s: fleet.run(s, K, health=policy), state,
+                      reps=REPS_OVERRIDE or 15, warmup=2)
+    t_off = rec["variants"][f"batch{bmax}"]["median_s"]
+    overhead = gts["median_s"] / t_off - 1.0
+    rec["variants"][f"batch{bmax}_guarded"] = {
+        **gts, "executor": "xla", "batch": bmax, "scan_length": K,
+        "health": "every1",
+        "steps_per_s_per_device": bmax * K / gts["median_s"] / ndev,
+        "msites_per_s": bmax * K * n / gts["median_s"] / 1e6,
+        "health_check_overhead": overhead,
+    }
+    rec["health_check_overhead"] = overhead
+    rows.append((f"{bmax} (guarded)", f"{gts['median_s']*1e3:.2f}",
+                 f"{bmax*K/gts['median_s']/ndev:.1f}",
+                 f"{bmax*K*n/gts['median_s']/1e6:.2f}",
+                 f"+{overhead*100:.1f}% guard"))
     RESULTS["fleet"] = rec
     BENCH_RECORDS["fleet"] = rec
     return _table(

@@ -39,6 +39,11 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None,
                     help="checkpoint all in-flight tickets here "
                          "(kill + rerun with the same dir resumes them)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="failure drill: guard all trajectories with a "
+                         "HealthPolicy and poison one ticket's g field "
+                         "mid-run — the driver quarantines exactly that "
+                         "member while the rest complete")
     args = ap.parse_args()
 
     grid = (args.grid,) * 3
@@ -71,12 +76,15 @@ def main():
                   f"{args.checkpoint_dir}")
         except FileNotFoundError:
             pass
+    health = tdp.HealthPolicy(fields=("g",), every=2) if args.chaos \
+        else None
     if drv is None:
         drv = tdp.FleetDriver(tdp.Target(args.backend, vvl=args.vvl),
                               batch=args.batch,
                               checkpoint_dir=args.checkpoint_dir,
                               checkpoint_every=4 if args.checkpoint_dir
-                              else None)
+                              else None,
+                              health=health)
 
     tau_phis = np.linspace(0.8, 1.2, args.batch).astype(np.float32)
     tickets = list(resumed.values())
@@ -95,6 +103,15 @@ def main():
         phi = np.asarray(state["g"]).sum(axis=0)
         return float(phi.var())
 
+    victim = None
+    if args.chaos and len(tickets) >= 2:
+        from repro.core import faults
+        victim = tickets[1]
+        poison_at = max(1, args.steps // 2)
+        drv.inject(faults.nan_at_step(victim.id, "g", poison_at))
+        print(f"[lb_fleet] chaos: poisoning {victim.id} field 'g' at "
+              f"member step {poison_at} (guard: NaN/Inf every 2 steps)")
+
     t0 = time.perf_counter()
     if args.stream_every:
         for step, snap in drv.stream(tickets[0], every=args.stream_every):
@@ -111,6 +128,12 @@ def main():
           f"{len(drv._buckets)} bucket jit(s))")
     for t in tickets:
         p = drv.poll(t)
+        if victim is not None and t.id == victim.id:
+            assert p["status"] == "failed", \
+                f"{t.id}: expected quarantine, got {p['status']}"
+            assert isinstance(p["error"], tdp.HealthError)
+            print(f"[lb_fleet] {t.id}: quarantined -> {p['error']}")
+            continue
         assert p["done"] and p["step"] == t.nsteps
         var = phi_var(final[t.id])
         assert np.isfinite(var), f"{t.id}: non-finite fields"

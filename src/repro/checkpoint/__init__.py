@@ -1,6 +1,7 @@
 """Fault-tolerant checkpointing: atomic, async, manifested, elastic."""
 from .store import (
     CheckpointManager,
+    checkpoint_steps,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
@@ -8,6 +9,6 @@ from .store import (
 )
 
 __all__ = [
-    "CheckpointManager", "latest_step", "restore_checkpoint",
-    "save_checkpoint", "verify_checkpoint",
+    "CheckpointManager", "checkpoint_steps", "latest_step",
+    "restore_checkpoint", "save_checkpoint", "verify_checkpoint",
 ]

@@ -162,22 +162,34 @@ def verify_checkpoint(path: str) -> bool:
     return True
 
 
-def latest_step(root: str) -> Optional[int]:
+def checkpoint_steps(root: str) -> list[int]:
+    """All complete checkpoint steps under ``root``, oldest first.
+    "Complete" = the directory has a manifest (atomic ``os.replace``
+    means a directory either fully exists or doesn't) — contents may
+    still be damaged; pair with :func:`verify_checkpoint` to find the
+    newest *valid* one."""
     if not os.path.isdir(root):
-        return None
-    steps = []
-    for d in os.listdir(root):
-        if d.startswith("step_") and not d.endswith(".tmp") and \
-                os.path.exists(os.path.join(root, d, _MANIFEST)):
-            steps.append(int(d[len("step_"):]))
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        int(d[len("step_"):]) for d in os.listdir(root)
+        if d.startswith("step_") and not d.endswith(".tmp")
+        and os.path.exists(os.path.join(root, d, _MANIFEST)))
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = checkpoint_steps(root)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(root: str, tree_like, *, step: Optional[int] = None,
-                       shardings=None, verify: bool = False):
+                       shardings=None, verify: bool = True):
     """Restore into the structure of ``tree_like`` (shapes are trusted from
     the manifest).  ``shardings``: optional twin pytree of NamedShardings —
     this is the **elastic** path: any mesh, any layout.
+    ``verify`` (default on) checks every shard's sha256 against the
+    manifest before loading and raises ``IOError`` on a mismatch — pass
+    ``verify=False`` only when the caller already verified (or wants a
+    best-effort read of a known-damaged snapshot).
     Returns (tree, manifest_extra, step).
     """
     step = latest_step(root) if step is None else step
@@ -221,12 +233,7 @@ def restore_checkpoint(root: str, tree_like, *, step: Optional[int] = None,
 
 
 def _prune(root: str, keep: int):
-    if not os.path.isdir(root):
-        return
-    steps = sorted(
-        int(d[len("step_"):]) for d in os.listdir(root)
-        if d.startswith("step_") and not d.endswith(".tmp")
-        and os.path.exists(os.path.join(root, d, _MANIFEST)))
+    steps = checkpoint_steps(root)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(_step_dir(root, s), ignore_errors=True)
 
@@ -279,6 +286,6 @@ class CheckpointManager:
             e, self._error = self._error, None
             raise e
 
-    def restore_latest(self, tree_like, *, shardings=None, verify=False):
+    def restore_latest(self, tree_like, *, shardings=None, verify=True):
         return restore_checkpoint(self.root, tree_like, shardings=shardings,
                                   verify=verify)

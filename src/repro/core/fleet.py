@@ -35,18 +35,36 @@ to running its members one by one.  Three layers:
    killed driver :meth:`FleetDriver.restore`\\ s every ticket at its
    last saved step; deterministic stepping makes the resumed trajectory
    match an uninterrupted run bit-for-bit.
+4. **Resilience** — tickets carry a failure lifecycle (``status ∈
+   {queued, running, failed, done}`` with the captured exception and
+   traceback).  A fault while pumping a bucket is *attributed*: each
+   active ticket replays the chunk through a cached batch-1 fleet
+   (traced consts — the bit-identical replay path), so only the
+   ticket(s) that actually raise are quarantined while the rest advance
+   exactly as a fault-free pump would have.  An optional
+   :class:`~repro.core.health.HealthPolicy` adds NaN/Inf/norm guards
+   between chunks, quarantining diverged members with a field +
+   step-range diagnosis.  Failed tickets retry up to ``max_retries``
+   (with backoff), rolling back to their last snapshot; background
+   pump-thread exceptions are recorded and re-raised from
+   ``drain``/``stream``/``stop`` instead of dying silently; and
+   :meth:`FleetDriver.restore` falls back to the newest
+   checksum-*valid* snapshot when the latest one is torn.
 """
 from __future__ import annotations
 
 import collections
 import threading
+import time
+import traceback as traceback_mod
 import warnings
-from typing import Any, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .health import HealthError, HealthPolicy, diagnose
 from .memory import BatchedConst, TargetConst
 from .program import CompiledProgram, Program, Stage
 from .state import ProgramState, validate_field
@@ -175,11 +193,31 @@ class FleetProgram:
 
     def run(self, state, nsteps: int, *,
             consts: Mapping[str, Any] | None = None,
-            donate: bool = False):
+            donate: bool = False, health: "HealthPolicy | None" = None):
         """``nsteps`` fleet steps under one jitted ``lax.scan``
         (``donate=True`` ping-pongs the ensemble field buffers).
         Compiled once per ``(nsteps, donate)``; const overrides are
-        traced operands, so fresh sweep values never recompile."""
+        traced operands, so fresh sweep values never recompile.
+
+        ``health``: optional :class:`~repro.core.health.HealthPolicy` —
+        chunk the scan at ``health.every`` member steps and check
+        between chunks (the same jitted core iterated, so the
+        trajectory stays bit-identical); a violation raises
+        :class:`~repro.core.health.HealthError` attributing the
+        diverged **member** and the step range."""
+        if health is not None:
+            from .health import check
+            health.select_fields(self.program.fields)
+            done, n = 0, int(nsteps)
+            while done < n:
+                chunk = min(health.every, n - done)
+                state = self.run(state, chunk, consts=consts,
+                                 donate=donate and done > 0)
+                check(health, state, ensemble=self.batch,
+                      step_range=(done, done + chunk),
+                      where=f"fleet {self.program.name!r}")
+                done += chunk
+            return state
         if nsteps <= 0:
             return self._wrap(state, tuple(state[f]
                                            for f in self.program.fields))
@@ -222,13 +260,26 @@ class FleetProgram:
 # layer 2 — the service driver
 # ---------------------------------------------------------------------------
 
+#: the ticket state machine: queued → running → {failed, done}, with a
+#: retry edge failed-candidate → queued (rollback) while retries remain.
+TICKET_STATUSES = ("queued", "running", "failed", "done")
+
+
 class Ticket:
     """Handle for one submitted trajectory (see
-    :meth:`FleetDriver.submit`)."""
+    :meth:`FleetDriver.submit`).
+
+    ``status`` walks queued → running → done, or → failed: a failed
+    ticket carries its cause on ``error`` (the exception instance, or
+    its string form after a checkpoint restore) and ``traceback``, and
+    ``retries`` counts rollback-retries already consumed.
+    """
 
     __slots__ = ("id", "program_name", "nsteps", "step", "grid_shape",
-                 "consts", "rng", "bucket_id", "done", "_state", "_slot",
-                 "_bucket", "_solo", "_stream_every", "_snapshots")
+                 "consts", "rng", "bucket_id", "status", "error",
+                 "traceback", "retries", "_state", "_slot", "_bucket",
+                 "_solo", "_stream_every", "_snapshots", "_not_before",
+                 "_retry_ckpt")
 
     def __init__(self, tid: str, program_name: str, nsteps: int,
                  grid_shape: tuple[int, ...], state: dict, consts: dict,
@@ -241,17 +292,39 @@ class Ticket:
         self.consts = dict(consts)
         self.rng = rng
         self.bucket_id = ""          # assigned on placement ("" = solo)
-        self.done = False
+        self.status = "queued"
+        self.error: BaseException | str | None = None
+        self.traceback: str | None = None
+        self.retries = 0
         self._state = state          # latest member state (dict f -> arr)
         self._slot: int | None = None
         self._bucket = None
         self._solo: CompiledProgram | None = None
         self._stream_every: int | None = None
         self._snapshots: collections.deque = collections.deque()
+        self._not_before = 0.0       # retry-backoff gate (monotonic s)
+        # rollback point for retries: (step, state) — the submit state
+        # until the driver's checkpoint cadence refreshes it
+        self._retry_ckpt: tuple[int, dict] = (int(step), dict(state))
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "failed"
+
+    @property
+    def finished(self) -> bool:
+        """Terminal — the driver will never step this ticket again."""
+        return self.status in ("done", "failed")
 
     def __repr__(self):
         return (f"Ticket({self.id!r}, step={self.step}/{self.nsteps}, "
-                f"done={self.done})")
+                f"status={self.status!r}"
+                f"{', error=' + repr(str(self.error)) if self.failed else ''}"
+                f")")
 
 
 class _Bucket:
@@ -259,7 +332,7 @@ class _Bucket:
     :class:`FleetProgram` plus slot bookkeeping."""
 
     __slots__ = ("key", "label", "fleet", "slots", "pending", "state",
-                 "const_rows", "dyn_names")
+                 "const_rows", "dyn_names", "replay")
 
     def __init__(self, key, label: str, fleet: FleetProgram,
                  const_shapes: dict):
@@ -274,6 +347,8 @@ class _Bucket:
         self.const_rows = {
             k: np.zeros((fleet.batch,) + shape, dtype)
             for k, (shape, dtype) in const_shapes.items()}
+        # lazily-built batch-1 fleet for fault-attribution replays
+        self.replay: FleetProgram | None = None
 
     def free_slot(self) -> int | None:
         for i, t in enumerate(self.slots):
@@ -283,7 +358,7 @@ class _Bucket:
 
     def active(self):
         return [(i, t) for i, t in enumerate(self.slots)
-                if t is not None and not t.done]
+                if t is not None and not t.finished]
 
 
 def _override_consts(program: Program, overrides: Mapping[str, Any]
@@ -336,16 +411,31 @@ class FleetDriver:
       steps_per_launch: member steps per fleet launch (request-batching
         granularity; streams and completions stay exact — a launch never
         overshoots a ticket's ``nsteps`` or stream mark).
-      checkpoint_dir / checkpoint_every: durability — every
-        ``checkpoint_every`` pump rounds the driver snapshots all
+      checkpoint_dir / checkpoint_every / checkpoint_keep: durability —
+        every ``checkpoint_every`` pump rounds the driver snapshots all
         in-flight tickets through :class:`repro.checkpoint.store.
-        CheckpointManager` (atomic + checksummed, written off-thread).
+        CheckpointManager` (atomic + checksummed, written off-thread),
+        retaining the newest ``checkpoint_keep`` snapshots so restore
+        can fall back past a torn directory.
+      health: optional :class:`~repro.core.health.HealthPolicy` —
+        NaN/Inf/norm guards between pump chunks; a diagnosed member is
+        quarantined (its ticket fails, or retries) while healthy
+        members keep the exact results of the shared vmapped launch.
+      max_retries / retry_backoff: failed tickets retry up to
+        ``max_retries`` times, rolling back to their last snapshot
+        (the submit state until the checkpoint cadence refreshes it);
+        ``retry_backoff`` seconds (doubling per retry) gate each
+        attempt.
       mesh / shard_axis / overlap: forwarded to ``Program.compile`` —
         buckets of decomposed fleets (vmap outside ``shard_map``).
 
     Lifecycle: ``submit`` places tickets; stepping happens inside
     :meth:`pump` — called inline by :meth:`drain`/:meth:`stream`, or
-    continuously from the background thread :meth:`start`\\ s.
+    continuously from the background thread :meth:`start`\\ s.  A fault
+    while pumping fails only the offending ticket(s) — see the module
+    docstring's resilience layer; background-thread exceptions are
+    re-raised from ``drain``/``stream``/``stop`` (and reported by
+    ``poll``), never swallowed.
     """
 
     def __init__(self, target: Target | str | None = None, *,
@@ -354,6 +444,10 @@ class FleetDriver:
                  steps_per_launch: int = 1,
                  checkpoint_dir: str | None = None,
                  checkpoint_every: int | None = None,
+                 checkpoint_keep: int = 3,
+                 health: HealthPolicy | None = None,
+                 max_retries: int = 0,
+                 retry_backoff: float = 0.0,
                  mesh=None, shard_axis=None, overlap=None):
         self.target = as_target(target)
         self.batch = int(batch)
@@ -364,6 +458,17 @@ class FleetDriver:
         self.steps_per_launch = max(1, int(steps_per_launch))
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
+        if health is not None and not isinstance(health, HealthPolicy):
+            raise TypeError(f"health expects a HealthPolicy, got "
+                            f"{type(health).__name__}")
+        self.health = health
+        self.max_retries = int(max_retries)
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.retry_backoff = float(retry_backoff)
+        if self.retry_backoff < 0:
+            raise ValueError(f"retry_backoff must be >= 0, "
+                             f"got {retry_backoff}")
         self._mesh, self._shard_axis, self._overlap = mesh, shard_axis, \
             overlap
         self._buckets: dict = {}
@@ -378,10 +483,13 @@ class FleetDriver:
         self._cond = threading.Condition(self._lock)
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
+        self._loop_error: BaseException | None = None
+        self._chaos: list[Callable] = []    # fault-injection hooks
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint.store import CheckpointManager
-            self._ckpt = CheckpointManager(checkpoint_dir)
+            self._ckpt = CheckpointManager(checkpoint_dir,
+                                           keep=int(checkpoint_keep))
 
     # -- submission --------------------------------------------------------
 
@@ -402,6 +510,14 @@ class FleetDriver:
                 "submit takes one member per ticket (no ensemble axis); "
                 "submit each member separately — the driver does the "
                 "batching")
+        if self.health is not None and self.health.fields is not None:
+            unknown = sorted(set(self.health.fields)
+                             - set(program.fields))
+            if unknown:
+                raise ValueError(
+                    f"driver HealthPolicy guards field(s) {unknown} that "
+                    f"program {program.name!r} does not step; fields: "
+                    f"{list(program.fields)}")
         member = {f: jnp.asarray(state[f]) for f in program.fields}
         first = member[program.fields[0]]
         grid = tuple(int(s) for s in first.shape[1:])
@@ -429,6 +545,7 @@ class FleetDriver:
                     f"grid (one CompiledProgram, stepped solo)",
                     stacklevel=3)
             t._solo = self._solo_program(program, t)
+            t.status = "running"
             self._solo_active.append(t)
             return
         bucket = self._bucket_for(t, program)
@@ -487,6 +604,7 @@ class FleetDriver:
 
     def _occupy(self, bucket: _Bucket, slot: int, t: Ticket):
         t._slot = slot
+        t.status = "running"
         bucket.slots[slot] = t
         if bucket.state is None:
             # first member defines the bucket arrays; idle slots carry a
@@ -513,6 +631,11 @@ class FleetDriver:
                 to_mark = -t.step % t._stream_every
                 if to_mark:
                     chunk = min(chunk, to_mark)
+            if self.health is not None:
+                # land chunk boundaries on the guard cadence so every
+                # check happens at a multiple of health.every
+                to_check = -t.step % self.health.every
+                chunk = min(chunk, to_check or self.health.every)
         return max(1, chunk)
 
     def _advance_ticket(self, t: Ticket, chunk: int, state: dict):
@@ -520,53 +643,209 @@ class FleetDriver:
         t._state = state
         hit_mark = t._stream_every and t.step % t._stream_every == 0
         if t.step >= t.nsteps:
-            t.done = True
+            t.status = "done"
         if t._stream_every and (hit_mark or t.done):
             t._snapshots.append((t.step, dict(state)))
 
+    def _ready(self, t: Ticket) -> bool:
+        return t._not_before <= time.monotonic()
+
+    def _health_due(self, t: Ticket, chunk: int) -> bool:
+        # on the guard cadence, and always on the ticket's final chunk
+        # (a trailing partial chunk must not finish unchecked)
+        return self.health is not None and (
+            (t.step + chunk) % self.health.every == 0
+            or t.step + chunk >= t.nsteps)
+
+    def _retire(self, bucket: _Bucket, slot: int, t: Ticket):
+        """Free a bucket slot (its ticket finished or was quarantined)
+        and pull the next pending ticket in."""
+        bucket.slots[slot] = None
+        t._slot = None
+        if bucket.pending:
+            self._occupy(bucket, slot, bucket.pending.popleft())
+
+    def _fail_ticket(self, t: Ticket, err: BaseException):
+        """Quarantine or retry one ticket.  With retries remaining, the
+        ticket rolls back to its last snapshot (step + state), re-queues
+        (backoff-gated) and keeps the error for observability; otherwise
+        it goes terminal ``failed`` with the captured traceback."""
+        t.error = err
+        t.traceback = "".join(traceback_mod.format_exception(
+            type(err), err, err.__traceback__))
+        if t.retries < self.max_retries:
+            t.retries += 1
+            step0, state0 = t._retry_ckpt
+            t.step = int(step0)
+            t._state = {f: jnp.asarray(a) for f, a in state0.items()}
+            t.status = "queued"
+            if self.retry_backoff > 0:
+                t._not_before = time.monotonic() + \
+                    self.retry_backoff * (2 ** (t.retries - 1))
+            if t._solo is None:
+                self._place(t, self._programs[t.program_name])
+            # solo tickets stay in _solo_active and re-pump in place
+        else:
+            t.status = "failed"
+
+    def _replay_fleet(self, bucket: _Bucket) -> FleetProgram:
+        """The bucket's batch-1 attribution fleet: same program, same
+        traced-const story (a fresh ``BatchedConst`` placeholder per
+        sweep), so replays are *bit-identical* to the bucket's vmapped
+        path — a static-const solo compile would drift ~1 ulp through
+        XLA constant folding and break the healthy-members-exact
+        contract."""
+        if bucket.replay is None:
+            program = self._programs[bucket.fleet.program.name]
+            sweeps = {
+                k: BatchedConst(np.zeros((1,) + row.shape[1:], row.dtype))
+                for k, row in bucket.const_rows.items()}
+            bucket.replay = _override_consts(program, sweeps).compile(
+                self.target, grid_shape=bucket.fleet.grid_shape,
+                mesh=self._mesh, shard_axis=self._shard_axis,
+                overlap=self._overlap).vmap(1)
+        return bucket.replay
+
+    def _attribute_bucket_fault(self, bucket: _Bucket, active, chunk: int,
+                                err: BaseException):
+        """A fault while stepping the whole bucket: attribute blame by
+        replaying each active ticket through the batch-1 fleet.  Tickets
+        whose replay raises are failed/retried with *their* exception;
+        tickets whose replay succeeds advance exactly as a fault-free
+        pump would have (one-shot faults therefore recover every
+        ticket)."""
+        fields = bucket.fleet.program.fields
+        try:
+            replay = self._replay_fleet(bucket)
+        except Exception:
+            # cannot even build the replay fleet (e.g. a persistent
+            # compile-time fault): blame every active ticket with the
+            # original bucket error
+            for slot, t in active:
+                self._retire(bucket, slot, t)
+                self._fail_ticket(t, err)
+            return
+        for slot, t in active:
+            st1 = {f: t._state[f][None] for f in fields}
+            c1 = {k: jnp.asarray(bucket.const_rows[k][slot:slot + 1])
+                  for k in bucket.dyn_names}
+            try:
+                out = replay.run(st1, chunk, consts=c1)
+            except Exception as e2:
+                self._retire(bucket, slot, t)
+                self._fail_ticket(t, e2)
+                continue
+            member = {f: out[f][0] for f in fields}
+            bucket.state = {f: bucket.state[f].at[slot].set(member[f])
+                            for f in fields}
+            if self._health_due(t, chunk):
+                diag = diagnose(self.health, member)
+                if diag:
+                    e3 = HealthError.of(
+                        diag[0], member=slot,
+                        step_range=(t.step, t.step + chunk), ticket=t.id)
+                    self._retire(bucket, slot, t)
+                    self._fail_ticket(t, e3)
+                    continue
+            self._advance_ticket(t, chunk, member)
+            if t.done:
+                self._retire(bucket, slot, t)
+
     def _pump_bucket(self, bucket: _Bucket) -> bool:
-        active = bucket.active()
+        active = [(i, t) for i, t in bucket.active() if self._ready(t)]
         if not active:
             return False
         chunk = self._chunk_for([t for _, t in active])
         consts = {k: jnp.asarray(v)
                   for k, v in bucket.const_rows.items()}
-        bucket.state = bucket.fleet.run(bucket.state, chunk,
-                                        consts=consts)
+        for _, t in active:
+            t.status = "running"
+        try:
+            new_state = bucket.fleet.run(bucket.state, chunk,
+                                         consts=consts)
+        except Exception as err:
+            self._attribute_bucket_fault(bucket, active, chunk, err)
+            return True
+        bucket.state = new_state
+        sick: dict[int, Any] = {}
+        if self.health is not None:
+            due = {i for i, t in active if self._health_due(t, chunk)}
+            if due:
+                diag = diagnose(self.health, bucket.state,
+                                ensemble=bucket.fleet.batch)
+                sick = {i: d for i, d in diag.items() if i in due}
         for slot, t in active:
+            if slot in sick:
+                err = HealthError.of(
+                    sick[slot], member=slot,
+                    step_range=(t.step, t.step + chunk), ticket=t.id)
+                self._retire(bucket, slot, t)
+                self._fail_ticket(t, err)
+                continue
             self._advance_ticket(
                 t, chunk,
                 {f: bucket.state[f][slot]
                  for f in bucket.fleet.program.fields})
             if t.done:
-                bucket.slots[slot] = None
-                t._slot = None
-                if bucket.pending:
-                    self._occupy(bucket, slot, bucket.pending.popleft())
+                self._retire(bucket, slot, t)
         return True
 
     def _pump_solo(self, t: Ticket) -> bool:
-        if t.done:
+        if t.finished or not self._ready(t):
             return False
         chunk = self._chunk_for([t])
-        state = t._solo.run(dict(t._state), chunk)
+        t.status = "running"
+        try:
+            state = t._solo.run(dict(t._state), chunk)
+        except Exception as err:
+            self._fail_ticket(t, err)
+            return True
+        if self._health_due(t, chunk):
+            diag = diagnose(self.health, state)
+            if diag:
+                err = HealthError.of(
+                    diag[0], step_range=(t.step, t.step + chunk),
+                    ticket=t.id)
+                self._fail_ticket(t, err)
+                return True
         self._advance_ticket(t, chunk, dict(state))
         return True
+
+    def _run_chaos(self):
+        """Run installed fault-injection hooks (see :meth:`inject`);
+        hooks returning True retire."""
+        if not self._chaos:
+            return
+        self._chaos = [fn for fn in self._chaos if not fn(self)]
+
+    def inject(self, hook: Callable[["FleetDriver"], bool]) -> None:
+        """Install a chaos hook: ``hook(driver) -> retired?`` runs under
+        the driver lock at the top of every pump round.  The
+        deterministic fault-injection surface — see
+        :mod:`repro.core.faults` for ready-made hooks (NaN poisoning,
+        pump-thread crashes).  Test/drill harness only: hooks may mutate
+        driver internals and may raise."""
+        with self._lock:
+            self._chaos.append(hook)
 
     def pump(self, rounds: int = 1) -> bool:
         """Advance every bucket (and solo ticket) by up to ``rounds``
         launch chunks.  Returns whether any ticket progressed — the
         inline spelling of the background loop, and the unit the
-        checkpoint cadence counts."""
+        checkpoint cadence counts.  A fault while stepping fails (or
+        retries) only the offending ticket(s); pump itself only raises
+        on driver-level errors (which the background loop records and
+        re-raises from ``drain``/``stream``/``stop``)."""
         progressed_any = False
         with self._lock:
             for _ in range(max(1, int(rounds))):
+                self._run_chaos()
                 progressed = False
                 for bucket in self._buckets.values():
                     progressed |= self._pump_bucket(bucket)
                 for t in list(self._solo_active):
                     progressed |= self._pump_solo(t)
-                    if t.done:
+                    if t.finished:
                         self._solo_active.remove(t)
                 if progressed:
                     self._pumps += 1
@@ -580,54 +859,104 @@ class FleetDriver:
         return progressed_any
 
     def _unfinished(self):
-        return [t for t in self._tickets.values() if not t.done]
+        return [t for t in self._tickets.values() if not t.finished]
+
+    def _backoff_wait(self) -> float | None:
+        """Seconds until the earliest backoff-gated ticket is ready, or
+        ``None`` when nothing is waiting on backoff."""
+        now = time.monotonic()
+        waits = [t._not_before - now for t in self._tickets.values()
+                 if not t.finished and t._not_before > now]
+        return max(0.0, min(waits)) if waits else None
 
     # -- service surface ---------------------------------------------------
 
+    def _raise_loop_error(self):
+        """Re-raise (once) an exception the background pump thread died
+        with — the first ``drain``/``stream``/``stop`` caller gets it."""
+        if self._loop_error is not None:
+            err, self._loop_error = self._loop_error, None
+            raise err
+
     def poll(self, ticket: Ticket) -> dict:
         """Non-blocking progress: ``{"id", "step", "nsteps", "done",
-        "state"}`` (``state`` = the member's latest fields)."""
+        "status", "retries", "error", "traceback", "state"}`` (``state``
+        = the member's latest stepped fields — a diagnosed ticket keeps
+        its state from before the chunk that failed it, so with
+        ``health.every=1`` a failed ticket's state is always its last
+        healthy one; ``error``/``traceback`` the captured cause of a
+        failed or retried ticket).  When the background pump thread
+        itself died, ``driver_error`` carries its exception (poll never
+        raises)."""
         with self._lock:
-            return {"id": ticket.id, "step": ticket.step,
-                    "nsteps": ticket.nsteps, "done": ticket.done,
-                    "state": dict(ticket._state)}
+            out = {"id": ticket.id, "step": ticket.step,
+                   "nsteps": ticket.nsteps, "done": ticket.done,
+                   "status": ticket.status, "retries": ticket.retries,
+                   "error": ticket.error, "traceback": ticket.traceback,
+                   "state": dict(ticket._state)}
+            if self._loop_error is not None:
+                out["driver_error"] = self._loop_error
+            return out
 
     def stream(self, ticket: Ticket, every: int = 1):
         """Iterate ``(step, state)`` snapshots every ``every`` member
         steps (plus the final step).  Call before the ticket advances
         past its first mark.  Without a background thread the generator
-        pumps the driver inline; with one it blocks on progress."""
+        pumps the driver inline; with one it blocks on progress.
+        Raises the ticket's captured error when it fails terminally,
+        and re-raises a background-thread crash."""
         if int(every) < 1:
             raise ValueError(f"every must be >= 1, got {every}")
         with self._lock:
             ticket._stream_every = int(every)
         while True:
             with self._lock:
+                self._raise_loop_error()
                 if ticket._snapshots:
                     yield ticket._snapshots.popleft()
                     continue
                 if ticket.done:
                     return
+                if ticket.failed:
+                    raise ticket.error if isinstance(
+                        ticket.error, BaseException) else RuntimeError(
+                        f"ticket {ticket.id} failed: {ticket.error}")
                 if self._thread is not None:
                     self._cond.wait(timeout=1.0)
                     continue
             if not self.pump():
+                with self._lock:
+                    wait = self._backoff_wait()
+                if wait is not None:
+                    time.sleep(min(wait, 0.5) + 1e-3)
+                    continue
                 raise RuntimeError(
                     f"fleet driver made no progress streaming "
                     f"{ticket.id} (step {ticket.step}/{ticket.nsteps})")
 
     def drain(self) -> dict[str, dict]:
-        """Run until every submitted ticket completes; returns
-        ``{ticket_id: final_state}``.  Pumps inline unless the
-        background loop is running (then it waits on it)."""
+        """Run until every submitted ticket reaches a terminal state
+        (``done`` or ``failed``); returns ``{ticket_id: final_state}``
+        — a failed ticket's entry is its state from before the chunk
+        that failed it (its cause is on ``poll(t)["error"]``).  Pumps
+        inline unless the
+        background loop is running (then it waits on it, re-raising
+        any exception that thread died with)."""
         while True:
             with self._lock:
+                self._raise_loop_error()
                 if not self._unfinished():
                     break
                 if self._thread is not None:
                     self._cond.wait(timeout=1.0)
                     continue
             if not self.pump():
+                with self._lock:
+                    wait = self._backoff_wait()
+                if wait is not None:
+                    # everything left is gated on retry backoff
+                    time.sleep(min(wait, 0.5) + 1e-3)
+                    continue
                 stuck = [t.id for t in self._unfinished()]
                 raise RuntimeError(
                     f"fleet driver made no progress with unfinished "
@@ -639,14 +968,25 @@ class FleetDriver:
     # -- background loop ---------------------------------------------------
 
     def start(self):
-        """Run the step loop on a daemon thread until :meth:`stop`."""
+        """Run the step loop on a daemon thread until :meth:`stop`.
+        An exception escaping :meth:`pump` is recorded on the driver,
+        every waiter is woken, and the error re-raises from
+        ``drain``/``stream``/``stop`` (``poll`` reports it) — it is
+        never swallowed with the thread."""
         if self._thread is not None:
             return
         self._stop.clear()
 
         def loop():
             while not self._stop.is_set():
-                if not self.pump():
+                try:
+                    progressed = self.pump()
+                except BaseException as err:
+                    with self._lock:
+                        self._loop_error = err
+                        self._cond.notify_all()
+                    return
+                if not progressed:
                     with self._lock:
                         self._cond.wait(timeout=0.05)
 
@@ -655,7 +995,8 @@ class FleetDriver:
         self._thread.start()
 
     def stop(self):
-        """Stop the background loop (tickets keep their progress)."""
+        """Stop the background loop (tickets keep their progress).
+        Re-raises an exception the loop died with, after cleanup."""
         if self._thread is None:
             return
         self._stop.set()
@@ -665,6 +1006,7 @@ class FleetDriver:
         self._thread = None
         if self._ckpt is not None:
             self._ckpt.wait()
+        self._raise_loop_error()
 
     # -- durability --------------------------------------------------------
 
@@ -682,6 +1024,9 @@ class FleetDriver:
                 "grid_shape": list(t.grid_shape),
                 "fields": list(t._state),
                 "has_rng": t.rng is not None,
+                "status": t.status,
+                "retries": int(t.retries),
+                "error": None if t.error is None else str(t.error),
                 "consts": {k: {"value": np.asarray(v).tolist(),
                                "dtype": str(np.asarray(v).dtype)}
                            for k, v in t.consts.items()},
@@ -693,6 +1038,11 @@ class FleetDriver:
         tree, extra = self._snapshot_tree()
         self._ckpt.save(self._pumps, tree, extra=extra,
                         blocking=blocking)
+        # everything just snapshotted is durable — retries of a future
+        # fault roll back here, not to the submit-time state
+        for t in self._tickets.values():
+            if not t.finished:
+                t._retry_ckpt = (int(t.step), dict(t._state))
 
     def checkpoint(self, blocking: bool = True):
         """Snapshot every ticket now (atomic, checksummed)."""
@@ -708,18 +1058,43 @@ class FleetDriver:
         """Rebuild a driver from the latest checkpoint under
         ``checkpoint_dir``: every in-flight ticket resumes at its saved
         step (ids, step counters, RNG keys and const sweeps restored;
-        completed tickets come back completed).  ``programs`` maps
-        program name → :class:`Program` (or a single Program when only
-        one was served) — graphs are code, not data, so the caller
-        re-supplies them.  Deterministic stepping makes resumed
-        trajectories bit-identical to uninterrupted ones."""
+        completed tickets come back completed, failed ones failed).
+        ``programs`` maps program name → :class:`Program` (or a single
+        Program when only one was served) — graphs are code, not data,
+        so the caller re-supplies them.  Deterministic stepping makes
+        resumed trajectories bit-identical to uninterrupted ones.
+
+        Every candidate snapshot is sha256-verified against its
+        manifest; a torn or corrupted newest directory is *skipped*
+        (with a warning) in favour of the newest valid one under the
+        keep-last-K retention — only when no snapshot verifies does
+        restore raise ``IOError``."""
+        import warnings
+
         from repro.checkpoint.store import (_load_manifest, _step_dir,
-                                            latest_step,
-                                            restore_checkpoint)
-        step = latest_step(checkpoint_dir)
-        if step is None:
+                                            checkpoint_steps,
+                                            restore_checkpoint,
+                                            verify_checkpoint)
+        steps = checkpoint_steps(checkpoint_dir)
+        if not steps:
             raise FileNotFoundError(
                 f"no fleet checkpoints under {checkpoint_dir}")
+        step, skipped = None, []
+        for cand in reversed(steps):
+            if verify_checkpoint(_step_dir(checkpoint_dir, cand)):
+                step = cand
+                break
+            skipped.append(cand)
+        if step is None:
+            raise IOError(
+                f"no valid fleet checkpoint under {checkpoint_dir}: all "
+                f"of step(s) {skipped} failed integrity verification")
+        if skipped:
+            warnings.warn(
+                f"fleet restore: checkpoint step(s) {skipped} under "
+                f"{checkpoint_dir} failed integrity verification; "
+                f"falling back to step {step}", RuntimeWarning,
+                stacklevel=2)
         extra = _load_manifest(_step_dir(checkpoint_dir,
                                          step)).get("extra", {})
         meta = extra.get("tickets", {})
@@ -743,7 +1118,7 @@ class FleetDriver:
                 entry["rng"] = 0
             tree_like["tickets"][tid] = entry
         tree, _, _ = restore_checkpoint(checkpoint_dir, tree_like,
-                                        step=step, verify=True)
+                                        step=step, verify=False)
 
         with drv._lock:
             for tid in sorted(meta, key=lambda s: int(s[1:])):
@@ -758,11 +1133,20 @@ class FleetDriver:
                             for f in m["fields"]},
                            consts, saved.get("rng"),
                            step=int(saved["step"]))
+                t.retries = int(m.get("retries", 0))
                 drv._tickets[tid] = t
                 drv._programs.setdefault(program.name, program)
                 drv._counter = max(drv._counter, int(tid[1:]))
-                if t.step >= t.nsteps:
-                    t.done = True
+                if m.get("status") == "failed":
+                    # terminal at snapshot time — comes back failed (the
+                    # live exception object is gone; keep the message)
+                    t.status = "failed"
+                    t.error = RuntimeError(m.get("error") or
+                                           f"ticket {tid} failed before "
+                                           f"the checkpoint")
+                    t.bucket_id = str(saved["bucket"])
+                elif t.step >= t.nsteps:
+                    t.status = "done"
                     t.bucket_id = str(saved["bucket"])
                 else:
                     drv._place(t, program)

@@ -927,7 +927,7 @@ class CompiledProgram:
         return self._wrap(state, outs)
 
     def run(self, state: Mapping[str, jax.Array], nsteps: int, *,
-            donate: bool = False):
+            donate: bool = False, health=None):
         """``nsteps`` steps under one jitted ``lax.scan``.
 
         ``donate=True`` donates the input field buffers so XLA aliases
@@ -936,8 +936,19 @@ class CompiledProgram:
         the ping-pong).  Compiled once per ``(nsteps, donate)``.
         Accepts a plain dict or a :class:`ProgramState`; returns the
         same kind.
+
+        ``health``: an optional :class:`~repro.core.health.HealthPolicy`
+        — the run splits into ``health.every``-step chunks (the same
+        jitted scan iterated, so the trajectory is bit-identical to an
+        unguarded run) with a host-side NaN/Inf/norm check between
+        chunks; a violation raises
+        :class:`~repro.core.health.HealthError` diagnosing the field
+        and the ``every``-wide step range it appeared in.
         """
         self._require_unbatched("CompiledProgram.run")
+        if health is not None:
+            return self._run_guarded(state, int(nsteps), health,
+                                     donate=donate)
         if nsteps <= 0:
             return self._wrap(state, tuple(state[f]
                                            for f in self.program.fields))
@@ -956,6 +967,25 @@ class CompiledProgram:
             self._run_cache[key] = fn
         outs = fn(self._as_tuple(state))
         return self._wrap(state, outs)
+
+    def _run_guarded(self, state, nsteps: int, health, *,
+                     donate: bool = False):
+        """Chunked run with health checks between chunks (see ``run``)."""
+        from .health import check
+        health.select_fields(self.program.fields)   # fail fast on typos
+        done = 0
+        while done < nsteps:
+            chunk = min(health.every, nsteps - done)
+            # donate only from the second chunk on: the first chunk's
+            # inputs are the caller's arrays, which donate= promises to
+            # consume only across the whole call, not per chunk — but an
+            # intermediate chunk's inputs are ours to alias away.
+            state = self.run(state, chunk, donate=donate and done > 0)
+            check(health, state,
+                  step_range=(done, done + chunk),
+                  where=f"program {self.program.name!r}")
+            done += chunk
+        return state
 
     def vmap(self, batch: int) -> "repro.core.fleet.FleetProgram":  # noqa: F821
         """Lift this compiled step over a leading ensemble axis: a

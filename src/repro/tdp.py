@@ -33,6 +33,10 @@ ensemble serving    ``compiled.vmap(batch)`` / :class:`FleetDriver` —
                     batched trajectories behind submit/poll/stream,
                     ``BatchedConst`` parameter sweeps, durable tickets
                     (:mod:`repro.core.fleet`)
+failure handling    :class:`HealthPolicy` guards (``run(...,
+                    health=...)``), ticket status/retry/rollback on the
+                    driver, :mod:`tdp.faults <repro.core.faults>` chaos
+                    injectors (:mod:`repro.core.health`)
 ==================  =====================================================
 """
 from repro.core.target import (  # noqa: F401
@@ -102,6 +106,13 @@ from repro.core.fleet import (  # noqa: F401
     FleetProgram,
     Ticket,
 )
+from repro.core import faults, health  # noqa: F401  (tdp.faults, tdp.health)
+from repro.core.faults import InjectedFault  # noqa: F401
+from repro.core.health import (  # noqa: F401
+    Diagnosis,
+    HealthError,
+    HealthPolicy,
+)
 from repro.core.state import ProgramState, validate_field  # noqa: F401
 from repro.core.memory import (  # noqa: F401
     BatchedConst,
@@ -135,4 +146,6 @@ __all__ = [
     "copy_from_target", "sync_target", "target_free", "target_malloc",
     "fleet", "FleetProgram", "FleetDriver", "Ticket",
     "ProgramState", "BatchedConst", "validate_field",
+    "health", "faults", "HealthPolicy", "HealthError", "Diagnosis",
+    "InjectedFault",
 ]

@@ -133,6 +133,22 @@ class TestCheckRegression:
         assert rep["regressions"] == [] and rep["matched"] == 0
         assert rep["unmatched"] == [("b", "v")]
 
+    def test_compare_health_identity(self):
+        """Guarded fleet variants never gate unguarded ones, and a
+        baseline predating the ``health`` field still matches fresh
+        guard-off records (absent normalises to "off")."""
+        from benchmarks.check_regression import compare
+        base = {"fleet": {"grid": [4], "variants": {
+            "batch8": {"median_s": 1.0, "executor": "xla", "batch": 8}}}}
+        fresh = {"fleet": {"grid": [4], "variants": {
+            "batch8": {"median_s": 1.0, "executor": "xla", "batch": 8,
+                       "health": "off"},
+            "batch8_guarded": {"median_s": 3.0, "executor": "xla",
+                               "batch": 8, "health": "every1"}}}}
+        rep = compare(base, fresh)
+        assert rep["matched"] == 1 and rep["regressions"] == []
+        assert ("fleet", "batch8_guarded") in rep["unmatched"]
+
     def test_compare_min_seconds_skips_timer_noise(self):
         from benchmarks.check_regression import compare
         base = {"b": {"grid": [], "variants": {

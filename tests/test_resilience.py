@@ -1,0 +1,473 @@
+"""tdp.resilience: chaos suite — seeded fault schedules against the
+fleet service.
+
+Every fault here is *deterministic* (an explicit schedule from
+:mod:`repro.core.faults`: fail the executor's k-th invocation, poison a
+named field at member step s, damage checkpoint step n, kill the pump
+thread), so each test proves one recovery contract:
+
+* health guards diagnose the field / kind / member / step range, and a
+  quarantined member never perturbs the others — healthy trajectories
+  stay **bit-identical** to a fault-free run;
+* a fault while pumping a shared bucket fails only the offending
+  ticket(s): blame is attributed by batch-1 replays (traced consts, so
+  replays are bit-exact, and a one-shot fault recovers *every* ticket);
+* failed tickets retry up to ``max_retries``, rolling back to their
+  last snapshot and finishing bit-exactly;
+* background pump-thread exceptions surface through
+  ``drain``/``stream``/``stop``/``poll`` instead of vanishing;
+* restore falls back past a corrupted newest snapshot to the newest
+  checksum-valid one under keep-last-K retention.
+"""
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tdp
+from repro.checkpoint.store import checkpoint_steps, latest_step
+from repro.core import faults
+
+
+# ---------------------------------------------------------------------------
+# fixtures (the test_fleet.py demo program: 2 stages, sweepable tau)
+# ---------------------------------------------------------------------------
+
+@tdp.kernel(fields=[tdp.field(2)], out=2)
+def _relax(x, tau=1.0, w=None):
+    return x - (x - w[:, None]) / tau
+
+
+@tdp.kernel(fields=[tdp.field(2), tdp.field(2)], out=2)
+def _mix(x, y, eps=0.1):
+    return x + eps * (y - x)
+
+
+GRID = (6, 5)
+W = tdp.TargetConst(np.array([0.25, 0.75], np.float32))
+TAUS = np.array([0.7, 1.0, 1.3], np.float32)
+
+
+def make_prog(tau_const, name="demo"):
+    return tdp.Program(name, [
+        tdp.stage(_relax, ["a"], ["tmp"],
+                  consts={"tau": tau_const, "w": W}),
+        tdp.stage(_mix, ["a", "tmp"], ["a"], consts={"eps": 0.05}),
+    ], fields=["a"])
+
+
+def members(n, seed=0, grid=GRID):
+    rng = np.random.default_rng(seed)
+    return [{"a": jnp.asarray(
+        rng.normal(size=(2,) + grid).astype(np.float32))}
+        for _ in range(n)]
+
+
+PROG = make_prog(tdp.TargetConst(np.float32(1.0)))
+
+
+def fault_free_reference(ms, nsteps=8):
+    """Final states of a fault-free swept fleet run (the bit-identity
+    reference every chaos test compares healthy members against)."""
+    drv = tdp.FleetDriver("xla", batch=len(ms))
+    ts = [drv.submit(PROG, {"state": ms[i], "consts": {"tau": TAUS[i]}},
+                     nsteps) for i in range(len(ms))]
+    final = drv.drain()
+    return [np.asarray(final[t.id]["a"]) for t in ts]
+
+
+# ---------------------------------------------------------------------------
+# HealthPolicy / diagnose / guarded runs
+# ---------------------------------------------------------------------------
+
+class TestHealthPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="every must be >= 1"):
+            tdp.HealthPolicy(every=0)
+        with pytest.raises(ValueError, match="max_norm must be positive"):
+            tdp.HealthPolicy(max_norm=-1.0)
+        with pytest.raises(ValueError, match="enables no checks"):
+            tdp.HealthPolicy(nan=False, inf=False)
+        with pytest.raises(ValueError, match="'b'.*does not carry"):
+            tdp.HealthPolicy(fields=("b",)).select_fields(["a"])
+
+    def test_diagnose_kinds_and_members(self):
+        from repro.core.health import diagnose
+        pol = tdp.HealthPolicy(max_norm=10.0)
+        st = {"a": np.array([[1.0, 2.0], [np.nan, 1.0],
+                             [np.inf, 1.0], [99.0, 1.0]], np.float32)}
+        diag = diagnose(pol, st, ensemble=4)
+        assert set(diag) == {1, 2, 3}
+        assert diag[1].kind == "nan" and diag[2].kind == "inf"
+        assert diag[3].kind == "norm" and diag[3].value == 99.0
+        # single-member states report under index 0
+        assert diagnose(pol, {"a": np.float32([np.nan])})[0].kind == "nan"
+        assert diagnose(pol, {"a": np.float32([1.0])}) == {}
+        with pytest.raises(ValueError, match="leading extent"):
+            diagnose(pol, st, ensemble=3)
+
+    def test_error_carries_diagnosis(self):
+        from repro.core.health import check
+        pol = tdp.HealthPolicy(every=2)
+        with pytest.raises(tdp.HealthError) as ei:
+            check(pol, {"g": np.float32([[np.nan]])}, ensemble=1,
+                  step_range=(4, 6), where="unit")
+        e = ei.value
+        assert (e.field, e.kind, e.member, e.step_range) == \
+            ("g", "nan", 0, (4, 6))
+        assert "field 'g' contains NaN" in str(e)
+        assert "steps [4, 6)" in str(e)
+
+    def test_guarded_run_bit_identical_and_raises(self):
+        cp = PROG.compile("xla", grid_shape=GRID)
+        m = members(1)[0]
+        pol = tdp.HealthPolicy(every=3)
+        guarded = cp.run(dict(m), 8, health=pol)
+        plain = cp.run(dict(m), 8)
+        np.testing.assert_array_equal(np.asarray(guarded["a"]),
+                                      np.asarray(plain["a"]))
+        with pytest.raises(tdp.HealthError, match="steps \\[0, 3\\)"):
+            cp.run({"a": m["a"].at[(0,) * 3].set(np.nan)}, 8, health=pol)
+        with pytest.raises(ValueError, match="does not carry"):
+            cp.run(dict(m), 2, health=tdp.HealthPolicy(fields=("nope",)))
+
+    def test_guarded_fleet_run_attributes_member(self):
+        fleet = PROG.compile("xla", grid_shape=GRID).vmap(3)
+        ms = members(3)
+        s = tdp.ProgramState.stack(ms)
+        pol = tdp.HealthPolicy(every=2)
+        out = fleet.run(s, 6, health=pol)
+        ref = fleet.run(s, 6)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(ref["a"]))
+        poisoned = s.replace(a=s["a"].at[(1,) + (0,) * 3].set(np.inf))
+        with pytest.raises(tdp.HealthError) as ei:
+            fleet.run(poisoned, 6, health=pol)
+        # the seeded Inf turns into NaN through the relax arithmetic
+        # (inf - inf); either way member 1 is the one attributed
+        assert ei.value.member == 1 and ei.value.kind in ("nan", "inf")
+        assert ei.value.step_range == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# ticket lifecycle + NaN quarantine
+# ---------------------------------------------------------------------------
+
+class TestQuarantine:
+    def test_status_walk_and_poll_keys(self):
+        drv = tdp.FleetDriver("xla", batch=2)
+        t = drv.submit(PROG, {"state": members(1)[0]}, 3)
+        assert t.status == "running" and not t.finished
+        drv.drain()
+        p = drv.poll(t)
+        assert p["status"] == "done" and p["retries"] == 0
+        assert p["error"] is None and p["traceback"] is None
+        assert "status='done'" in repr(t)
+
+    def test_nan_member_quarantined_healthy_members_exact(self):
+        ms = members(3)
+        refs = fault_free_reference(ms, 8)
+        drv = tdp.FleetDriver("xla", batch=3,
+                              health=tdp.HealthPolicy(every=2))
+        ts = [drv.submit(PROG, {"state": ms[i],
+                                "consts": {"tau": TAUS[i]}}, 8)
+              for i in range(3)]
+        drv.inject(faults.nan_at_step(ts[1].id, "a", 4))
+        final = drv.drain()
+        p = drv.poll(ts[1])
+        assert p["status"] == "failed"
+        err = p["error"]
+        assert isinstance(err, tdp.HealthError)
+        assert err.ticket == ts[1].id and err.field == "a"
+        assert err.kind == "nan" and err.step_range is not None
+        assert "HealthError" in p["traceback"]
+        # the survivors are bit-identical to the fault-free run
+        for i in (0, 2):
+            assert drv.poll(ts[i])["status"] == "done"
+            np.testing.assert_array_equal(
+                np.asarray(final[ts[i].id]["a"]), refs[i])
+        # the freed slot is reusable: a new ticket completes in-bucket
+        t_new = drv.submit(PROG, {"state": ms[0],
+                                  "consts": {"tau": TAUS[0]}}, 8)
+        final2 = drv.drain()
+        np.testing.assert_array_equal(
+            np.asarray(final2[t_new.id]["a"]), refs[0])
+
+    def test_every1_failed_state_stays_healthy(self):
+        """With a per-chunk guard (``every=1``) no unchecked advance
+        exists, so the failed ticket's stored state is its last healthy
+        chunk (the drain() entry is finite)."""
+        drv = tdp.FleetDriver("xla", batch=2,
+                              health=tdp.HealthPolicy(every=1))
+        t = drv.submit(PROG, {"state": members(1)[0]}, 8)
+        drv.inject(faults.nan_at_step(t.id, "a", 4))
+        final = drv.drain()
+        assert drv.poll(t)["status"] == "failed" and t.step == 4
+        assert np.isfinite(np.asarray(final[t.id]["a"])).all()
+
+    def test_stream_raises_failed_tickets_cause(self):
+        drv = tdp.FleetDriver("xla", batch=2,
+                              health=tdp.HealthPolicy(every=1))
+        t = drv.submit(PROG, {"state": members(1)[0]}, 10)
+        drv.inject(faults.nan_at_step(t.id, "a", 2))
+        with pytest.raises(tdp.HealthError):
+            for _ in drv.stream(t, every=2):
+                pass
+
+    def test_driver_health_validates_fields_at_submit(self):
+        drv = tdp.FleetDriver(
+            "xla", batch=2, health=tdp.HealthPolicy(fields=("ghost",)))
+        with pytest.raises(ValueError, match="'ghost'.*does not step"):
+            drv.submit(PROG, {"state": members(1)[0]}, 2)
+
+    def test_solo_fallback_quarantine(self):
+        """The unbucketed (per-member) path fails through the same
+        lifecycle."""
+        drv = tdp.FleetDriver("xla", batch=2, grid_shapes=[GRID],
+                              health=tdp.HealthPolicy(every=1))
+        odd = (4, 4)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            t = drv.submit(PROG, {"state": {
+                "a": jnp.ones((2,) + odd, np.float32)}}, 6)
+        drv.inject(faults.nan_at_step(t.id, "a", 2))
+        drv.drain()
+        assert drv.poll(t)["status"] == "failed"
+        assert isinstance(t.error, tdp.HealthError)
+
+
+# ---------------------------------------------------------------------------
+# executor faults: blame attribution via batch-1 replays
+# ---------------------------------------------------------------------------
+
+class TestExecutorFaults:
+    def test_one_shot_fault_recovers_every_ticket(self):
+        ms = members(3)
+        refs = fault_free_reference(ms, 8)
+        handle = faults.register_failing_executor(
+            "flaky1", base="xla", fail_on=1, times=1)
+        try:
+            drv = tdp.FleetDriver("flaky1", batch=3)
+            ts = [drv.submit(PROG, {"state": ms[i],
+                                    "consts": {"tau": TAUS[i]}}, 8)
+                  for i in range(3)]
+            final = drv.drain()
+            assert handle.calls > 1          # the fault actually fired
+            for i in range(3):
+                assert drv.poll(ts[i])["status"] == "done"
+                np.testing.assert_array_equal(
+                    np.asarray(final[ts[i].id]["a"]), refs[i])
+        finally:
+            faults.unregister_failing_executor("flaky1")
+
+    def test_persistent_fault_fails_with_cause(self):
+        faults.register_failing_executor(
+            "dead1", base="xla", fail_on=1, times=float("inf"))
+        try:
+            drv = tdp.FleetDriver("dead1", batch=2)
+            t = drv.submit(PROG, {"state": members(1)[0]}, 4)
+            final = drv.drain()               # terminates, doesn't hang
+            p = drv.poll(t)
+            assert p["status"] == "failed"
+            assert isinstance(p["error"], tdp.InjectedFault)
+            assert "InjectedFault" in p["traceback"]
+            assert t.id in final              # last healthy state returned
+        finally:
+            faults.unregister_failing_executor("dead1")
+
+    def test_failing_executor_schedule_validation(self):
+        with pytest.raises(ValueError, match="1-based"):
+            faults.register_failing_executor("x", fail_on=0)
+        with pytest.raises(ValueError, match="times"):
+            faults.register_failing_executor("x", times=0)
+
+
+# ---------------------------------------------------------------------------
+# retry with rollback
+# ---------------------------------------------------------------------------
+
+class TestRetry:
+    def test_one_shot_nan_retries_bit_exact(self):
+        ms = members(3)
+        refs = fault_free_reference(ms, 8)
+        drv = tdp.FleetDriver("xla", batch=3,
+                              health=tdp.HealthPolicy(every=1),
+                              max_retries=1)
+        ts = [drv.submit(PROG, {"state": ms[i],
+                                "consts": {"tau": TAUS[i]}}, 8)
+              for i in range(3)]
+        drv.inject(faults.nan_at_step(ts[1].id, "a", 3))
+        final = drv.drain()
+        p = drv.poll(ts[1])
+        assert p["status"] == "done" and p["retries"] == 1
+        assert p["error"] is not None         # kept for observability
+        for i in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(final[ts[i].id]["a"]), refs[i])
+
+    def test_retry_resumes_from_last_checkpoint(self, tmp_path):
+        """The rollback point tracks the checkpoint cadence: a fault
+        after a snapshot retries from the snapshot, not from submit."""
+        ms = members(2)
+        refs = fault_free_reference(ms, 10)
+        drv = tdp.FleetDriver("xla", batch=2,
+                              checkpoint_dir=str(tmp_path / "ck"),
+                              checkpoint_every=2,
+                              health=tdp.HealthPolicy(every=1),
+                              max_retries=1)
+        ts = [drv.submit(PROG, {"state": ms[i],
+                                "consts": {"tau": TAUS[i]}}, 10)
+              for i in range(2)]
+        drv.pump(6)                           # cadence refreshed at 2,4,6
+        assert ts[0]._retry_ckpt[0] == 6
+        drv.inject(faults.nan_at_step(ts[0].id, "a", 8))
+        final = drv.drain()
+        assert drv.poll(ts[0])["status"] == "done"
+        assert drv.poll(ts[0])["retries"] == 1
+        for i in range(2):
+            np.testing.assert_array_equal(
+                np.asarray(final[ts[i].id]["a"]), refs[i])
+
+    def test_persistent_divergence_exhausts_retries(self):
+        drv = tdp.FleetDriver("xla", batch=2,
+                              health=tdp.HealthPolicy(every=1),
+                              max_retries=2)
+        # NaN in the *submitted* state: every retry rolls back to a
+        # poisoned snapshot and re-diverges deterministically
+        bad = {"a": members(1)[0]["a"].at[(0,) * 3].set(np.nan)}
+        t = drv.submit(PROG, {"state": bad}, 4)
+        drv.drain()
+        p = drv.poll(t)
+        assert p["status"] == "failed" and p["retries"] == 2
+
+    def test_retry_backoff_gates_and_completes(self):
+        drv = tdp.FleetDriver("xla", batch=2,
+                              health=tdp.HealthPolicy(every=1),
+                              max_retries=1, retry_backoff=0.05)
+        t = drv.submit(PROG, {"state": members(1)[0]}, 6)
+        drv.inject(faults.nan_at_step(t.id, "a", 2))
+        t0 = time.perf_counter()
+        drv.drain()                           # sleeps through the gate
+        assert drv.poll(t)["status"] == "done"
+        assert time.perf_counter() - t0 >= 0.05
+
+
+# ---------------------------------------------------------------------------
+# background-thread error surfacing (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+class TestLoopErrorSurfacing:
+    def test_drain_reraises_pump_thread_crash(self):
+        drv = tdp.FleetDriver("xla", batch=2)
+        drv.submit(PROG, {"state": members(1)[0]}, 1000)
+        drv.inject(faults.raise_in_pump(at_pump=2))
+        drv.start()
+        with pytest.raises(tdp.InjectedFault, match="pump round 2"):
+            drv.drain()
+        drv.stop()                            # already surfaced: no raise
+
+    def test_poll_reports_driver_error_nonraising(self):
+        drv = tdp.FleetDriver("xla", batch=2)
+        t = drv.submit(PROG, {"state": members(1)[0]}, 1000)
+        drv.inject(faults.raise_in_pump(at_pump=1))
+        drv.start()
+        deadline = time.perf_counter() + 10
+        while "driver_error" not in drv.poll(t):
+            assert time.perf_counter() < deadline, "error never surfaced"
+            time.sleep(0.01)
+        assert isinstance(drv.poll(t)["driver_error"], tdp.InjectedFault)
+        with pytest.raises(tdp.InjectedFault):
+            drv.stop()
+        drv.stop()                            # idempotent after surfacing
+
+    def test_inline_pump_chaos_raises_to_caller(self):
+        drv = tdp.FleetDriver("xla", batch=2)
+        drv.submit(PROG, {"state": members(1)[0]}, 4)
+        drv.inject(faults.raise_in_pump(at_pump=1))
+        with pytest.raises(tdp.InjectedFault):
+            drv.drain()                       # no thread: raises directly
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: verify-on-load, retention, restore fallback
+# ---------------------------------------------------------------------------
+
+class TestRestoreFallback:
+    def _two_snapshots(self, tmp_path, ms):
+        drv = tdp.FleetDriver("xla", batch=2,
+                              checkpoint_dir=str(tmp_path / "ck"),
+                              checkpoint_keep=5)
+        ts = [drv.submit(PROG, {"state": ms[i],
+                                "consts": {"tau": TAUS[i]}}, 10)
+              for i in range(2)]
+        drv.pump(4)
+        drv.checkpoint()                      # valid snapshot @ step 4
+        drv.pump(2)
+        drv.checkpoint()                      # newest snapshot @ step 6
+        return str(tmp_path / "ck"), ts
+
+    @pytest.mark.parametrize("mode", ["flip", "truncate", "manifest"])
+    def test_corrupt_newest_falls_back_to_valid(self, tmp_path, mode):
+        ms = members(2)
+        refs = fault_free_reference(ms, 10)
+        ck, ts = self._two_snapshots(tmp_path, ms)
+        assert len(checkpoint_steps(ck)) == 2
+        faults.corrupt_checkpoint(ck, mode=mode)
+        with pytest.warns(RuntimeWarning, match="integrity"):
+            drv2 = tdp.FleetDriver.restore(ck, PROG)
+        assert drv2._tickets[ts[0].id].step == 4   # the older snapshot
+        final = drv2.drain()
+        for i in range(2):                    # resume is still bit-exact
+            np.testing.assert_array_equal(
+                np.asarray(final[ts[i].id]["a"]), refs[i])
+
+    def test_all_corrupt_raises_ioerror(self, tmp_path):
+        ck, _ = self._two_snapshots(tmp_path, members(2))
+        for step in checkpoint_steps(ck):
+            faults.corrupt_checkpoint(ck, step=step, mode="flip")
+        with pytest.raises(IOError, match="failed integrity"):
+            tdp.FleetDriver.restore(ck, PROG)
+
+    def test_restore_checkpoint_verifies_by_default(self, tmp_path):
+        from repro.checkpoint.store import (restore_checkpoint,
+                                            save_checkpoint)
+        tree = {"w": np.arange(8.0, dtype=np.float32)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        faults.corrupt_checkpoint(str(tmp_path), mode="flip")
+        with pytest.raises(IOError, match="integrity"):
+            restore_checkpoint(str(tmp_path), tree)
+        got, _, _ = restore_checkpoint(str(tmp_path), tree, verify=False)
+        assert got["w"].shape == (8,)         # best-effort read still works
+
+    def test_failed_ticket_restores_failed(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        drv = tdp.FleetDriver("xla", batch=2, checkpoint_dir=ck,
+                              health=tdp.HealthPolicy(every=1))
+        t_ok = drv.submit(PROG, {"state": members(1)[0]}, 4)
+        t_bad = drv.submit(PROG, {"state": {
+            "a": members(1, seed=1)[0]["a"].at[(0,) * 3].set(np.nan)}}, 4)
+        drv.drain()
+        drv.checkpoint()
+        drv2 = tdp.FleetDriver.restore(ck, PROG)
+        assert drv2._tickets[t_ok.id].status == "done"
+        rbad = drv2._tickets[t_bad.id]
+        assert rbad.status == "failed"
+        assert "health check failed" in str(rbad.error)
+        drv2.drain()                          # failed is terminal: no hang
+
+    def test_kill_pump_thread_then_restore_resumes(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        drv = tdp.FleetDriver("xla", batch=2, checkpoint_dir=ck,
+                              checkpoint_every=2)
+        t = drv.submit(PROG, {"state": members(1)[0]}, 5000)
+        drv.start()
+        deadline = time.perf_counter() + 60
+        while latest_step(ck) is None:
+            assert time.perf_counter() < deadline, "no checkpoint written"
+            time.sleep(0.01)
+        faults.kill_pump_thread(drv)          # SIGKILL stand-in: no flush
+        drv2 = tdp.FleetDriver.restore(ck, PROG)
+        r = drv2._tickets[t.id]
+        assert not r.finished and 0 < r.step < 5000
