@@ -89,13 +89,19 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
     ``fresh/base - 1`` (positive = slower).
     """
     regressions, improvements, unmatched = [], [], []
+    warnings = []
     matched = 0
+    base_pvm = {}
     base_ids = {}
     for bench, rec in baseline.items():
         for key, var in (rec.get("variants") or {}).items():
             m = _median(var)
             if m is not None:
-                base_ids[_identity(bench, rec, key, var)] = m
+                ident = _identity(bench, rec, key, var)
+                base_ids[ident] = m
+                pvm = var.get("predicted_vs_measured")
+                if isinstance(pvm, (int, float)):
+                    base_pvm[ident] = float(pvm)
     for bench, rec in fresh.items():
         for key, var in (rec.get("variants") or {}).items():
             m = _median(var)
@@ -115,8 +121,18 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
                 regressions.append(row)
             elif ratio < -threshold:
                 improvements.append(row)
+            # cost-model fidelity drift: warn (never gate) when the
+            # fresh predicted-vs-measured error more than doubles the
+            # committed record's (with a 10% absolute floor so near-zero
+            # baselines don't warn on noise)
+            pvm, b_pvm = var.get("predicted_vs_measured"), \
+                base_pvm.get(ident)
+            if (isinstance(pvm, (int, float)) and b_pvm is not None
+                    and abs(pvm) > max(2 * abs(b_pvm), 0.1)):
+                warnings.append((bench, key, b_pvm, float(pvm)))
     return {"regressions": regressions, "improvements": improvements,
-            "matched": matched, "unmatched": unmatched}
+            "matched": matched, "unmatched": unmatched,
+            "warnings": warnings}
 
 
 def main(argv=None) -> int:
@@ -153,6 +169,11 @@ def main(argv=None) -> int:
     for bench, key in rep["unmatched"]:
         print(f"[check_regression] unmatched {bench}/{key} "
               f"(no comparable baseline variant — not gated)")
+    for bench, key, b, f in rep["warnings"]:
+        print(f"[check_regression] WARN cost-model drift {bench}/{key}: "
+              f"predicted_vs_measured {b:+.0%} → {f:+.0%} "
+              f"(>2× the committed record — model fidelity slipping; "
+              f"not gated)")
     for bench, key, b, f, r in rep["regressions"]:
         print(f"[check_regression] REGRESSED {bench}/{key}: "
               f"{b*1e3:.2f} → {f*1e3:.2f} ms ({r:+.0%} > "
@@ -160,7 +181,8 @@ def main(argv=None) -> int:
     print(f"[check_regression] {rep['matched']} variant(s) compared, "
           f"{len(rep['regressions'])} regression(s), "
           f"{len(rep['improvements'])} improvement(s), "
-          f"{len(rep['unmatched'])} unmatched")
+          f"{len(rep['unmatched'])} unmatched, "
+          f"{len(rep['warnings'])} drift warning(s)")
     return 1 if rep["regressions"] else 0
 
 

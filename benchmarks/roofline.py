@@ -8,8 +8,11 @@ derives, per (arch × shape × mesh × variant):
   T_collective = wire_bytes_ici / ICI_bw  (+ DCN)  (50 GB/s/link; DCN 25)
 
 All three inputs are **per-chip** (the post-SPMD module is per-chip) and
-**trip-count exact** (see ``repro.launch.hlo_analysis`` — XLA's own
-cost_analysis undercounts scan bodies by their trip counts).
+**trip-count exact** (see the ``repro.core.costmodel`` HLO walker —
+XLA's own cost_analysis undercounts scan bodies by their trip counts).
+The arithmetic itself lives in
+:func:`repro.core.costmodel.dryrun_record_terms`; this module is the
+table/CLI view over it.
 
 Additional columns:
   MODEL_FLOPS        6·N·D (dense) / 6·N_active·D (MoE); 2·N·D serving
@@ -31,11 +34,17 @@ import glob
 import json
 import os
 
-PEAK_FLOPS = 197e12        # TPU v5e bf16
-HBM_BW = 819e9             # bytes/s
-ICI_BW = 50e9              # bytes/s/link
-DCN_BW = 25e9              # bytes/s cross-pod (conservative)
-HBM_BYTES = 16 * 2 ** 30
+from repro.core.costmodel import MachineProfile, dryrun_record_terms
+
+# TPU v5e table rates — kept as module constants for scripts that import
+# them, but sourced from (and asserted against) the cost model's profile
+# table so the two can never drift apart.
+_PROFILE = MachineProfile.default("tpu:v5e")
+PEAK_FLOPS = _PROFILE.peak_flops   # 197e12  bf16
+HBM_BW = _PROFILE.hbm_bw           # 819e9   bytes/s
+ICI_BW = _PROFILE.link_bw          # 50e9    bytes/s/link
+DCN_BW = _PROFILE.dcn_bw           # 25e9    bytes/s cross-pod
+HBM_BYTES = _PROFILE.hbm_bytes     # 16 GiB
 
 
 def load_records(out_dir="results/dryrun", mesh=None, variant=None):
@@ -53,27 +62,7 @@ def load_records(out_dir="results/dryrun", mesh=None, variant=None):
 
 
 def terms(rec):
-    ha = rec["hlo_analysis"]
-    t_c = ha["flops"] / PEAK_FLOPS
-    t_m = ha["traffic_bytes"] / HBM_BW
-    t_x = ha["wire_bytes_ici"] / ICI_BW + ha["wire_bytes_dcn"] / DCN_BW
-    chips = rec["n_devices"]
-    hlo_total = ha["flops"] * chips
-    useful = rec["model_flops"] / hlo_total if hlo_total else 0.0
-    mem = rec["memory_analysis"]
-    per_dev = (mem.get("argument_size_in_bytes", 0) +
-               mem.get("temp_size_in_bytes", 0))
-    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
-              key=lambda kv: kv[1])
-    total = t_c + t_m + t_x
-    return {
-        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
-        "dominant": dom[0], "t_dominant": dom[1],
-        "frac": dom[1] / total if total else 0.0,
-        "useful_ratio": useful,
-        "bytes_per_dev": per_dev,
-        "fits": per_dev <= HBM_BYTES,
-    }
+    return dryrun_record_terms(rec, _PROFILE)
 
 
 def fmt_s(x):

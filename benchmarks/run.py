@@ -94,6 +94,16 @@ REPS_OVERRIDE: int | None = None
 AUTOTUNE = False
 TUNING_CACHE = "results/tuning"
 
+#: --top-k K: predictor-guided autotune — rank the candidate space by
+#: the cost-model's predicted time and measure only the base target plus
+#: the K best-predicted candidates (None → measure everything).
+TOP_K: int | None = None
+
+#: --predict: annotate each fused_step variant with the cost model's
+#: predicted step time (predicted_s / predicted_vs_measured /
+#: bottleneck) so the bench JSON tracks model fidelity over time.
+PREDICT = False
+
 
 def _grid(default: tuple) -> tuple:
     if GRID_OVERRIDE is not None:
@@ -395,12 +405,19 @@ def bench_fused_step(quick=False):
         ("fused (windowed, gather-free, interpret)", "fused_windowed",
          "pallas_windowed", sim_w.programs["fused"].step, (ws,)),
     ]
+    progs = {
+        "unfused": sim_u.programs["step"],
+        "fused": sim_f.programs["fused"],
+        "fused_two": sim_f2.programs["fused"],
+        "fused_windowed": sim_w.programs["fused"],
+    }
     sweep_keys = {}
     for knob, v, rec_sfx, disp_sfx, s_tgt in _sweep_variants(wt):
         sim_pb = BinaryFluidSim(grid, params=p, fused="one_launch",
                                 target=s_tgt)
         key = f"fused_windowed_{rec_sfx}"
         sweep_keys[key] = (knob, v)
+        progs[key] = sim_pb.programs["fused"]
         variants.append(
             (f"fused (windowed, {disp_sfx})", key, "pallas_windowed",
              sim_pb.programs["fused"].step, (ws,)))
@@ -416,6 +433,18 @@ def bench_fused_step(quick=False):
             "t_s": t, "ns_per_site_step": per_site_ns, "executor": executor,
             **ts, **({"hbm_bytes_estimate": hbm[key]} if key in hbm else {}),
         }
+        if PREDICT and key in progs:
+            try:
+                est = tdp.predict(progs[key])
+            except Exception as e:  # noqa: BLE001 — fidelity tracking
+                # must never fail the measurement it annotates
+                rec["variants"][key]["predict_error"] = (
+                    f"{type(e).__name__}: {e}")
+            else:
+                rec["variants"][key].update(
+                    predicted_s=est.seconds,
+                    predicted_vs_measured=(est.seconds - t) / t,
+                    predicted_bottleneck=est.bottleneck)
         if key in sweep_keys:
             knob, v = sweep_keys[key]
             rec.setdefault("sweep", {}).setdefault(knob, {})[
@@ -436,7 +465,7 @@ def bench_fused_step(quick=False):
         tuned, rep = tdp.autotune(
             sim_w.programs["fused"], example_state=ws,
             measure_steps=1, reps=REPS_OVERRIDE or 3, warmup=1,
-            cache_dir=TUNING_CACHE)
+            top_k=TOP_K, cache_dir=TUNING_CACHE)
         rec["tuning"] = {"backend": tuned.backend,
                          "interpret": tuned.interpret,
                          **tuned.tuning_dict()}
@@ -770,6 +799,7 @@ SWEEP_CONSUMERS = ("fused_step", "stream", "grad")
 
 def main(argv=None):
     global AUTOTUNE, GRID_OVERRIDE, REPS_OVERRIDE, TUNING_CACHE
+    global TOP_K, PREDICT
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
@@ -797,6 +827,15 @@ def main(argv=None):
                          "autotune reps) — smoke runs")
     ap.add_argument("--tuning-cache", default="results/tuning",
                     help="tdp.autotune on-disk cache directory")
+    ap.add_argument("--top-k", type=int, default=None, metavar="K",
+                    help="with --autotune: measure only the base target "
+                         "plus the K best candidates by the cost model's "
+                         "predicted time (model-pruned candidates are "
+                         "recorded in the report, not dropped)")
+    ap.add_argument("--predict", action="store_true",
+                    help="annotate bench_fused_step variants with the "
+                         "cost model's predicted step time "
+                         "(predicted_s / predicted_vs_measured)")
     args = ap.parse_args(argv)
 
     if args.grid is not None:
@@ -811,6 +850,15 @@ def main(argv=None):
         REPS_OVERRIDE = args.steps
     AUTOTUNE = bool(args.autotune)
     TUNING_CACHE = args.tuning_cache
+    TOP_K = args.top_k
+    PREDICT = bool(args.predict)
+    if TOP_K is not None and TOP_K <= 0:
+        print("[benchmarks] --top-k must be positive", file=sys.stderr)
+        return 2
+    if TOP_K is not None and not AUTOTUNE:
+        print("[benchmarks] --top-k only applies with --autotune",
+              file=sys.stderr)
+        return 2
 
     if args.only:
         selected = [s.strip() for s in args.only.split(",") if s.strip()]

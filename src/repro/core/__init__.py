@@ -84,6 +84,13 @@ from .autotune import (
     plane_block_candidates,
     wall_clock_timer,
 )
+from .costmodel import (
+    CostEstimate,
+    MachineProfile,
+    machine_profile,
+    predict,
+    roofline_seconds,
+)
 from .execute import (
     launch,
     launch_stencil,
@@ -117,4 +124,7 @@ __all__ = [
     # autotuning
     "autotune", "default_space", "plane_block_candidates",
     "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",
+    # cost model
+    "CostEstimate", "MachineProfile", "machine_profile", "predict",
+    "roofline_seconds",
 ]

@@ -40,6 +40,26 @@ Results persist in an on-disk cache (``results/tuning/`` by default)
 keyed by (program/spec digest, grid, backend family, device kind) —
 repeated runs skip measurement entirely and reproduce the same choice
 (``TuneReport.cache_hit``).
+
+Two extensions ride on :mod:`repro.core.costmodel`:
+
+* **predictor-guided search** — every candidate is scored by the
+  analytical roofline model before measurement (``scorer=`` overrides
+  the default :func:`repro.core.costmodel.predict` scorer); with
+  ``top_k=K`` only the base target plus the K best-predicted candidates
+  are measured (at most K+1 measurements), the rest recorded in
+  ``report.pruned`` with a ``model-pruned`` reason.  Every measured
+  candidate records ``predicted_s`` and the ``predicted_vs_measured``
+  relative error, and the report carries the Spearman
+  ``rank_correlation`` between predicted and measured over the measured
+  set — the running proof (or refutation) that the model ranks.
+* **per-stage tuning** (``per_stage=True``) — program-level candidates
+  may assign a distinct ``plane_block`` per windowed :class:`Stage` via
+  the reserved ``Target.tuning`` keys ``"stage:<name>"`` (value: a
+  frozen tuple of ``(knob, value)`` pairs, merged over the flat tuning
+  by :func:`repro.core.program.resolve_stage_target`).  Cache entries
+  are schema-versioned (:data:`SCHEMA_VERSION`): older entries replay,
+  entries from a future schema miss cleanly.
 """
 from __future__ import annotations
 
@@ -55,8 +75,10 @@ from typing import Any, Callable, Mapping, NamedTuple, Sequence
 import jax
 import numpy as np
 
+from . import costmodel as _costmodel
 from .api import launch as _launch
 from .api import launch_plan as _launch_plan
+from .costmodel import DEFAULT_VMEM_LIMIT  # noqa: F401  (re-export)
 from .lattice import Lattice
 from .program import CompiledProgram, Program
 from .registry import (
@@ -67,10 +89,13 @@ from .registry import (
 from .spec import KernelSpec
 from .target import Target, as_target
 
-#: default per-candidate VMEM feasibility budget — one TPU core's vector
-#: memory (the windowed executor's window must fit; see docs/stencil.md,
-#: "VMEM footprint rule").
-DEFAULT_VMEM_LIMIT = 16 * 2 ** 20
+#: on-disk cache entry schema.  v1: PR 5 entries (no predictor fields,
+#: no per-stage tuning).  v2: adds ``schema``, per-candidate
+#: ``predicted_s`` / ``predicted_vs_measured``, report-level
+#: ``rank_correlation``, and nested ``stage:<name>`` tuning values.
+#: Older entries replay (missing fields default); entries written by a
+#: *future* schema are a cache miss, never a parse error.
+SCHEMA_VERSION = 2
 
 #: default candidate values for the pointwise Pallas block knobs
 #: (consulted per executor: only keys the executor *declares* via
@@ -88,12 +113,43 @@ POINTWISE_TUNABLE_VALUES: dict[str, tuple[int, ...]] = {
 # candidates
 # ---------------------------------------------------------------------------
 
+def _freeze_value(v):
+    """Hashable, canonical form of one tuning value.  Nested mappings
+    (and JSON round-tripped lists of pairs) become sorted tuples of
+    pairs — the per-stage ``"stage:<name>"`` values."""
+    if isinstance(v, Mapping):
+        return tuple(sorted((str(k), _freeze_value(x))
+                            for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        if v and all(isinstance(x, (list, tuple)) and len(x) == 2
+                     and isinstance(x[0], str) for x in v):
+            return tuple(sorted((str(k), _freeze_value(x)) for k, x in v))
+        return tuple(_freeze_value(x) for x in v)
+    return v
+
+
 def _freeze_items(mapping) -> tuple[tuple[str, Any], ...]:
     if not mapping:
         return ()
     items = (mapping.items() if isinstance(mapping, Mapping)
              else (tuple(kv) for kv in mapping))
-    return tuple(sorted((str(k), v) for k, v in items))
+    return tuple(sorted((str(k), _freeze_value(v)) for k, v in items))
+
+
+def _is_pairs(v) -> bool:
+    return (isinstance(v, tuple) and len(v) > 0
+            and all(isinstance(x, tuple) and len(x) == 2
+                    and isinstance(x[0], str) for x in v))
+
+
+def _json_value(v):
+    """The JSON-serialisable form of a frozen tuning value (inverse of
+    :func:`_freeze_value` up to key order)."""
+    if _is_pairs(v):
+        return {k: _json_value(x) for k, x in v}
+    if isinstance(v, tuple):
+        return [_json_value(x) for x in v]
+    return v
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,13 +180,16 @@ class Candidate:
         if self.interpret and not name.endswith("_interpret"):
             name += "_interpret"
         if self.tuning:
-            knobs = ",".join(f"{k}={v}" for k, v in self.tuning)
+            knobs = ",".join(
+                (f"{k}{{{','.join(f'{ik}={iv}' for ik, iv in v)}}}"
+                 if _is_pairs(v) else f"{k}={v}")
+                for k, v in self.tuning)
             return f"{name}[{knobs}]"
         return name
 
     def as_dict(self) -> dict:
         return {"backend": self.backend, "interpret": self.interpret,
-                "tuning": dict(self.tuning)}
+                "tuning": {k: _json_value(v) for k, v in self.tuning}}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Candidate":
@@ -198,7 +257,8 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
                   grid_shape: Sequence[int] | None = None,
                   lattice: Lattice | None = None, halo=None, consts=None,
                   executors: Sequence[str] | None = None,
-                  vmem_limit: int = DEFAULT_VMEM_LIMIT):
+                  vmem_limit: int = DEFAULT_VMEM_LIMIT,
+                  per_stage: bool = False):
     """Derive the default candidate space for :func:`autotune`.
 
     Axes (the candidate-space table in docs/targetdp_api.md):
@@ -214,7 +274,12 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
       divisor sweep** (:func:`plane_block_candidates`), VMEM-filtered;
     * per executor that declares pointwise block knobs
       (``executor_tunables``), one candidate per value in
-      :data:`POINTWISE_TUNABLE_VALUES`.
+      :data:`POINTWISE_TUNABLE_VALUES`;
+    * with ``per_stage=True``, for programs with **more than one**
+      windowed stage, an independent per-stage ``plane_block`` sweep:
+      one candidate per (stage, divisor-of-that-stage's-plane-count)
+      under the reserved tuning key ``"stage:<name>"`` (a single
+      windowed stage makes per-stage ≡ global, so the axis is skipped).
 
     Returns ``(candidates, pruned)`` where ``pruned`` is a list of
     ``(label, reason)`` for space points rejected before measurement.
@@ -306,6 +371,34 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
             for v in values:
                 add(Candidate(cand.backend, cand.interpret,
                               ((("plane_block", int(v)),))))
+            if per_stage and is_program:
+                pplan0 = program_or_spec.plan(probe,
+                                              grid_shape=grid_shape)
+                stages_w = [(n, p.shape[0]) for n, p in pplan0.stages
+                            if p.wants == "halo_extended"
+                            and p.shape is not None]
+                # one windowed stage: per-stage ≡ the global sweep
+                if len(stages_w) > 1:
+                    for sname, count in stages_w:
+                        skey = f"stage:{sname}"
+                        for v in _divisors(count):
+                            if v == 1:
+                                continue    # ≡ the default plane_block
+                            nested = (("plane_block", int(v)),)
+                            pplan = program_or_spec.plan(
+                                probe.with_tuning({skey: nested}),
+                                grid_shape=grid_shape)
+                            vmem = pplan.vmem_bytes_estimate()
+                            if vmem <= vmem_limit:
+                                add(Candidate(cand.backend,
+                                              cand.interpret,
+                                              ((skey, nested),)))
+                            else:
+                                pruned.append(
+                                    (f"{cand.label}[{skey}"
+                                     f"{{plane_block={v}}}]",
+                                     f"vmem estimate {vmem} > limit "
+                                     f"{vmem_limit}"))
         elif not has_stencil:
             # pointwise launches: the block knobs the executor declares
             # (stencil programs route pointwise stages to xla, so the
@@ -337,15 +430,22 @@ def wall_clock_timer(candidate: Target, run: Callable[[], Any]) -> float:
 # ---------------------------------------------------------------------------
 
 class CandidateResult(NamedTuple):
-    """One measured point: the candidate, its median, the raw samples."""
+    """One measured point: the candidate, its median, the raw samples,
+    and (when a scorer ran) the model's prediction — ``predicted_s``
+    seconds and ``predicted_vs_measured`` = (predicted − measured) /
+    measured (positive: the model overestimates)."""
 
     candidate: Candidate
     median_s: float
     times_s: tuple[float, ...]
+    predicted_s: float | None = None
+    predicted_vs_measured: float | None = None
 
     def as_dict(self) -> dict:
         return {**self.candidate.as_dict(), "label": self.candidate.label,
-                "median_s": self.median_s, "times_s": list(self.times_s)}
+                "median_s": self.median_s, "times_s": list(self.times_s),
+                "predicted_s": self.predicted_s,
+                "predicted_vs_measured": self.predicted_vs_measured}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -369,6 +469,8 @@ class TuneReport:
     cache_key: str
     cache_hit: bool = False
     measure_steps: int = 1
+    rank_correlation: float | None = None
+    schema: int = SCHEMA_VERSION
 
     @property
     def best_median_s(self) -> float:
@@ -380,6 +482,7 @@ class TuneReport:
 
     def as_dict(self) -> dict:
         return {
+            "schema": self.schema,
             "name": self.name, "grid": list(self.grid),
             "device": self.device,
             "measure_steps": self.measure_steps,
@@ -387,24 +490,32 @@ class TuneReport:
             "best": {**self.best.as_dict(), "label": self.best.label,
                      "median_s": self.best_median_s},
             "default_median_s": self.default_median_s,
+            "rank_correlation": self.rank_correlation,
             "candidates": [r.as_dict() for r in self.results],
             "pruned": [{"label": l, "reason": r} for l, r in self.pruned],
         }
 
     @classmethod
     def from_dict(cls, d: Mapping, *, cache_hit: bool = False):
+        def _opt(v):
+            return None if v is None else float(v)
+
         return cls(
             name=d["name"], grid=tuple(d["grid"]), device=d["device"],
             results=tuple(
                 CandidateResult(Candidate.from_dict(c),
                                 float(c["median_s"]),
-                                tuple(float(t) for t in c["times_s"]))
+                                tuple(float(t) for t in c["times_s"]),
+                                _opt(c.get("predicted_s")),
+                                _opt(c.get("predicted_vs_measured")))
                 for c in d["candidates"]),
             pruned=tuple((p["label"], p["reason"]) for p in d["pruned"]),
             best=Candidate.from_dict(d["best"]),
             default_median_s=float(d["default_median_s"]),
             cache_key=d["cache_key"], cache_hit=cache_hit,
-            measure_steps=int(d.get("measure_steps", 1)))
+            measure_steps=int(d.get("measure_steps", 1)),
+            rank_correlation=_opt(d.get("rank_correlation")),
+            schema=int(d.get("schema", 1)))
 
 
 class TuneResult(NamedTuple):
@@ -480,8 +591,13 @@ def load_cached(cache_dir: str, key: str) -> TuneReport | None:
             data = json.load(fh)
         if data.get("cache_key") != key:
             return None
+        # schema gate: v1 (pre-predictor) entries replay with defaulted
+        # fields; an entry written by a *newer* schema than this process
+        # understands is a miss, not a parse error
+        if int(data.get("schema", 1)) > SCHEMA_VERSION:
+            return None
         return TuneReport.from_dict(data, cache_hit=True)
-    except (OSError, ValueError, KeyError):
+    except (OSError, ValueError, KeyError, TypeError):
         return None
 
 
@@ -530,6 +646,49 @@ def _as_candidates(space) -> list[Candidate]:
     return out
 
 
+def _rank_correlation(results: Sequence[CandidateResult]) -> float | None:
+    """Spearman rank correlation between predicted and measured seconds
+    over the measured set (``None`` with <2 scored points or a
+    degenerate ranking)."""
+    pts = [(r.predicted_s, r.median_s) for r in results
+           if r.predicted_s is not None]
+    if len(pts) < 2:
+        return None
+    pred = np.asarray([p for p, _ in pts], dtype=float)
+    meas = np.asarray([m for _, m in pts], dtype=float)
+    rp = np.argsort(np.argsort(pred)).astype(float)
+    rm = np.argsort(np.argsort(meas)).astype(float)
+    if rp.std() == 0 or rm.std() == 0:
+        return None
+    return float(np.corrcoef(rp, rm)[0, 1])
+
+
+def _default_scorer(program_or_spec, is_program: bool, grid, *,
+                    lattice, halo, consts,
+                    profile) -> Callable[[Target], float | None]:
+    """The costmodel-backed candidate scorer: plan the subject under the
+    candidate target, :func:`repro.core.costmodel.predict` the plan.
+    ``profile=None`` resolves per candidate (interpret candidates score
+    against the interpret profile, compiled ones against the compiled
+    profile — the honest-profile rule).  Returns ``None`` for
+    candidates the model cannot score."""
+
+    def scorer(tgt: Target) -> float | None:
+        try:
+            if is_program:
+                plan = program_or_spec.plan(
+                    tgt.with_(mesh=None, shard_axis=None),
+                    grid_shape=grid)
+            else:
+                plan = _launch_plan(program_or_spec, tgt, lattice=lattice,
+                                    halo=halo, consts=consts)
+            return float(_costmodel.predict(plan, profile=profile).seconds)
+        except Exception:
+            return None
+
+    return scorer
+
+
 def autotune(program_or_spec, target: Target | str | None = None,
              example_state=None, *,
              space: Sequence | None = None,
@@ -543,6 +702,10 @@ def autotune(program_or_spec, target: Target | str | None = None,
              executors: Sequence[str] | None = None,
              vmem_limit: int = DEFAULT_VMEM_LIMIT,
              check_identical: bool = False,
+             scorer: Callable[[Target], float | None] | None = None,
+             top_k: int | None = None,
+             profile=None,
+             per_stage: bool = False,
              cache_dir: str | None = "results/tuning") -> TuneResult:
     """Choose ``Target.tuning`` (and the executor) empirically.
 
@@ -573,6 +736,23 @@ def autotune(program_or_spec, target: Target | str | None = None,
         any whose outputs are not bit-identical to the base target's
         (tuning must never change results; a mismatch is an executor
         bug, surfaced in ``report.pruned``, never silently chosen).
+      scorer: ``(candidate_target) -> predicted seconds | None`` — the
+        analytical model ranking the space.  Defaults to the
+        :mod:`repro.core.costmodel` roofline predictor.  Every measured
+        candidate records its prediction (``predicted_s``,
+        ``predicted_vs_measured``) and the report the Spearman
+        ``rank_correlation`` over the measured set.
+      top_k: measure only the base target plus the ``top_k``
+        best-predicted candidates (at most ``top_k + 1`` measurements);
+        the rest land in ``report.pruned`` with a ``model-pruned``
+        reason — recorded, never silently dropped.  Candidate 0 (the
+        base target) is always measured regardless of its score.
+      profile: the :class:`repro.core.costmodel.MachineProfile` for the
+        default scorer (``None`` resolves per candidate — interpret
+        candidates against the interpret profile).
+      per_stage: also sweep per-stage ``plane_block`` assignments for
+        programs with more than one windowed stage (the reserved
+        ``"stage:<name>"`` tuning keys; see :func:`default_space`).
       cache_dir: on-disk cache directory (``None`` disables).  A hit
         replays the stored choice without measuring.
 
@@ -620,7 +800,8 @@ def autotune(program_or_spec, target: Target | str | None = None,
         candidates, pruned = default_space(
             program_or_spec, base, grid_shape=grid if is_program else None,
             lattice=lattice, halo=halo, consts=consts,
-            executors=executors, vmem_limit=vmem_limit)
+            executors=executors, vmem_limit=vmem_limit,
+            per_stage=per_stage)
     else:
         pruned = []
         base_cand = Candidate.of(base)
@@ -634,6 +815,38 @@ def autotune(program_or_spec, target: Target | str | None = None,
         for c in candidates[len(kept):]:
             pruned.append((c.label, f"over budget={budget}"))
         candidates = kept
+
+    # -- predictor pass: score every candidate (the predictions annotate
+    # every cache entry even without top_k; an unscoreable candidate is
+    # None, never an error) --------------------------------------------
+    if scorer is None:
+        scorer = _default_scorer(program_or_spec, is_program, grid,
+                                 lattice=lattice, halo=halo,
+                                 consts=consts, profile=profile)
+    scores: dict[str, float | None] = {}
+    for c in candidates:
+        try:
+            s = scorer(c.target_from(base))
+        except Exception:  # noqa: BLE001 — a scorer failure never blocks
+            s = None
+        scores[c.label] = None if s is None else float(s)
+
+    if top_k is not None:
+        k = max(0, int(top_k))
+        rest = candidates[1:]       # candidate 0 is never model-pruned
+        ranked = sorted((c for c in rest if scores[c.label] is not None),
+                        key=lambda c: scores[c.label])
+        keep = {c.label for c in ranked[:k]}
+        for rank, c in enumerate(ranked[k:], start=k + 1):
+            pruned.append(
+                (c.label, f"model-pruned: predicted rank {rank} > "
+                          f"top_k={k} ({scores[c.label]:.3g}s)"))
+        for c in rest:
+            if scores[c.label] is None:
+                pruned.append((c.label, "model-pruned: scorer returned "
+                                        "no estimate"))
+        candidates = [candidates[0]] + [c for c in rest
+                                        if c.label in keep]
 
     timer = timer if timer is not None else wall_clock_timer
     n_steps = max(1, int(measure_steps))
@@ -686,7 +899,11 @@ def autotune(program_or_spec, target: Target | str | None = None,
         median = float(np.median(times))
         if i == 0:
             default_median = median
-        results.append(CandidateResult(cand, median, times))
+        predicted = scores.get(cand.label)
+        pvm = ((predicted - median) / median
+               if predicted is not None and median > 0 else None)
+        results.append(CandidateResult(cand, median, times, predicted,
+                                       pvm))
 
     if not results:
         raise RuntimeError(
@@ -698,7 +915,8 @@ def autotune(program_or_spec, target: Target | str | None = None,
         device=_device_kind(), results=tuple(results),
         pruned=tuple(pruned), best=best,
         default_median_s=float(default_median),
-        cache_key=key, cache_hit=False, measure_steps=n_steps)
+        cache_key=key, cache_hit=False, measure_steps=n_steps,
+        rank_correlation=_rank_correlation(results))
     if cache_dir is not None:
         store_cached(cache_dir, report)
     return TuneResult(best.target_from(base), report)

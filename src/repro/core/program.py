@@ -194,12 +194,29 @@ def _grid_trim(arr: jax.Array, shape: tuple[int, ...],
 
 
 def resolve_stage_target(target: Target | str | None,
-                         spec: KernelSpec) -> Target:
+                         spec: KernelSpec,
+                         stage_name: str | None = None) -> Target:
     """Per-stage target routing (the PR 3 capability surface, applied per
     stage): stencil stages keep the requested target; pointwise stages
     under a stencil-only (``wants="halo_extended"``) executor route to
-    the ``"xla"`` executor at the same VVL."""
+    the ``"xla"`` executor at the same VVL.
+
+    Per-stage tuning: ``Target.tuning`` keys of the reserved form
+    ``"stage:<name>"`` hold a nested ``((knob, value), ...)`` assignment
+    for that stage only (``tdp.autotune(..., per_stage=True)`` emits
+    them).  All ``stage:*`` keys are stripped from the flat tuning, then
+    the entry matching ``stage_name`` is merged over it — so a stage
+    never sees another stage's knobs, and a per-stage value overrides
+    the program-wide one."""
     tgt = as_target(target)
+    if any(k.startswith("stage:") for k, _ in tgt.tuning):
+        flat = {k: v for k, v in tgt.tuning
+                if not k.startswith("stage:")}
+        if stage_name is not None:
+            mine = dict(tgt.tuning).get(f"stage:{stage_name}")
+            if mine:
+                flat.update(dict(mine))
+        tgt = tgt.with_(tuning=flat)
     if spec.has_stencil:
         return tgt
     try:
@@ -433,7 +450,7 @@ class Program:
         h0 = _normalize_halo(halo, ndim)
         open_mask = tuple(hh > 0 for hh in h0)
         widths, geo = self.schedule(ndim, open_mask)
-        stage_targets = tuple(resolve_stage_target(target, st.spec)
+        stage_targets = tuple(resolve_stage_target(target, st.spec, st.name)
                               for st in self.stages)
         env = {}
         for f in self.fields:
@@ -491,7 +508,7 @@ class Program:
         shape = tuple(int(s) for s in grid_shape)
         ndim = len(shape)
         _, geo = self.schedule(ndim, (False,) * ndim)
-        stage_targets = tuple(resolve_stage_target(target, st.spec)
+        stage_targets = tuple(resolve_stage_target(target, st.spec, st.name)
                               for st in self.stages)
         return _build_program_plan(self, stage_targets, shape, geo, {})
 
@@ -722,7 +739,8 @@ class CompiledProgram:
                            else (tgt.shard_axis or "data"))
         self.shard_axes = (_shard_axes(self.shard_axis)
                            if self.mesh is not None else ())
-        self.stage_targets = tuple(resolve_stage_target(tgt, st.spec)
+        self.stage_targets = tuple(resolve_stage_target(tgt, st.spec,
+                                                        st.name)
                                    for st in program.stages)
         fields = program.fields
         zeros = (0,) * ndim

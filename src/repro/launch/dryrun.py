@@ -25,57 +25,13 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """Per-opcode summed *operand* bytes (post-partitioning = per chip).
-
-    Start ops (``all-reduce-start``) are counted; their matching ``-done``
-    ops carry no payload.  ``collective-permute`` pairs count once.
-    """
-    out = {k: 0 for k in _COLLECTIVES}
-    counts = {k: 0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        for op in _COLLECTIVES:
-            marker = f" {op}("
-            start_marker = f" {op}-start("
-            pos = line.find(marker)
-            if pos < 0:
-                pos = line.find(start_marker)
-            if pos < 0:
-                continue
-            paren = line.find("(", pos)
-            operands = line[paren:line.find(")", paren) + 1]
-            b = sum(_shape_bytes(m.group(1), m.group(2))
-                    for m in _SHAPE_RE.finditer(operands))
-            out[op] += b
-            counts[op] += 1
-            break
-    return {"bytes": out, "counts": counts,
-            "total_bytes": sum(out.values())}
+# the static HLO analysis (collective byte scan + trip-count-exact
+# walker) lives in the cost-model subsystem now; stdlib-only import, so
+# it is safe before jax initialises
+from repro.core.costmodel import analyze, collective_bytes  # noqa: F401
 
 
 def _mem_dict(mem) -> dict:
@@ -139,8 +95,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, variant, out_dir: str,
         hlo_text = compiled.as_text()
         rec["collectives"] = collective_bytes(hlo_text)
         # trip-count-exact static analysis (XLA's cost_analysis counts scan
-        # bodies once — see hlo_analysis module docstring)
-        from repro.launch.hlo_analysis import analyze
+        # bodies once — see the repro.core.costmodel walker docstring)
         rec["hlo_analysis"] = analyze(hlo_text)
         rec["status"] = "ok"
     except Exception as e:  # noqa: BLE001 — recorded, reported, non-zero exit

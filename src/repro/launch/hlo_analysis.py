@@ -1,440 +1,33 @@
-"""Static analysis of post-SPMD HLO: trip-count-exact FLOPs, HBM traffic,
-and collective bytes.
+"""Retired into :mod:`repro.core.costmodel` — import shim.
 
-Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
-``while`` body **once**, so anything under ``lax.scan`` (layer stacks,
-grad-accumulation, chunked attention) is undercounted by its trip count —
-for a 61-layer × 16-microbatch step that is a ~1000× error.  The compiled
-HLO text, however, carries ``backend_config={"known_trip_count":{"n":...}}``
-on every scan-derived while loop, so an exact account is a parse away:
-
-  1. split the module into computations; index every instruction's output
-     shape(s) by name;
-  2. build the call graph (while body/condition, fusion ``calls``,
-     ``to_apply``, conditional branches) and propagate a *multiplier* =
-     Σ over call sites of (caller multiplier × trip count);
-  3. FLOPs: every ``dot`` = 2 · prod(output) · K (K = lhs contracting
-     extents) × multiplier.  (Elementwise FLOPs are ignored — matmuls
-     dominate every cell here; noted in EXPERIMENTS.md.)
-  4. HBM traffic: Σ (operand bytes + output bytes) over instructions in
-     non-fusion computations × multiplier (a fusion is one kernel: its
-     internals live in registers/VMEM; its call site counts).  Aliasing
-     ops (bitcast/tuple/get-tuple-element/parameter/constant) are free.
-  5. collectives: operand bytes × multiplier, plus a per-chip *wire-byte*
-     estimate from ring algorithms using the replica-group size S:
-        all-gather   operand·(S-1)        (operand = one shard)
-        reduce-scatter operand·(S-1)/S
-        all-reduce   2·operand·(S-1)/S
-        all-to-all   operand·(S-1)/S
-        collective-permute operand
-     Groups are classified ICI vs DCN ("pod" axis) by their device stride:
-     on the (pod, data, model) mesh, pod-axis groups have stride 256.
-
-All shapes in the post-partitioning module are per-chip shard shapes, so
-every number this module emits is per-chip.
+The trip-count-exact HLO walker now lives in the cost-model subsystem
+(it is the ``source="hlo"`` predictor backend of ``tdp.costmodel``).
+This module re-exports the public surface so existing imports and the
+``python -m repro.launch.hlo_analysis`` CLI keep working.
 """
-from __future__ import annotations
-
-import json
-import re
-from collections import defaultdict
-from dataclasses import dataclass, field
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-             "after-all", "iota"}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
-_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
-_INSTR_RE = re.compile(
-    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(\([^=]*?\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)"
-    r"\s+([\w\-]+)\(")
-_OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
-                        r"(?:T\(([0-9,]+)\))?")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
-_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-
-
-def _shape_list(text: str) -> list[tuple[str, tuple[int, ...]]]:
-    """All dtype[dims] shapes in a type string (handles tuples)."""
-    out = []
-    for m in _SHAPE_RE.finditer(text):
-        dims = tuple(int(d) for d in m.group(2).split(",") if d)
-        out.append((m.group(1), dims))
-    return out
-
-
-def _nbytes(shapes) -> int:
-    total = 0
-    for dt, dims in shapes:
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
-
-
-@dataclass
-class Instr:
-    name: str
-    out_shapes: list
-    opcode: str
-    operands: list
-    line: str
-
-
-@dataclass
-class Computation:
-    name: str
-    instrs: dict = field(default_factory=dict)
-    order: list = field(default_factory=list)
-
-
-def parse_module(text: str):
-    comps: dict[str, Computation] = {}
-    entry = None
-    cur = None
-    for line in text.splitlines():
-        if cur is None:
-            # computation headers sit at column 0:
-            #   %name (args...) -> type {     /  ENTRY %name (...) -> ... {
-            if (line.startswith("%") or line.startswith("ENTRY")) and \
-                    line.rstrip().endswith("{") and "->" in line:
-                is_entry = line.startswith("ENTRY")
-                tok = line.split()[1] if is_entry else line.split()[0]
-                cur = Computation(tok.lstrip("%"))
-                comps[cur.name] = cur
-                if is_entry:
-                    entry = cur.name
-            continue
-        if line.startswith("}"):
-            cur = None
-            continue
-        ins = _parse_instr(line)
-        if ins is not None:
-            cur.instrs[ins.name] = ins
-            cur.order.append(ins.name)
-    return comps, entry
-
-
-def _parse_instr(line: str):
-    s = line.strip()
-    if s.startswith("ROOT "):
-        s = s[5:]
-    if not s.startswith("%") and not s[:1].isalpha():
-        return None
-    eq = s.find(" = ")
-    if eq < 0:
-        return None
-    name = s[:eq].lstrip("%")
-    rest = s[eq + 3:]
-    # type: either a balanced-paren tuple (may contain /*index=N*/ comments)
-    # or dtype[dims]{layout}
-    if rest.startswith("("):
-        depth = 0
-        for i, ch in enumerate(rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    break
-        typ, rest2 = rest[:i + 1], rest[i + 1:]
-    else:
-        m = re.match(r"\w+\[[0-9,]*\](?:\{[^}]*\})?", rest)
-        if not m:
-            return None
-        typ, rest2 = m.group(0), rest[m.end():]
-    rest2 = rest2.lstrip()
-    mo = re.match(r"([\w\-]+)\(", rest2)
-    if not mo:
-        return None
-    opcode = mo.group(1)
-    paren = rest2.find("(", mo.start())
-    depth = 0
-    for i in range(paren, len(rest2)):
-        if rest2[i] == "(":
-            depth += 1
-        elif rest2[i] == ")":
-            depth -= 1
-            if depth == 0:
-                break
-    operands = _OPERAND_RE.findall(rest2[paren:i + 1])
-    return Instr(name, _shape_list(typ), opcode, operands, line)
-
-
-def _call_edges(comp: Computation):
-    """[(callee_name, factor, kind)] for one computation."""
-    edges = []
-    for iname in comp.order:
-        ins = comp.instrs[iname]
-        line = ins.line
-        if ins.opcode == "while":
-            trip = 1
-            mt = _TRIP_RE.search(line)
-            if mt:
-                trip = int(mt.group(1))
-            for key in ("body=", "condition="):
-                k = line.find(key)
-                if k >= 0:
-                    nm = re.match(r"%?([\w.\-]+)", line[k + len(key):].lstrip("%"))
-                    if nm:
-                        edges.append((nm.group(1), trip,
-                                      "while_" + key[:-1]))
-        else:
-            for key, kind in (("calls=", "fusion"), ("to_apply=", "apply"),
-                              ("branch_computations={", "cond"),
-                              ("body=", "body"), ("condition=", "condition")):
-                k = line.find(key)
-                if k < 0:
-                    continue
-                tail = line[k + len(key):]
-                if key.endswith("{"):
-                    names = re.findall(r"%([\w.\-]+)", tail[:tail.find("}")])
-                    for nm in names:
-                        edges.append((nm, 1, kind))
-                else:
-                    nm = re.match(r"%?([\w.\-]+)", tail.lstrip("%"))
-                    if nm:
-                        edges.append((nm.group(1), 1, kind))
-    return edges
-
-
-def _multipliers(comps, entry):
-    mult = defaultdict(float)
-    mult[entry] = 1.0
-    # topological: repeatedly relax (call graph is a DAG in HLO)
-    edges = {c: _call_edges(comp) for c, comp in comps.items()}
-    order = []
-    seen = set()
-
-    def dfs(c):
-        if c in seen:
-            return
-        seen.add(c)
-        for callee, _, _ in edges.get(c, ()):  # post-order
-            dfs(callee)
-        order.append(c)
-
-    dfs(entry)
-    for c in reversed(order):                  # callers before callees
-        for callee, factor, _ in edges.get(c, ()):
-            mult[callee] += mult[c] * factor
-    fusion_like = {callee for c in comps for callee, _, kind in edges[c]
-                   if kind in ("fusion", "apply")}
-    return mult, fusion_like
-
-
-def _dot_flops(ins: Instr, comp: Computation) -> float:
-    out_elems = 1
-    for _, dims in ins.out_shapes:
-        for d in dims:
-            out_elems *= d
-    k = 1
-    mc = _CONTRACT_RE.search(ins.line)
-    if mc and ins.operands:
-        lhs = comp.instrs.get(ins.operands[0])
-        if lhs is not None and lhs.out_shapes:
-            shape = lhs.out_shapes[0][1]
-            for idx in (int(i) for i in mc.group(1).split(",") if i):
-                if idx < len(shape):
-                    k *= shape[idx]
-    return 2.0 * out_elems * k
-
-
-def _group_size_and_kind(line: str, pod_stride: int = 256):
-    """(group_size, dcn_fraction).
-
-    A group *spans* pods when its member span (stride·(size−1)) reaches
-    the pod stride; a ring over such a group crosses the DCN boundary
-    ``span // pod_stride`` times out of ``size−1`` hops — that fraction
-    of the wire bytes rides DCN, the rest ICI.  Pure-pod groups (stride
-    = pod_stride) give fraction 1."""
-    def frac(stride, gsize):
-        if gsize <= 1:
-            return 0.0
-        span = stride * (gsize - 1)
-        crossings = span // pod_stride
-        return min(1.0, crossings / (gsize - 1))
-
-    m = _GROUPS_RE.search(line)
-    if m:
-        iota = [int(x) for x in m.group(3).split(",")]
-        gsize = int(m.group(2))
-        # transposed iota ⇒ group members stride by the trailing iota dims
-        if m.group(4):
-            perm = [int(x) for x in m.group(4).split(",")]
-            strides = 1
-            for d in perm[1:]:
-                strides *= iota[d]
-            stride = strides
-        else:
-            stride = 1
-        return gsize, frac(stride, gsize)
-    m2 = _GROUPS_LIST_RE.search(line)
-    if m2:
-        members = [int(x) for x in m2.group(1).split(",")]
-        gsize = len(members)
-        stride = abs(members[1] - members[0]) if gsize > 1 else 1
-        return gsize, frac(stride, gsize)
-    return 1, 0.0
-
-
-def _operand_nbytes(ins: Instr, comp: Computation, idx: int) -> int:
-    if idx >= len(ins.operands):
-        return 0
-    o = comp.instrs.get(ins.operands[idx])
-    return _nbytes(o.out_shapes) if o is not None else 0
-
-
-def _fusion_param_read(callee: Computation, pidx: int, full: int) -> int:
-    """Bytes a fusion actually reads of parameter ``pidx``.
-
-    If every consumer of the parameter inside the fusion is a windowed
-    read (dynamic-slice / slice / gather), charge the windows, not the
-    whole tensor — scan bodies dynamic-slice one layer out of the stacked
-    parameters *inside* a fusion, and charging the stack per iteration is
-    a ~10× traffic overcount (measured on the granite cell).
-    """
-    pname = None
-    consumers = []
-    for iname in callee.order:
-        ins = callee.instrs[iname]
-        if ins.opcode == "parameter" and ins.line.strip().split(" = ")[0] \
-                .lstrip("%").startswith(f"param_{pidx}"):
-            pname = ins.name
-            break
-    if pname is None:
-        # fall back: parameters are in order
-        params = [i for i in callee.order
-                  if callee.instrs[i].opcode == "parameter"]
-        if pidx < len(params):
-            pname = params[pidx]
-    if pname is None:
-        return full
-    windowed = 0
-    for iname in callee.order:
-        ins = callee.instrs[iname]
-        if pname in ins.operands:
-            consumers.append(ins)
-    if not consumers:
-        return 0
-    for ins in consumers:
-        if ins.opcode in ("dynamic-slice", "slice", "gather"):
-            windowed += _nbytes(ins.out_shapes)
-        elif ins.opcode == "dynamic-update-slice" and \
-                ins.operands and ins.operands[0] == pname:
-            windowed += _operand_nbytes(ins, callee, 1)  # aliased update
-        else:
-            return full
-    return windowed
-
-
-def _read_bytes(ins: Instr, comp: Computation, out_bytes: int,
-                comps=None) -> int:
-    """Bytes actually *read* by an instruction.
-
-    Sliced/gathered reads touch only the addressed window, not the whole
-    operand.  In-place updates (dynamic-update-slice / scatter) read+write
-    only the update window; XLA aliases the rest.  Fusion call sites defer
-    to :func:`_fusion_param_read` per operand.
-    """
-    op = ins.opcode
-    if op in ("dynamic-slice", "slice", "gather"):
-        return out_bytes
-    if op == "dynamic-update-slice":
-        return _operand_nbytes(ins, comp, 1)         # the update window
-    if op == "scatter":
-        return (_operand_nbytes(ins, comp, 1) +      # indices
-                2 * _operand_nbytes(ins, comp, 2))   # updates read+write
-    if op == "fusion" and comps is not None:
-        mcall = re.search(r"calls=%?([\w.\-]+)", ins.line)
-        callee = comps.get(mcall.group(1)) if mcall else None
-        if callee is not None:
-            total = 0
-            for i in range(len(ins.operands)):
-                total += _fusion_param_read(callee, i,
-                                            _operand_nbytes(ins, comp, i))
-            return total
-    total = 0
-    for i in range(len(ins.operands)):
-        total += _operand_nbytes(ins, comp, i)
-    return total
-
-
-_WIRE = {
-    "all-gather": lambda b, s: b * (s - 1),
-    "reduce-scatter": lambda b, s: b * (s - 1) / s,
-    "all-reduce": lambda b, s: 2 * b * (s - 1) / s,
-    "all-to-all": lambda b, s: b * (s - 1) / s,
-    "collective-permute": lambda b, s: b,
-}
-
-
-def analyze(text: str, *, pod_stride: int = 256) -> dict:
-    comps, entry = parse_module(text)
-    if entry is None:
-        raise ValueError("no ENTRY computation found")
-    mult, fusion_like = _multipliers(comps, entry)
-
-    flops = 0.0
-    traffic = 0.0
-    coll = {op: {"operand_bytes": 0.0, "wire_bytes_ici": 0.0,
-                 "wire_bytes_dcn": 0.0, "count": 0} for op in _COLLECTIVES}
-
-    for cname, comp in comps.items():
-        m = mult.get(cname, 0.0)
-        if m == 0.0:
-            continue
-        in_fusion = cname in fusion_like
-        for iname in comp.order:
-            ins = comp.instrs[iname]
-            op = ins.opcode
-            base = op[:-6] if op.endswith("-start") else op
-            if op == "dot":
-                flops += m * _dot_flops(ins, comp)
-            if in_fusion:
-                continue                      # fused internals: no traffic
-            if op.endswith("-done") or op in _FREE_OPS or op == "while":
-                continue
-            out_bytes = _nbytes(ins.out_shapes)
-            if op == "dynamic-update-slice":       # in-place: writes window
-                out_bytes = _operand_nbytes(ins, comp, 1)
-            elif op == "scatter":
-                out_bytes = 0                      # counted in _read_bytes
-            operand_bytes = _read_bytes(ins, comp, out_bytes, comps)
-            traffic += m * (operand_bytes + out_bytes)
-            if base in _COLLECTIVES:
-                gsize, dcn_frac = _group_size_and_kind(ins.line, pod_stride)
-                c = coll[base]
-                c["operand_bytes"] += m * operand_bytes
-                wire = m * _WIRE[base](operand_bytes, max(gsize, 1))
-                c["wire_bytes_dcn"] += wire * dcn_frac
-                c["wire_bytes_ici"] += wire * (1.0 - dcn_frac)
-                c["count"] += m
-    total_ici = sum(c["wire_bytes_ici"] for c in coll.values())
-    total_dcn = sum(c["wire_bytes_dcn"] for c in coll.values())
-    return {
-        "flops": flops,
-        "traffic_bytes": traffic,
-        "collectives": coll,
-        "wire_bytes_ici": total_ici,
-        "wire_bytes_dcn": total_dcn,
-        "n_computations": len(comps),
-    }
-
+from repro.core.costmodel import (  # noqa: F401
+    _DTYPE_BYTES,
+    _COLLECTIVES,
+    _FREE_OPS,
+    _WIRE,
+    Computation,
+    Instr,
+    _call_edges,
+    _dot_flops,
+    _fusion_param_read,
+    _group_size_and_kind,
+    _multipliers,
+    _nbytes,
+    _operand_nbytes,
+    _parse_instr,
+    _read_bytes,
+    _shape_list,
+    analyze,
+    parse_module,
+)
 
 if __name__ == "__main__":
+    import json
     import sys
     with open(sys.argv[1]) as f:
         print(json.dumps(analyze(f.read()), indent=1))

@@ -90,6 +90,14 @@ from repro.core.autotune import (  # noqa: F401
     plane_block_candidates,
     wall_clock_timer,
 )
+from repro.core import costmodel  # noqa: F401  (module: tdp.costmodel)
+from repro.core.costmodel import (  # noqa: F401
+    CostEstimate,
+    MachineProfile,
+    machine_profile,
+    predict,
+    roofline_seconds,
+)
 from repro.core.execute import reduce, site_kernel  # noqa: F401
 from repro.core.lattice import (  # noqa: F401
     D3Q19_VELOCITIES,
@@ -138,6 +146,8 @@ __all__ = [
     "stage",
     "autotune", "default_space", "plane_block_candidates",
     "Candidate", "TuneReport", "TuneResult", "wall_clock_timer",
+    "costmodel", "CostEstimate", "MachineProfile", "machine_profile",
+    "predict", "roofline_seconds",
     "compatible_executors", "executor_tunables",
     "reduce", "site_kernel",
     "Lattice", "token_lattice", "Stencil", "D3Q19_VELOCITIES",

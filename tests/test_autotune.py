@@ -420,3 +420,226 @@ class TestCorrectnessDecoupling:
             assert tuned.executor == "xla"      # cheapest honest candidate
         finally:
             tdp.unregister_executor("lying_xla")
+
+
+# ---------------------------------------------------------------------------
+# predictor-guided search (the costmodel scorer + top_k)
+# ---------------------------------------------------------------------------
+
+def scripted_scorer(costs, default=0.05):
+    """Fake scorer keyed by label substring, mirroring ScriptedTimer."""
+    def scorer(target):
+        label = tdp.Candidate.of(target).label
+        for key, cost in costs.items():
+            if key in label:
+                return cost
+        return default
+    return scorer
+
+
+class TestPredictorGuided:
+    def test_top_k_measures_at_most_k_plus_one(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        scorer = scripted_scorer({"plane_block=4": 0.001,
+                                  "plane_block=2": 0.002})
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, scorer=scorer,
+            top_k=2, cache_dir=str(tmp_path), reps=1, warmup=0)
+        measured = [r.candidate.label for r in rep.results]
+        assert len(measured) <= 3                      # K + the base
+        assert "pallas_windowed_interpret[plane_block=4]" in measured
+        assert "pallas_windowed_interpret[plane_block=2]" in measured
+
+    def test_candidate_zero_never_model_pruned(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        # the base target scores WORST — it must still be measured
+        scorer = scripted_scorer({}, default=0.001)
+
+        def worst_for_base(target):
+            label = tdp.Candidate.of(target).label
+            return 99.0 if label == "pallas_windowed_interpret" else 0.001
+
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer,
+            scorer=worst_for_base, top_k=1, cache_dir=str(tmp_path),
+            reps=1, warmup=0)
+        assert rep.results[0].candidate.label == "pallas_windowed_interpret"
+        assert not any(label == "pallas_windowed_interpret"
+                       for label, _ in rep.pruned)
+
+    def test_model_pruned_candidates_recorded_with_reason(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        scorer = scripted_scorer({"plane_block=4": 0.001})
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, scorer=scorer,
+            top_k=1, cache_dir=str(tmp_path), reps=1, warmup=0)
+        mp = [(label, why) for label, why in rep.pruned
+              if why.startswith("model-pruned")]
+        assert mp, "pruned-by-the-model candidates must be recorded"
+        assert all("predicted rank" in why for _, why in mp)
+
+    def test_unscored_candidates_pruned_not_crashed(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+
+        def flaky(target):
+            label = tdp.Candidate.of(target).label
+            if "plane_block" in label:
+                raise RuntimeError("no estimate for you")
+            return 0.01
+
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, scorer=flaky,
+            top_k=2, cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert any("no estimate" in why for _, why in rep.pruned)
+        assert rep.results     # the runnable scored set still measured
+
+    def test_predictions_annotate_results_and_round_trip(self, tmp_path):
+        timer = ScriptedTimer({"plane_block=4": 0.01}, default=0.1)
+        scorer = scripted_scorer({"plane_block=4": 0.005}, default=0.2)
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, scorer=scorer,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        for r in rep.results:
+            assert r.predicted_s is not None
+            assert r.predicted_vs_measured == pytest.approx(
+                (r.predicted_s - r.median_s) / r.median_s)
+        assert rep.rank_correlation is not None
+        rebuilt = tdp.TuneReport.from_dict(rep.as_dict(), cache_hit=True)
+        assert rebuilt.results == rep.results
+        assert rebuilt.rank_correlation == pytest.approx(
+            rep.rank_correlation)
+
+    def test_perfect_scorer_gives_rank_correlation_one(self, tmp_path):
+        costs = {"plane_block=4": 0.01, "plane_block=2": 0.02, "xla": 0.5}
+        timer = ScriptedTimer(costs, default=1.0)
+        scorer = scripted_scorer(
+            {k: v / 10 for k, v in costs.items()}, default=0.1)
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, scorer=scorer,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert rep.rank_correlation == pytest.approx(1.0)
+
+    def test_default_costmodel_scorer_scores_everything(self, tmp_path):
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep = tdp.autotune(
+            fused_prog(), WT, lb_state(), timer=timer, top_k=2,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert len(rep.results) <= 3
+        assert all(r.predicted_s is not None and r.predicted_s > 0
+                   for r in rep.results)
+
+
+# ---------------------------------------------------------------------------
+# cache schema versioning
+# ---------------------------------------------------------------------------
+
+class TestCacheSchema:
+    def _one_report(self, tmp_path):
+        timer = ScriptedTimer({"xla": 0.25}, default=1.0)
+        _, rep = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                              cache_dir=str(tmp_path), reps=1, warmup=0)
+        (entry,) = [n for n in os.listdir(str(tmp_path))
+                    if n.endswith(".json")]
+        return rep, os.path.join(str(tmp_path), entry)
+
+    def test_entries_carry_current_schema(self, tmp_path):
+        rep, path = self._one_report(tmp_path)
+        from repro.core.autotune import SCHEMA_VERSION
+        assert rep.schema == SCHEMA_VERSION == 2
+        with open(path) as fh:
+            assert json.load(fh)["schema"] == SCHEMA_VERSION
+
+    def test_v1_entry_still_replays(self, tmp_path):
+        rep, path = self._one_report(tmp_path)
+        d = json.load(open(path))
+        del d["schema"]                        # v1 entries had no field
+        del d["rank_correlation"]
+        for r in d["candidates"]:
+            r.pop("predicted_s", None)
+            r.pop("predicted_vs_measured", None)
+        json.dump(d, open(path, "w"))
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep2 = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                               cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert rep2.cache_hit
+        assert timer.calls == []
+        assert rep2.best == rep.best
+        assert all(r.predicted_s is None for r in rep2.results)
+
+    def test_future_schema_is_a_miss(self, tmp_path):
+        rep, path = self._one_report(tmp_path)
+        d = json.load(open(path))
+        d["schema"] = 99
+        json.dump(d, open(path, "w"))
+        timer = ScriptedTimer({}, default=1.0)
+        _, rep2 = tdp.autotune(fused_prog(), WT, lb_state(), timer=timer,
+                               cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert not rep2.cache_hit
+        assert timer.calls != []               # re-measured from scratch
+
+
+# ---------------------------------------------------------------------------
+# per-stage tuning assignments
+# ---------------------------------------------------------------------------
+
+class TestPerStage:
+    def test_space_gains_stage_candidates(self):
+        cands, _ = tdp.default_space(
+            fused_prog("two_launch"), WT, grid_shape=GRID,
+            executors=["pallas_windowed"], per_stage=True)
+        stage_keys = {k for c in cands for k, _ in c.tuning
+                      if k.startswith("stage:")}
+        assert stage_keys == {"stage:phi_stream", "stage:fused_two"}
+
+    def test_single_windowed_stage_skips_the_axis(self):
+        # one windowed stage makes per-stage ≡ the global sweep
+        cands, _ = tdp.default_space(
+            fused_prog("one_launch"), WT, grid_shape=GRID,
+            executors=["pallas_windowed"], per_stage=True)
+        assert not any(k.startswith("stage:")
+                       for c in cands for k, _ in c.tuning)
+
+    def test_resolve_stage_target_merges_only_its_stage(self):
+        from repro.core.program import resolve_stage_target
+        prog = fused_prog("two_launch")
+        tgt = WT.with_tuning({"stage:fused_two": (("plane_block", 4),)})
+        pplan = prog.plan(tgt, grid_shape=GRID)
+        by_stage = {n: p.target.tuning for n, p in pplan.stages}
+        assert by_stage["fused_two"] == (("plane_block", 4),)
+        assert by_stage["phi_stream"] == ()
+        del resolve_stage_target
+
+    def test_per_stage_candidates_run_bit_identical(self):
+        prog = fused_prog("two_launch")
+        state = lb_state()
+        base = prog.compile(WT, grid_shape=GRID)
+        ref = {k: np.asarray(v)
+               for k, v in base.run(dict(state), 3).items()}
+        for skey in ("stage:phi_stream", "stage:fused_two"):
+            tgt = WT.with_tuning({skey: (("plane_block", 4),)})
+            out = prog.compile(tgt, grid_shape=GRID).run(dict(state), 3)
+            for k in ref:
+                np.testing.assert_array_equal(
+                    ref[k], np.asarray(out[k]),
+                    err_msg=f"{skey} diverges on field {k!r}")
+
+    def test_per_stage_autotune_round_trips_nested_tuning(self, tmp_path):
+        skey = "pallas_windowed_interpret[stage:fused_two{plane_block=4}]"
+        timer = ScriptedTimer({"stage:fused_two{plane_block=4}": 0.01},
+                              default=1.0)
+        tuned, rep = tdp.autotune(
+            fused_prog("two_launch"), WT, lb_state(), timer=timer,
+            executors=["pallas_windowed"], per_stage=True,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert rep.best.label == skey
+        assert dict(tuned.tuning)["stage:fused_two"] == \
+            (("plane_block", 4),)
+        # warm replay restores the nested choice exactly
+        timer2 = ScriptedTimer({}, default=1.0)
+        tuned2, rep2 = tdp.autotune(
+            fused_prog("two_launch"), WT, lb_state(), timer=timer2,
+            executors=["pallas_windowed"], per_stage=True,
+            cache_dir=str(tmp_path), reps=1, warmup=0)
+        assert rep2.cache_hit and timer2.calls == []
+        assert dict(tuned2.tuning)["stage:fused_two"] == \
+            (("plane_block", 4),)

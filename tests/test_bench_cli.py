@@ -133,6 +133,27 @@ class TestCheckRegression:
         assert rep["regressions"] == [] and rep["matched"] == 0
         assert rep["unmatched"] == [("b", "v")]
 
+    def test_compare_warns_on_cost_model_drift_without_gating(self):
+        """predicted_vs_measured drifting >2× the committed record (with
+        a 10% absolute floor) prints a warning but never regresses."""
+        from benchmarks.check_regression import compare
+        base = {"b": {"grid": [8], "variants": {
+            "v": {"median_s": 1.0, "executor": "xla",
+                  "predicted_vs_measured": -0.05},
+            "u": {"median_s": 1.0, "executor": "xla",
+                  "predicted_vs_measured": -0.2},
+            "w": {"median_s": 1.0, "executor": "xla"}}}}
+        fresh = {"b": {"grid": [8], "variants": {
+            "v": {"median_s": 1.0, "executor": "xla",
+                  "predicted_vs_measured": -0.4},    # >2× and >10% → warn
+            "u": {"median_s": 1.0, "executor": "xla",
+                  "predicted_vs_measured": -0.3},    # within 2× → quiet
+            "w": {"median_s": 1.0, "executor": "xla",
+                  "predicted_vs_measured": 0.5}}}}   # no baseline → quiet
+        rep = compare(base, fresh)
+        assert rep["warnings"] == [("b", "v", -0.05, -0.4)]
+        assert rep["regressions"] == []              # never gates
+
     def test_compare_health_identity(self):
         """Guarded fleet variants never gate unguarded ones, and a
         baseline predating the ``health`` field still matches fresh
