@@ -34,9 +34,14 @@ import sys
 #: shape), not of its measurement — a mismatch means "not comparable".
 #: "health" separates guarded fleet variants (HealthPolicy checks
 #: between chunks) from unguarded ones: the guard cost is measured on
-#: purpose and must never gate the guard-off trajectory.
+#: purpose and must never gate the guard-off trajectory.  "layout"
+#: separates SoA from AoSoA sweep points (records predating the layout
+#: axis are SoA).  "sites" is the launch site count for non-lattice
+#: kernels whose record carries no ``grid`` — a quick-lane sweep at a
+#: smaller problem size must never compare against the committed
+#: full-size medians.
 _IDENTITY_KEYS = ("executor", "vvl", "mesh", "scan_length", "batch",
-                  "health")
+                  "health", "layout", "sites")
 
 #: measurement field preference: run.py's program benches write
 #: ``median_s`` (and ``t_s`` aliases it); older records only ``t_s``.
@@ -75,6 +80,8 @@ def _identity(bench: str, rec: dict, key: str, variant: dict) -> tuple:
         v = variant.get(k)
         if k == "health" and v is None:
             v = "off"    # records predating the guard field are unguarded
+        if k == "layout" and v is None:
+            v = "soa"    # records predating the layout axis are SoA
         ident.append((k, v))
     return (bench, tuple(rec.get("grid") or ()), key, tuple(ident))
 

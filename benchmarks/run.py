@@ -745,6 +745,109 @@ def bench_lm_step(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# ported LM kernels (rmsnorm / mamba) — layout × vvl sweep (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _kernels_record() -> dict:
+    """The shared ``BENCH_kernels.json`` record — ``bench_rmsnorm`` and
+    ``bench_mamba`` both merge their variants into it, so one committed
+    file tracks the whole ported-kernel family."""
+    return BENCH_RECORDS.setdefault(
+        "kernels", {"variants": {}, "layouts": ["soa", "aosoa"]})
+
+
+def _layout_vvl_points(quick):
+    from repro import tdp
+    vvls = (64, 256) if quick else (64, 256, 1024)
+    return [(layout, vvl) for layout in tdp.LAYOUTS for vvl in vvls]
+
+
+def bench_rmsnorm(quick=False):
+    """RMSNorm through ``tdp.launch`` (site = token) across
+    layout × vvl on the xla executor, plus a ``tdp.autotune`` run over
+    the same spec — the record carries the tuner's chosen candidate and
+    its default-vs-best medians (the acceptance check that the layout
+    axis never costs performance: candidate 0 *is* the SoA default and
+    wins ties)."""
+    from repro import tdp
+    from repro.kernels import lm, ops
+
+    tokens = 2048 if quick else 8192
+    d = 1024
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(tokens, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+    rec = _kernels_record()
+    rec["rmsnorm"] = {"tokens": tokens, "d": d}
+    rows = []
+    for layout, vvl in _layout_vvl_points(quick):
+        tgt = tdp.Target("xla", vvl=vvl, layout=layout)
+        fn = jax.jit(lambda xx, t=tgt: ops.rmsnorm(xx, w, target=t))
+        ts = _time_stats(fn, x)
+        key = f"rmsnorm_xla_{layout}_vvl{vvl}"
+        rec["variants"][key] = {**ts, "executor": "xla", "vvl": vvl,
+                                "layout": layout, "kernel": "rmsnorm",
+                                "sites": tokens}
+        rows.append(("rmsnorm", layout, vvl, f"{ts['median_s']*1e3:.3f}",
+                     f"{tokens/ts['median_s']/1e6:.1f}"))
+
+    spec = lm.rmsnorm_spec(d)
+    consts = {"weight": w, "eps": 1e-6, "scale_offset": 0.0}
+    tuned, rep = tdp.autotune(
+        spec, tdp.Target("xla", vvl=256), (x.T,), consts=consts,
+        reps=REPS_OVERRIDE or 3, warmup=1, cache_dir=TUNING_CACHE)
+    rec["autotune_rmsnorm"] = {
+        "best": rep.best.label,
+        "default_median_s": rep.default_median_s,
+        "best_median_s": rep.best_median_s,
+        "layout": tuned.layout, "vvl": tuned.vvl,
+    }
+    rows.append((f"rmsnorm autotuned → {rep.best.label}", tuned.layout,
+                 tuned.vvl or "-", f"{rep.best_median_s*1e3:.3f}",
+                 f"{rep.default_median_s/rep.best_median_s:.2f}× vs default"))
+    return _table(
+        f"RMSNorm layout×VVL sweep ({tokens} tokens × d={d}, xla)",
+        rows, ["kernel", "layout", "VVL", "ms", "Mtok/s"])
+
+
+def bench_mamba(quick=False):
+    """Selective-scan (site = channel, time on the component axis)
+    across layout × vvl on the xla executor — the recurrent member of
+    the ported family; the layout axis regroups the *channel* sites."""
+    from repro import tdp
+    from repro.kernels import ops
+
+    length, d_inner, nstate = (64, 256, 8) if quick else (128, 512, 16)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(1, length, d_inner)), jnp.float32)
+    dt = jnp.asarray(
+        0.1 + 0.9 * rng.random((1, length, d_inner)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, length, nstate)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(1, length, nstate)), jnp.float32)
+    a = jnp.asarray(-0.5 - rng.random((d_inner, nstate)), jnp.float32)
+    dd = jnp.asarray(rng.normal(size=(d_inner,)), jnp.float32)
+
+    rec = _kernels_record()
+    rec["mamba"] = {"length": length, "d_inner": d_inner,
+                    "nstate": nstate}
+    rows = []
+    for layout, vvl in _layout_vvl_points(quick):
+        tgt = tdp.Target("xla", vvl=vvl, layout=layout)
+        fn = jax.jit(lambda *args, t=tgt: ops.mamba_scan(*args, target=t))
+        ts = _time_stats(fn, x, dt, b, c, a, dd)
+        key = f"mamba_xla_{layout}_vvl{vvl}"
+        rec["variants"][key] = {**ts, "executor": "xla", "vvl": vvl,
+                                "layout": layout, "kernel": "mamba_scan",
+                                "scan_length": length, "sites": d_inner}
+        rows.append(("mamba_scan", layout, vvl,
+                     f"{ts['median_s']*1e3:.3f}",
+                     f"{length*d_inner/ts['median_s']/1e6:.1f}"))
+    return _table(
+        f"Mamba selective scan layout×VVL sweep "
+        f"(L={length}, d={d_inner}, N={nstate}, xla)",
+        rows, ["kernel", "layout", "VVL", "ms", "Mcell/s"])
+
 
 BENCHES = {
     "fig1": bench_fig1,
@@ -755,6 +858,8 @@ BENCHES = {
     "grad": bench_grad,
     "fleet": bench_fleet,
     "lm_step": bench_lm_step,
+    "rmsnorm": bench_rmsnorm,
+    "mamba": bench_mamba,
 }
 
 

@@ -57,12 +57,19 @@ from .registry import (
 )
 from .api import (
     LaunchPlan,
+    WindowVmemError,
     gather_neighbors,
     halo_extend,
     launch_plan,
     pad_sites,
 )
 from .api import launch as tdp_launch
+from .layout import (
+    LAYOUTS,
+    aosoa_nblocks,
+    aosoa_to_soa,
+    soa_to_aosoa,
+)
 from .program import (
     CompiledProgram,
     Program,
@@ -110,7 +117,9 @@ __all__ = [
     # declarative API
     "Target", "as_target", "FieldSpec", "KernelSpec", "kernel",
     "tdp_launch", "launch_plan", "LaunchPlan", "gather_neighbors",
-    "halo_extend", "pad_sites",
+    "halo_extend", "pad_sites", "WindowVmemError",
+    # memory layout axis (SoA ↔ AoSoA)
+    "LAYOUTS", "aosoa_nblocks", "aosoa_to_soa", "soa_to_aosoa",
     "register_executor", "unregister_executor", "get_executor",
     "get_executor_entry", "executor_wants", "executor_tunables",
     "compatible_executors", "list_executors", "registry_version",

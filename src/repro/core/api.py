@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from .lattice import Lattice, Stencil
+from .layout import aosoa_to_soa, soa_to_aosoa
 from .memory import BatchedConst, TargetConst
 from .registry import (
     get_executor_entry,
@@ -235,6 +236,16 @@ class LaunchPlan:
                             if field_ncomp is not None else None)
         self.wants = wants
 
+    @property
+    def layout(self) -> str:
+        """Executor-internal memory layout (``Target.layout``): ``"soa"``
+        or ``"aosoa"`` — the transforms live at field boundaries inside
+        the executors (:mod:`repro.core.layout`), so the plan's operand
+        and output *byte counts* are layout-invariant; only the AoSoA
+        boundary transforms add traffic (see :meth:`hbm_bytes_estimate`).
+        """
+        return self.target.layout
+
     def with_consts(self, consts: Mapping[str, object]) -> "LaunchPlan":
         """Shallow copy with ``consts`` replaced — the per-call plan the
         dynamic-const path hands to the executor (same kernel, geometry
@@ -301,6 +312,11 @@ class LaunchPlan:
         windowed executor exists to remove); the halo-extended path pays
         only the ghost-layer overhead ``prod(shape + 2·radius) /
         prod(shape)`` — independent of ``noffsets``.
+
+        ``layout="aosoa"`` doubles the estimate: the SoA↔AoSoA boundary
+        transforms re-materialise every prepared operand and output once
+        (one extra HBM round-trip each) — the cost the autotuner's
+        roofline model weighs the layout axis against.
         """
         if self.shape is None:
             raise ValueError("hbm_bytes_estimate needs a lattice shape")
@@ -313,6 +329,8 @@ class LaunchPlan:
                 total += c * _prod_shape(self._ext_shape(s))
             else:
                 total += c * s.noffsets * n
+        if self.layout == "aosoa":
+            total *= 2
         return total * itemsize
 
     def __repr__(self):
@@ -427,6 +445,81 @@ def _validate_wrap_extents(spec: KernelSpec, lattice, halo):
                     f"dim {d} or enlarge it")
 
 
+class WindowVmemError(ValueError):
+    """A ``pallas_windowed`` launch whose VMEM window cannot fit.
+
+    Raised at plan-build time (before any tracing) when
+    :meth:`LaunchPlan.vmem_bytes_estimate` exceeds the fast-memory cap:
+    the ``plane_block + 2·radius`` slab of some field is too large for
+    one grid step.  The message names the worst field, its window bytes,
+    and the cap.  ``tdp.autotune`` *prunes* candidates that raise this
+    (the base target excepted — an unrunnable base is a caller error);
+    shrinking ``plane_block`` or the y/z extents is the fix (y/z window
+    blocking is a carried follow-up, see ROADMAP).
+    """
+
+
+def _vmem_cap() -> int:
+    # lazy: repro.core.costmodel is stdlib-at-import but keep the single
+    # authoritative constant there without risking an import cycle here
+    from .costmodel import DEFAULT_VMEM_LIMIT
+    return DEFAULT_VMEM_LIMIT
+
+
+def _check_window_vmem(plan: "LaunchPlan", spec: KernelSpec) -> None:
+    """Satellite guard: refuse to build a windowed launch whose VMEM
+    window exceeds the cap instead of letting Pallas lowering fail (or
+    silently thrash) deep inside the jitted launch."""
+    cap = _vmem_cap()
+    total = plan.vmem_bytes_estimate()
+    if total <= cap:
+        return
+    p = int(plan.target.tune("plane_block", 1))
+    worst_label, worst_bytes = "<output>", 0
+    for i, (fs, (c, s)) in enumerate(zip(spec.fields, plan._fields())):
+        if s is None:
+            b = c * p * _prod_shape(plan.shape[1:]) * 4
+        else:
+            ext = plan._ext_shape(s)
+            b = c * (p + 2 * s.radius_per_dim()[0]) * \
+                _prod_shape(ext[1:]) * 4
+        if b > worst_bytes:
+            worst_label, worst_bytes = fs.label(i), b
+    raise WindowVmemError(
+        f"kernel {plan.name!r} under executor "
+        f"{plan.target.executor!r}: the plane_block={p} window needs an "
+        f"estimated {total} bytes of VMEM (> cap {cap}); largest window "
+        f"is {worst_label} at {worst_bytes} bytes "
+        f"({p} + 2·radius x-planes of the extended grid) — shrink "
+        f"plane_block or the y/z extents")
+
+
+def _validate_layout(spec: KernelSpec, target: Target,
+                     lattice: Lattice | None, wants: str) -> None:
+    """Plan-build validation of the AoSoA layout axis (satellite fix:
+    an indivisible vvl used to surface deep inside the executor as a
+    reshape error).  Gathered executors pad remainder sites, so any vvl
+    is valid there; the *windowed* AoSoA path regroups each x-plane into
+    vvl blocks and its *output* windows have no remainder story — vvl
+    must divide the interior plane site count.  (Halo-extended stencil
+    operand planes are zero-padded to a vvl multiple inside the
+    executor, so only the interior extent constrains vvl.)"""
+    if target.layout != "aosoa" or wants != "halo_extended":
+        return
+    vvl = target.resolve_vvl()
+    if lattice is None:
+        return
+    shape = lattice.shape
+    rest_n = _prod_shape(shape[1:]) if len(shape) > 1 else 1
+    if rest_n % vvl:
+        raise ValueError(
+            f"kernel {spec.name!r} with layout='aosoa' under executor "
+            f"{target.executor!r}: vvl={vvl} does not divide the "
+            f"interior plane extent {rest_n} (= prod{tuple(shape[1:])}) "
+            f"— the windowed AoSoA path regroups whole x-planes into "
+            f"vvl-site blocks; pick a vvl dividing the plane site count")
+
+
 # ---------------------------------------------------------------------------
 # the launch itself
 # ---------------------------------------------------------------------------
@@ -457,6 +550,8 @@ def _build_plan(spec: KernelSpec, target: Target, vvl: int,
     executor = entry.fn
     plan = _make_plan(spec, target, vvl, out_ncomp, lattice, halo, consts,
                       entry.wants)
+    if entry.wants == "halo_extended":
+        _check_window_vmem(plan, spec)
     stencils = spec.stencils
     shape = lattice.shape if lattice is not None else None
     n_out = len(out_ncomp)
@@ -547,6 +642,7 @@ def launch(spec: KernelSpec, target: Target | str | None = None, /,
     h = _validate_arrays(spec, arrays, lattice, halo)
     if entry.wants == "halo_extended":
         _validate_wrap_extents(spec, lattice, h)
+    _validate_layout(spec, tgt, lattice, entry.wants)
     vvl = tgt.resolve_vvl()
     out_ncomp = spec.out if spec.out is not None else (int(arrays[0].shape[0]),)
     static_consts, dyn_consts = _split_consts(all_consts)
@@ -588,6 +684,7 @@ def launch_plan(spec: KernelSpec, target: Target | str | None = None, *,
          if lattice is not None and spec.has_stencil else None)
     if entry.wants == "halo_extended":
         _validate_wrap_extents(spec, lattice, h)
+    _validate_layout(spec, tgt, lattice, entry.wants)
     if spec.out is not None:
         out_ncomp = spec.out
     elif spec.fields[0].ncomp is not None:
@@ -612,25 +709,43 @@ def xla_executor(plan: LaunchPlan, gathered):
     """The "C implementation": vmap the kernel body over VVL-sized chunks
     (TLP = the chunk loop, fused and threaded by XLA; ILP = jnp ops
     vectorised over the trailing VVL axis).  Handles pointwise chunks,
-    stencil neighbour stacks, and the site-index role uniformly."""
+    stencil neighbour stacks, and the site-index role uniformly.
+
+    ``plan.layout == "aosoa"``: operands are reordered through
+    :func:`repro.core.layout.soa_to_aosoa` — site blocks outermost,
+    ``(ncomp, vvl)`` tiles contiguous per block — and the chunk loop
+    vmaps over the leading block axis.  Each chunk holds exactly the
+    sites the SoA path's chunk *i* holds (same zero padding, same
+    grouping), so results are bit-identical across layouts; only the
+    physical operand ordering differs.
+    """
     vvl = plan.vvl
     n = gathered[0].shape[-1]
     n_pad = -(-n // vvl) * vvl
     nchunks = n_pad // vvl
+    aosoa = plan.layout == "aosoa"
 
-    chunks = [pad_sites(x, vvl).reshape(*x.shape[:-1], nchunks, vvl)
-              for x in gathered]
+    if aosoa:
+        chunks = [soa_to_aosoa(x, vvl) for x in gathered]
+        in_axes = [0] * len(chunks)
+    else:
+        chunks = [pad_sites(x, vvl).reshape(*x.shape[:-1], nchunks, vvl)
+                  for x in gathered]
+        in_axes = [x.ndim - 2 for x in chunks]
     body = (functools.partial(plan.kernel, **plan.consts)
             if plan.consts else plan.kernel)
-    in_axes = [x.ndim - 2 for x in chunks]
     if plan.with_site_index:
         chunks.append(jnp.arange(n_pad, dtype=jnp.int32).reshape(nchunks,
                                                                  vvl))
         in_axes.append(0)
     n_out = len(plan.out_ncomp)
+    out_ax = 0 if aosoa else 1
     outs = jax.vmap(body, in_axes=tuple(in_axes),
-                    out_axes=1 if n_out == 1 else (1,) * n_out)(*chunks)
+                    out_axes=out_ax if n_out == 1 else (out_ax,) * n_out
+                    )(*chunks)
     outs = (outs,) if n_out == 1 else tuple(outs)
+    if aosoa:
+        return tuple(aosoa_to_soa(o, n) for o in outs)
     return tuple(o.reshape(o.shape[0], n_pad)[:, :n] for o in outs)
 
 

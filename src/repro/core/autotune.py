@@ -93,9 +93,12 @@ from .target import Target, as_target
 #: no per-stage tuning).  v2: adds ``schema``, per-candidate
 #: ``predicted_s`` / ``predicted_vs_measured``, report-level
 #: ``rank_correlation``, and nested ``stage:<name>`` tuning values.
+#: v3: adds the per-candidate ``vvl`` / ``layout`` axes (ISSUE 10 —
+#: the AoSoA layout sweep); absent fields replay as ``None`` (inherit
+#: the base target), so v1/v2 entries keep replaying.
 #: Older entries replay (missing fields default); entries written by a
 #: *future* schema are a cache miss, never a parse error.
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: default candidate values for the pointwise Pallas block knobs
 #: (consulted per executor: only keys the executor *declares* via
@@ -160,18 +163,33 @@ class Candidate:
     ``backend`` is a registry name (the ``"..._interpret"`` spellings
     canonicalise through :class:`Target` as usual); ``tuning`` is merged
     into — never replaces — the base target's tuning, so unrelated knobs
-    ride through unchanged.
+    ride through unchanged.  ``vvl`` / ``layout`` (schema v3, ISSUE 10)
+    are the Target-level memory axes: ``None`` inherits the base
+    target's value, a set value overrides it (``layout="aosoa"``
+    candidates sweep the paper's AoSoA ordering; ``vvl`` both sets the
+    gathered chunk size and the AoSoA inner block width).
     """
 
     backend: str
     interpret: bool = False
     tuning: tuple[tuple[str, Any], ...] = ()
+    vvl: int | None = None
+    layout: str | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "tuning", _freeze_items(self.tuning))
+        if self.vvl is not None:
+            object.__setattr__(self, "vvl", int(self.vvl))
+        if self.layout is not None and self.layout not in ("soa", "aosoa"):
+            raise ValueError(f"layout must be 'soa', 'aosoa' or None "
+                             f"(inherit), got {self.layout!r}")
 
     def target_from(self, base: Target) -> Target:
         t = base.with_(backend=self.backend, interpret=self.interpret)
+        if self.vvl is not None:
+            t = t.with_(vvl=self.vvl)
+        if self.layout is not None:
+            t = t.with_(layout=self.layout)
         return t.with_tuning(dict(self.tuning)) if self.tuning else t
 
     @property
@@ -179,26 +197,37 @@ class Candidate:
         name = self.backend
         if self.interpret and not name.endswith("_interpret"):
             name += "_interpret"
-        if self.tuning:
-            knobs = ",".join(
-                (f"{k}{{{','.join(f'{ik}={iv}' for ik, iv in v)}}}"
-                 if _is_pairs(v) else f"{k}={v}")
-                for k, v in self.tuning)
-            return f"{name}[{knobs}]"
-        return name
+        knobs = []
+        if self.layout is not None:
+            knobs.append(f"layout={self.layout}")
+        if self.vvl is not None:
+            knobs.append(f"vvl={self.vvl}")
+        knobs += [(f"{k}{{{','.join(f'{ik}={iv}' for ik, iv in v)}}}"
+                   if _is_pairs(v) else f"{k}={v}")
+                  for k, v in self.tuning]
+        return f"{name}[{','.join(knobs)}]" if knobs else name
 
     def as_dict(self) -> dict:
         return {"backend": self.backend, "interpret": self.interpret,
-                "tuning": {k: _json_value(v) for k, v in self.tuning}}
+                "tuning": {k: _json_value(v) for k, v in self.tuning},
+                "vvl": self.vvl, "layout": self.layout}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Candidate":
+        vvl = d.get("vvl")
         return cls(d["backend"], bool(d.get("interpret", False)),
-                   _freeze_items(d.get("tuning") or {}))
+                   _freeze_items(d.get("tuning") or {}),
+                   None if vvl is None else int(vvl),
+                   d.get("layout"))
 
     @classmethod
     def of(cls, target: Target) -> "Candidate":
-        """The candidate that reproduces ``target``'s dispatch."""
+        """The candidate that reproduces ``target``'s dispatch.
+
+        ``vvl`` / ``layout`` stay ``None`` (inherit) deliberately:
+        candidate 0 must dispatch *exactly* as the base target does,
+        including a ``vvl=None`` target re-resolving the process default
+        at launch time."""
         return cls(target.backend, target.interpret, target.tuning)
 
 
@@ -211,6 +240,25 @@ def _divisors(n: int) -> list[int]:
             if d != n // d:
                 large.append(n // d)
     return small + large[::-1]
+
+
+def _vvl_values(n: int, *, lo: int = 8, hi: int = 8192,
+                max_values: int = 6) -> list[int]:
+    """The vvl sweep for a launch over ``n`` sites (or, for the windowed
+    AoSoA path, ``n`` sites per x-plane): divisors of ``n`` in
+    ``[lo, hi]``, thinned to at most ``max_values`` evenly spaced points
+    (keeping the extremes) so a highly composite site count doesn't
+    explode the space."""
+    n = int(n)
+    if n <= 0:
+        return []
+    vals = [d for d in _divisors(n) if lo <= d <= hi]
+    if not vals:
+        return [n] if n < lo else []
+    if len(vals) > max_values:
+        idx = np.linspace(0, len(vals) - 1, max_values).round().astype(int)
+        vals = sorted({vals[i] for i in idx})
+    return vals
 
 
 def plane_block_candidates(spec: KernelSpec, target: Target | str | None,
@@ -258,7 +306,8 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
                   lattice: Lattice | None = None, halo=None, consts=None,
                   executors: Sequence[str] | None = None,
                   vmem_limit: int = DEFAULT_VMEM_LIMIT,
-                  per_stage: bool = False):
+                  per_stage: bool = False,
+                  site_count: int | None = None):
     """Derive the default candidate space for :func:`autotune`.
 
     Axes (the candidate-space table in docs/targetdp_api.md):
@@ -275,6 +324,17 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
     * per executor that declares pointwise block knobs
       (``executor_tunables``), one candidate per value in
       :data:`POINTWISE_TUNABLE_VALUES`;
+    * per ``wants="gathered"`` executor, the **vvl sweep**
+      (:func:`_vvl_values` — divisors of the launch's site count,
+      thinned and VMEM-filtered; needs ``site_count`` / ``lattice`` /
+      ``grid_shape`` to know the count) and the **layout axis**: one
+      ``layout="aosoa"`` candidate per surviving vvl (gathered AoSoA
+      pads remainder sites, so every vvl is valid);
+    * per ``wants="halo_extended"`` executor, the **layout axis**:
+      ``layout="aosoa"`` candidates over vvl divisors of the (gcd of
+      the windowed stages') interior x-plane site count — the windowed
+      AoSoA validity contract (:func:`repro.core.api.launch`),
+      VMEM-filtered;
     * with ``per_stage=True``, for programs with **more than one**
       windowed stage, an independent per-stage ``plane_block`` sweep:
       one candidate per (stage, divisor-of-that-stage's-plane-count)
@@ -336,6 +396,33 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
         if c.label not in cand_seen:
             cand_seen.add(c.label)
             candidates.append(c)
+
+    if is_program:
+        nsites = math.prod(int(s) for s in grid_shape)
+    elif lattice is not None:
+        nsites = math.prod(int(s) for s in lattice.shape)
+    else:
+        nsites = None if site_count is None else int(site_count)
+
+    def vmem_of(c: Candidate) -> int:
+        t = c.target_from(base)
+        if is_program:
+            return program_or_spec.plan(
+                t, grid_shape=grid_shape).vmem_bytes_estimate()
+        return _launch_plan(program_or_spec, t, lattice=lattice,
+                            halo=halo, consts=consts).vmem_bytes_estimate()
+
+    def add_vmem_checked(c: Candidate):
+        try:
+            vmem = vmem_of(c)
+        except Exception as e:  # noqa: BLE001 — unplannable space point
+            pruned.append((c.label, f"error: {type(e).__name__}: {e}"))
+            return
+        if vmem <= vmem_limit:
+            add(c)
+        else:
+            pruned.append(
+                (c.label, f"vmem estimate {vmem} > limit {vmem_limit}"))
 
     for cand in axis:
         add(cand)
@@ -407,6 +494,39 @@ def default_space(program_or_spec, target: Target | str | None = None, *,
                 for v in POINTWISE_TUNABLE_VALUES.get(key, ()):
                     add(Candidate(cand.backend, cand.interpret,
                                   (((key, int(v)),))))
+
+        # --- layout × vvl axes (ISSUE 10) -----------------------------
+        if executor_wants(cand.backend) == "halo_extended":
+            # windowed AoSoA: vvl must divide each windowed stage's
+            # interior x-plane site count (plan-build contract in
+            # repro.core.api._validate_layout) — sweep divisors of
+            # their gcd
+            if is_program:
+                pplan = program_or_spec.plan(probe, grid_shape=grid_shape)
+                counts = [
+                    math.prod(int(s) for s in p.shape[1:])
+                    for _, p in pplan.stages
+                    if p.wants == "halo_extended" and p.shape is not None]
+            elif lattice is not None:
+                counts = [math.prod(int(s) for s in lattice.shape[1:])]
+            else:
+                counts = []
+            counts = [c for c in counts if c > 0]
+            if counts:
+                for v in _vvl_values(math.gcd(*counts)):
+                    add_vmem_checked(Candidate(cand.backend,
+                                               cand.interpret,
+                                               vvl=v, layout="aosoa"))
+        elif nsites is not None:
+            # gathered executors: the vvl sweep (SoA) plus one AoSoA
+            # candidate per vvl — remainder sites pad, so every divisor
+            # is valid
+            for v in _vvl_values(nsites):
+                if v != probe.resolve_vvl():   # ≡ the bare executor cand
+                    add_vmem_checked(Candidate(cand.backend,
+                                               cand.interpret, vvl=v))
+                add_vmem_checked(Candidate(cand.backend, cand.interpret,
+                                           vvl=v, layout="aosoa"))
     return candidates, pruned
 
 
@@ -801,7 +921,8 @@ def autotune(program_or_spec, target: Target | str | None = None,
             program_or_spec, base, grid_shape=grid if is_program else None,
             lattice=lattice, halo=halo, consts=consts,
             executors=executors, vmem_limit=vmem_limit,
-            per_stage=per_stage)
+            per_stage=per_stage,
+            site_count=None if is_program else int(arrays[0].shape[-1]))
     else:
         pruned = []
         base_cand = Candidate.of(base)
@@ -909,6 +1030,9 @@ def autotune(program_or_spec, target: Target | str | None = None,
         raise RuntimeError(
             f"autotune({key}): no candidate survived measurement "
             f"(pruned: {[p[0] for p in pruned]})")
+    # min() keeps the *first* minimum, and the base target is always
+    # measured first — exact ties go to candidate 0, so a tuned target
+    # never trades the default dispatch for an equally-fast exotic one
     best = min(results, key=lambda r: r.median_s).candidate
     report = TuneReport(
         name=_subject_digest(program_or_spec)[0], grid=grid,

@@ -1,0 +1,103 @@
+"""SoA ↔ AoSoA(vvl) layout transforms — the paper's VVL site-ordering.
+
+targetDP's ``VVL`` macro does more than strip-mine the ILP loop: in the
+AoSoA build it *reorders memory* so that each group of VVL sites stores
+its components contiguously — ``[site-block][component][site-in-block]``
+— which is what lets one source kernel vectorise on AVX lanes and CUDA
+threads alike (arXiv:1405.6162 §III; arXiv:1609.01479 extends the same
+axis to Xeon Phi; Alpaka, arXiv:1602.08477, makes the identical
+layout-as-abstraction argument).  This module is that reordering as a
+pair of exact inverse transforms applied at *field boundaries* — callers
+and kernels only ever see SoA ``(ncomp, nsites)`` arrays / ``(ncomp,
+VVL)`` chunks; the executor-internal operand layout is what changes.
+
+Remainder-site contract: when ``vvl`` does not divide ``nsites`` the
+trailing partial block is **zero-padded** (``soa_to_aosoa``) and the pad
+lanes are sliced away on the way back (``aosoa_to_soa``) — round-trip
+exact for every extent, including ``nsites < vvl``.  Kernels may write
+garbage (even NaN) into pad lanes, exactly the :func:`repro.core.api.
+pad_sites` contract the chunked executors already rely on.
+
+Layout axis values (``Target.layout``):
+
+==========  ============================================================
+``"soa"``   structure-of-arrays, sites contiguous per component (default)
+``"aosoa"`` array-of-structures-of-arrays: vvl-site blocks outermost,
+            components per block, sites-in-block innermost
+==========  ============================================================
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LAYOUTS = ("soa", "aosoa")
+
+
+def aosoa_nblocks(nsites: int, vvl: int) -> int:
+    """Number of AoSoA site blocks covering ``nsites`` (last one padded)."""
+    if vvl <= 0:
+        raise ValueError(f"vvl must be positive, got {vvl}")
+    return -(-int(nsites) // int(vvl))
+
+
+def soa_to_aosoa(x: jax.Array, vvl: int) -> jax.Array:
+    """``(..., ncomp, nsites)`` SoA → ``(nblocks, ..., ncomp, vvl)`` AoSoA.
+
+    The trailing site axis is zero-padded to a ``vvl`` multiple and split
+    into blocks; blocks move to the *front* so the per-block tile
+    ``(..., ncomp, vvl)`` is contiguous — components interleave per
+    block, sites stay innermost (lane axis).  Leading axes (e.g. the
+    ``noffsets`` axis of a gathered stencil stack) ride along inside
+    each block.
+    """
+    n = int(x.shape[-1])
+    nblk = aosoa_nblocks(n, vvl)
+    n_pad = nblk * vvl
+    if n_pad != n:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
+        x = jnp.pad(x, widths)
+    y = x.reshape(*x.shape[:-1], nblk, vvl)          # (..., ncomp, nblk, vvl)
+    return jnp.moveaxis(y, -2, 0)                    # (nblk, ..., ncomp, vvl)
+
+
+def aosoa_to_soa(y: jax.Array, nsites: int) -> jax.Array:
+    """Exact inverse of :func:`soa_to_aosoa`: ``(nblocks, ..., ncomp,
+    vvl)`` → ``(..., ncomp, nsites)``, pad lanes sliced away."""
+    x = jnp.moveaxis(y, 0, -2)                       # (..., ncomp, nblk, vvl)
+    x = x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+    return x[..., :int(nsites)]
+
+
+def plane_to_aosoa(x: jax.Array, vvl: int) -> jax.Array:
+    """Per-plane AoSoA for the windowed executor: ``(ncomp, nplanes,
+    *rest)`` → ``(nplanes, nblk, ncomp, vvl)`` with ``nblk =
+    prod(rest) / vvl``.
+
+    Each x-plane's rest-sites are regrouped into vvl blocks so a window
+    BlockSpec can DMA ``(plane_block + 2r, nblk, ncomp, vvl)`` tiles.
+    Unlike :func:`soa_to_aosoa` this transform has **no remainder
+    path**: ``vvl`` must divide the plane's site count exactly (a
+    partial block would straddle two x-planes and break the window
+    aliasing) — :func:`repro.core.api.launch` validates this at
+    plan-build time.
+    """
+    ncomp, npl = int(x.shape[0]), int(x.shape[1])
+    rest_n = 1
+    for s in x.shape[2:]:
+        rest_n *= int(s)
+    if rest_n % int(vvl):
+        raise ValueError(
+            f"plane site count {rest_n} is not divisible by vvl {vvl}; "
+            f"the windowed AoSoA path has no remainder blocks")
+    nblk = rest_n // int(vvl)
+    y = x.reshape(ncomp, npl, nblk, vvl)
+    return jnp.transpose(y, (1, 2, 0, 3))            # (npl, nblk, ncomp, vvl)
+
+
+def plane_from_aosoa(y: jax.Array, rest_shape: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`plane_to_aosoa`: ``(nplanes, nblk, ncomp, vvl)``
+    → ``(ncomp, nplanes, *rest_shape)``."""
+    npl, nblk, ncomp, vvl = (int(s) for s in y.shape)
+    x = jnp.transpose(y, (2, 0, 1, 3)).reshape(ncomp, npl, nblk * vvl)
+    return x.reshape(ncomp, npl, *rest_shape)

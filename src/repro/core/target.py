@@ -68,6 +68,13 @@ class Target:
         process default at launch time.  (The windowed executor chunks by
         x-planes, not VVL — see ``plane_block`` below.)
       interpret: run Pallas semantics on CPU (validation mode).
+      layout: executor-internal memory layout — ``"soa"`` (default;
+        sites contiguous per component) or ``"aosoa"`` (vvl-site blocks
+        outermost, the paper's AoSoA ``VVL`` ordering; ``vvl`` is the
+        inner block width).  Callers always pass and receive SoA
+        ``(ncomp, nsites)`` arrays; the transforms live at field
+        boundaries (:mod:`repro.core.layout`), so kernels stay
+        single-source and results are bit-identical across layouts.
       mesh / shard_axis: optional sharding hints for mesh-aware callers
         (e.g. :class:`repro.lb.sim.BinaryFluidSim`); the core launch does
         not act on them, it only carries them.  ``shard_axis`` is one
@@ -85,6 +92,7 @@ class Target:
     backend: str = "xla"
     vvl: int | None = None
     interpret: bool = False
+    layout: str = "soa"
     mesh: Any = None
     shard_axis: str | tuple[str, ...] | None = None
     tuning: tuple[tuple[str, Any], ...] = field(default=())
@@ -101,6 +109,10 @@ class Target:
             if int(self.vvl) <= 0:
                 raise ValueError(f"vvl must be positive, got {self.vvl}")
             object.__setattr__(self, "vvl", int(self.vvl))
+        if self.layout not in ("soa", "aosoa"):
+            raise ValueError(
+                f"layout must be 'soa' or 'aosoa', got {self.layout!r} "
+                f"(the AoSoA inner width is the separate vvl field)")
         # multi-axis decompositions name one mesh axis per sharded grid
         # dim; freeze to a tuple so the Target stays hashable
         if isinstance(self.shard_axis, (list, tuple)):
@@ -159,14 +171,16 @@ class Target:
 
 
 def as_target(target: "Target | str | None" = None, *,
-              vvl: int | None = None) -> Target:
+              vvl: int | None = None,
+              layout: str | None = None) -> Target:
     """Coerce the accepted spellings to a :class:`Target`.
 
     This is the *single* place a backend string becomes a Target — ops and
     launches accept strings only through here.
 
     ``None`` → default xla target; a string → ``Target(backend=string)``;
-    a Target passes through.  ``vvl`` (if given) overrides the target's.
+    a Target passes through.  ``vvl`` / ``layout`` (if given) override
+    the target's.
     """
     if target is None:
         target = Target()
@@ -178,4 +192,6 @@ def as_target(target: "Target | str | None" = None, *,
             f"{type(target).__name__}: {target!r}")
     if vvl is not None:
         target = target.with_(vvl=vvl)
+    if layout is not None:
+        target = target.with_(layout=layout)
     return target

@@ -7,9 +7,11 @@ tests and by the CPU/dry-run path.
 
 Kernels:
   tdp_pointwise     generic targetDP site-kernel executor (the paper's core)
+  tdp_windowed      gather-free windowed stencil executor (SoA / AoSoA)
   lb_collision      D3Q19 binary-fluid LB collision (the paper's benchmark)
-  rmsnorm           fused RMSNorm over the token lattice
-  swiglu            fused SwiGLU / squared-ReLU activation
+  lm                rmsnorm / gated activations / mamba scan as KernelSpecs
+                    on the shared executors (ISSUE 10 — the beyond-the-
+                    lattice proof; replaced the hand-written rmsnorm.py,
+                    swiglu.py and mamba_scan.py modules)
   flash_attention   blocked causal/windowed/softcapped attention
-  mamba_scan        Mamba-1 selective-scan (chunked, state in VMEM)
 """

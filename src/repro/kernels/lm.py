@@ -1,0 +1,144 @@
+"""LM kernels on the targetDP core — rmsnorm, gated activations, mamba.
+
+These used to be three hand-written Pallas modules (``rmsnorm.py``,
+``swiglu.py``, ``mamba_scan.py``) with their own grids, BlockSpecs,
+padding and dispatch — a parallel executor stack the Target/layout/
+autotune machinery couldn't reach.  ISSUE 10 ports them onto
+:class:`~repro.core.KernelSpec` + :func:`repro.core.api.launch`, which
+proves the abstraction *beyond the lattice*: the "site" is whatever
+axis the op is independent over, and the single-source kernel body
+then rides every executor, layout (``soa``/``aosoa``), VVL, and
+``tdp.autotune`` candidate space for free.
+
+Site-axis choices (the targetDP view of each op):
+
+* **rmsnorm** — site = token.  The SoA field is ``(d, tokens)`` (the
+  transpose of the usual ``(tokens, d)`` activation), so the per-token
+  feature reduction is a reduction over *components* inside one chunk;
+  the weight rides as a dynamic array const (gradients flow).
+* **gated activations** — site = flattened element.  Pure pointwise:
+  ``(tokens, d_ff)`` flattens to one 1-component field of
+  ``tokens·d_ff`` sites.
+* **mamba selective scan** — site = channel (``d_inner``).  The scan
+  is sequential in time but independent per channel, so time lives on
+  the *component* axis (``(L, channels)`` fields), the recurrence is a
+  ``lax.scan`` inside the kernel body, and chunking/layout apply to
+  the channel axis.  ``B``/``C`` have no channel axis — dynamic array
+  consts.
+
+Specs are built per shape signature and cached (``lru_cache``) so the
+launch-plan cache keys stay stable across calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FieldSpec, KernelSpec
+
+#: gated_act kinds (same table as repro.kernels.ref.gated_act_ref)
+GATED_KINDS = ("swiglu", "silu", "geglu", "gelu", "relu2")
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def rmsnorm_spec(d: int) -> KernelSpec:
+    """RMSNorm over ``(d, tokens)`` SoA: per-site (= per-token) feature
+    reduction across the ``d`` components of one chunk."""
+
+    def rmsnorm_site(x, *, weight, eps, scale_offset):
+        xf = x.astype(jnp.float32)                        # (d, V)
+        inv = jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=0, keepdims=True) + eps)
+        w = weight.astype(jnp.float32).reshape(d, 1) + scale_offset
+        return (xf * inv * w).astype(x.dtype)
+
+    return KernelSpec(rmsnorm_site, fields=(FieldSpec(d, name="x"),),
+                      out=(d,), consts=("weight", "eps", "scale_offset"),
+                      name=f"rmsnorm_d{d}")
+
+
+# ---------------------------------------------------------------------------
+# gated activations
+# ---------------------------------------------------------------------------
+
+def _act(kind: str, uf):
+    if kind in ("swiglu", "silu"):
+        return uf * jax.nn.sigmoid(uf)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(uf, approximate=True)
+    if kind == "relu2":
+        r = jnp.maximum(uf, 0.0)
+        return r * r
+    raise ValueError(kind)
+
+
+@functools.lru_cache(maxsize=None)
+def gated_act_spec(kind: str, gated: bool) -> KernelSpec:
+    """Elementwise activation (optionally × a gate field) over flattened
+    1-component sites."""
+    if kind not in GATED_KINDS:
+        raise ValueError(f"kind must be one of {GATED_KINDS}, got {kind!r}")
+
+    if gated:
+        def gated_site(u, v):
+            return (_act(kind, u.astype(jnp.float32))
+                    * v.astype(jnp.float32)).astype(u.dtype)
+        fields = (FieldSpec(1, name="u"), FieldSpec(1, name="v"))
+        fn = gated_site
+    else:
+        def act_site(u):
+            return _act(kind, u.astype(jnp.float32)).astype(u.dtype)
+        fields = (FieldSpec(1, name="u"),)
+        fn = act_site
+
+    return KernelSpec(fn, fields=fields, out=(1,),
+                      name=f"gated_{kind}{'' if gated else '_ungated'}")
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def mamba_scan_spec(length: int, nstate: int) -> KernelSpec:
+    """Selective state-space scan, site = channel.
+
+    Chunk shapes inside the body: ``x``/``dt`` ``(L, V)``, ``a``
+    ``(N, V)``, ``d`` ``(1, V)``; ``b``/``c`` are ``(L, N)`` dynamic
+    array consts (no channel axis).  Outputs ``y (L, V)`` and the final
+    state ``h (N, V)`` — the recurrence itself is a ``lax.scan`` over
+    the component (time) axis, so every executor/layout runs the same
+    sequential-in-time, parallel-in-channel schedule.
+    """
+
+    def mamba_site(x, dt, a, d, *, b, c):
+        xf = x.astype(jnp.float32)
+        dtf = dt.astype(jnp.float32)
+        af = a.astype(jnp.float32)
+        df = d.astype(jnp.float32)
+        bf = b.astype(jnp.float32)
+        cf = c.astype(jnp.float32)
+
+        def step(h, inp):
+            x_t, dt_t, b_t, c_t = inp          # (V,), (V,), (N,), (N,)
+            decay = jnp.exp(dt_t[None, :] * af)            # (N, V)
+            h = h * decay + (dt_t * x_t)[None, :] * b_t[:, None]
+            y_t = (h * c_t[:, None]).sum(0) + df[0] * x_t
+            return h, y_t
+
+        h0 = jnp.zeros((nstate, xf.shape[-1]), jnp.float32)
+        h_final, ys = jax.lax.scan(step, h0, (xf, dtf, bf, cf))
+        return ys.astype(x.dtype), h_final
+
+    return KernelSpec(
+        mamba_site,
+        fields=(FieldSpec(length, name="x"), FieldSpec(length, name="dt"),
+                FieldSpec(nstate, name="a"), FieldSpec(1, name="d")),
+        out=(length, nstate), consts=("b", "c"),
+        name=f"mamba_scan_L{length}_n{nstate}")

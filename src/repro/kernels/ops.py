@@ -18,18 +18,28 @@ kwarg, which coerces through the same helper).  Builtin executor names:
 Every wrapper takes the same arguments on every target — single source at
 the call site, exactly the paper's portability contract.  Per-op block
 sizes may ride in ``Target.tuning`` (e.g. ``Target("pallas",
-tuning={"block_f": 512})``) instead of being threaded by hand.
+tuning={"block_q": 64})``) instead of being threaded by hand.
+
+The LM pointwise ops (``rmsnorm``, ``gated_act``, ``mamba_scan``) are
+**ported onto the core** (:mod:`repro.kernels.lm`): they declare a
+:class:`~repro.core.KernelSpec` and dispatch through ``tdp.launch`` on
+*every* backend — including ``"xla"`` — so the shared executors, the
+``Target.layout`` AoSoA axis, and ``tdp.autotune`` all apply with zero
+op-specific executor code.  ``flash_attention`` and ``lb_collision``
+keep their hand-written dispatch (attention's softmax streaming does
+not decompose into independent sites).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import Target, as_target
+from repro.core.api import launch as _tdp_launch
 
 from . import flash_attention as _fa
 from . import lb_collision as _lb
-from . import mamba_scan as _ms
+from . import lm as _lm
 from . import ref as _ref
-from . import rmsnorm as _rn
-from . import swiglu as _sg
 
 VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
 
@@ -37,11 +47,13 @@ VALID_BACKENDS = ("xla", "pallas", "pallas_interpret")
 #: op-layer half of the registry's ``executor_tunables`` contract
 #: (``register_executor(..., tunables=...)``): a tuned Target produced
 #: by ``tdp.autotune`` rides these knobs into the hand-written kernels
-#: with no per-op plumbing at the call site.
+#: with no per-op plumbing at the call site.  The ops ported onto
+#: ``tdp.launch`` (rmsnorm / gated_act / mamba_scan — see
+#: :mod:`repro.kernels.lm`) have no hand-written knobs left: their
+#: tunables are the Target-level ``vvl`` / ``layout`` axes the shared
+#: executors and ``tdp.autotune`` already own.
 TUNABLES: dict[str, tuple[str, ...]] = {
-    "gated_act": ("block_f",),
     "flash_attention": ("block_q", "block_k"),
-    "mamba_scan": ("block_d", "block_t"),
 }
 
 
@@ -136,24 +148,35 @@ def lb_fused_step(f, g, *, grid_shape, halo=0, mode="one_launch",
 
 def rmsnorm(x, weight, *, target=None, backend=None, vvl=None, eps=1e-6,
             scale_offset=0.0):
+    """RMSNorm of ``x: (tokens, d)`` with ``weight: (d,)`` through
+    ``tdp.launch`` — site = token, features on the component axis
+    (:func:`repro.kernels.lm.rmsnorm_spec`).  ``scale_offset=1.0`` gives
+    the Gemma convention ``x · rms · (1 + w)``.  All executors, layouts
+    and VVLs of the shared registry apply; gradients flow through
+    ``weight`` (a dynamic array const)."""
     t = op_target(target, backend, vvl, default_vvl=256)
-    if _check_pallas(t):
-        return _rn.rmsnorm_pallas(x, weight, vvl=t.vvl, eps=eps,
-                                  scale_offset=scale_offset,
-                                  interpret=t.interpret)
-    return _ref.rmsnorm_ref(x, weight, eps=eps, scale_offset=scale_offset)
+    _check_pallas(t)
+    spec = _lm.rmsnorm_spec(int(x.shape[-1]))
+    out = _tdp_launch(spec, t, x.T,
+                      consts={"weight": weight, "eps": float(eps),
+                              "scale_offset": float(scale_offset)})
+    return out.T
 
 
 def gated_act(u, v=None, *, kind="swiglu", target=None, backend=None,
               vvl=None, block_f=None):
+    """Gated activation ``act(u) · v`` (or plain ``act(u)`` when ``v`` is
+    ``None``) through ``tdp.launch`` — site = flattened element
+    (:func:`repro.kernels.lm.gated_act_spec`).  ``block_f`` is accepted
+    for call-site compatibility with the retired hand-written kernel;
+    the shared executors chunk by the Target's ``vvl`` instead."""
+    del block_f
     t = op_target(target, backend, vvl, default_vvl=256)
-    if _check_pallas(t):
-        return _sg.gated_act_pallas(
-            u, v, kind=kind, vvl=t.vvl,
-            block_f=block_f if block_f is not None
-            else t.tune("block_f", 512),
-            interpret=t.interpret)
-    return _ref.gated_act_ref(u, v, kind=kind)
+    _check_pallas(t)
+    spec = _lm.gated_act_spec(str(kind), v is not None)
+    args = (u.reshape(1, -1),) if v is None else (u.reshape(1, -1),
+                                                  v.reshape(1, -1))
+    return _tdp_launch(spec, t, *args).reshape(u.shape)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
@@ -185,14 +208,32 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
 
 def mamba_scan(x, dt, b, c, a, d, *, target=None, backend=None,
-               block_d=None, block_t=None):
-    t = op_target(target, backend)
-    if _check_pallas(t):
-        return _ms.mamba_scan_pallas(
-            x, dt, b, c, a, d,
-            block_d=block_d if block_d is not None
-            else t.tune("block_d", 128),
-            block_t=block_t if block_t is not None
-            else t.tune("block_t", 128),
-            interpret=t.interpret)
-    return _ref.mamba_scan_ref(x, dt, b, c, a, d)
+               block_d=None, block_t=None, vvl=None):
+    """Selective state-space scan through ``tdp.launch`` — site =
+    channel, time on the component axis
+    (:func:`repro.kernels.lm.mamba_scan_spec`).
+
+    Shapes: ``x``/``dt`` ``(batch, L, d_inner)``, ``b``/``c``
+    ``(batch, L, N)``, ``a`` ``(d_inner, N)``, ``d`` ``(d_inner,)``.
+    Returns ``(y (batch, L, d_inner), h_final (batch, d_inner, N))``.
+
+    ``block_d`` (the retired hand-written kernel's channel block) maps
+    onto the Target's ``vvl`` — both mean "channels per chunk";
+    ``block_t`` is accepted and ignored (the recurrence is sequential
+    in time on every executor)."""
+    del block_t
+    t = op_target(target, backend, vvl,
+                  default_vvl=int(block_d) if block_d is not None else 128)
+    _check_pallas(t)
+    batch, length, d_inner = (int(s) for s in x.shape)
+    nstate = int(a.shape[-1])
+    spec = _lm.mamba_scan_spec(length, nstate)
+    a_soa = a.T                                    # (N, d_inner)
+    d_soa = d.reshape(1, d_inner)
+    ys, hs = [], []
+    for i in range(batch):
+        y_i, h_i = _tdp_launch(spec, t, x[i], dt[i], a_soa, d_soa,
+                               consts={"b": b[i], "c": c[i]})
+        ys.append(y_i)
+        hs.append(h_i.T)                           # (d_inner, N)
+    return jnp.stack(ys), jnp.stack(hs)

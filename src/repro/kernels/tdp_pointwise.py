@@ -75,21 +75,36 @@ def _canonicalize_consts(consts: dict):
 
 def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
                 out_ncomp: tuple[int, ...], consts: dict, interpret: bool,
-                gathered: Sequence[jax.Array], name: str):
+                gathered: Sequence[jax.Array], name: str,
+                layout: str = "soa"):
     """Map ``kernel`` over VVL site chunks with explicit VMEM blocks.
 
     ``gathered``: per input, ``(noffsets, ncomp, n)`` for stencil fields or
     ``(ncomp, n)`` for pointwise ones — the output of the shared gather
     prologue in :mod:`repro.core.api`.  Grid = one step per VVL chunk.
+
+    ``layout="aosoa"``: operands are reordered to the paper's AoSoA
+    ``[site-block][component][lane]`` ordering
+    (:func:`repro.core.layout.soa_to_aosoa`) and each grid step DMAs one
+    *contiguous* block — for SoA the per-chunk BlockSpec strides across
+    ``ncomp`` separate rows of HBM, for AoSoA it is a single dense tile.
+    The kernel body still sees ``(ncomp, VVL)`` / ``(noffsets, ncomp,
+    VVL)`` chunks with identical contents, so site kernels stay
+    single-source and outputs are bit-identical across layouts.
     """
     from repro.core.api import pad_sites
+    from repro.core.layout import aosoa_to_soa, soa_to_aosoa
 
     n = gathered[0].shape[-1]
     n_pad = -(-n // vvl) * vvl
     nchunks = n_pad // vvl
     dtype = gathered[0].dtype
+    aosoa = layout == "aosoa"
 
-    padded = tuple(pad_sites(x, vvl) for x in gathered)
+    if aosoa:
+        padded = tuple(soa_to_aosoa(x, vvl) for x in gathered)
+    else:
+        padded = tuple(pad_sites(x, vvl) for x in gathered)
     scalar_consts, array_consts = _canonicalize_consts(consts)
     const_names = list(array_consts)
     const_vals = [array_consts[k][1] for k in const_names]
@@ -99,7 +114,11 @@ def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
         cref0 = len(padded)
         const_refs = refs[cref0:cref0 + len(const_names)]
         out_refs = refs[cref0 + len(const_names):]
-        chunks = [r[...] for r in in_refs]
+        if aosoa:
+            # (1, ..., ncomp, vvl) block → the site-kernel chunk shape
+            chunks = [r[...].reshape(r.shape[1:]) for r in in_refs]
+        else:
+            chunks = [r[...] for r in in_refs]
         if with_site_index:
             # global site index of each lane in this chunk (TARGET_ILP offset
             # + baseIndex), computed from the grid position.
@@ -112,9 +131,12 @@ def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
         vals = kernel(*chunks, **kw)
         vals = (vals,) if not isinstance(vals, tuple) else vals
         for r, v in zip(out_refs, vals):
-            r[...] = v.astype(r.dtype)
+            r[...] = v.reshape(r.shape).astype(r.dtype)
 
     def site_spec(x):
+        if aosoa:
+            return pl.BlockSpec((1, *x.shape[1:]),
+                                lambda i: (i,) + (0,) * (x.ndim - 1))
         if x.ndim == 3:       # (noffsets, ncomp, vvl) halo block
             return pl.BlockSpec((x.shape[0], x.shape[1], vvl),
                                 lambda i: (0, 0, i))
@@ -123,8 +145,16 @@ def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
     in_specs = [site_spec(x) for x in padded] + [
         pl.BlockSpec(c.shape, lambda i: (0, 0)) for c in const_vals
     ]
-    out_specs = [pl.BlockSpec((c, vvl), lambda i: (0, i)) for c in out_ncomp]
-    out_shape = [jax.ShapeDtypeStruct((c, n_pad), dtype) for c in out_ncomp]
+    if aosoa:
+        out_specs = [pl.BlockSpec((1, c, vvl), lambda i: (i, 0, 0))
+                     for c in out_ncomp]
+        out_shape = [jax.ShapeDtypeStruct((nchunks, c, vvl), dtype)
+                     for c in out_ncomp]
+    else:
+        out_specs = [pl.BlockSpec((c, vvl), lambda i: (0, i))
+                     for c in out_ncomp]
+        out_shape = [jax.ShapeDtypeStruct((c, n_pad), dtype)
+                     for c in out_ncomp]
 
     outs = pl.pallas_call(
         body,
@@ -136,6 +166,8 @@ def _run_pallas(kernel: Callable, vvl: int, with_site_index: bool,
         name=name,
     )(*padded, *const_vals)
 
+    if aosoa:
+        return tuple(aosoa_to_soa(o, n) for o in outs)
     return tuple(o[:, :n] for o in outs)
 
 
@@ -145,7 +177,8 @@ def pallas_execute(plan, gathered: Sequence[jax.Array]):
     return _run_pallas(
         plan.kernel, plan.vvl, plan.with_site_index, tuple(plan.out_ncomp),
         plan.consts, plan.interpret, gathered,
-        name=f"tdp_{plan.name}_vvl{plan.vvl}")
+        name=f"tdp_{plan.name}_vvl{plan.vvl}_{plan.layout}",
+        layout=plan.layout)
 
 
 def pallas_launch(kernel: Callable, vvl: int, with_site_index: bool,

@@ -37,12 +37,32 @@ under the 57× fused gather fit comfortably.
 
 Tuning (``Target.tuning``): ``plane_block`` — output x-planes per grid
 step (TLP chunk; window depth is ``plane_block + 2r₀``).  Default 1.
+
+Layout axis (``Target.layout``): under ``"aosoa"`` every x-plane of
+every *operand* is regrouped into vvl-site blocks
+(:func:`repro.core.layout.plane_to_aosoa`), so each grid step's VMEM
+window is a stack of **dense** ``(plane_block + 2r, nblk, ncomp, vvl)``
+tiles instead of ``ncomp`` strided plane rows.  The in-kernel
+un-interleave restores ``(ncomp, *ext_rest)`` planes before the offset
+resolution, so site kernels are untouched.  Outputs are written as
+plain SoA plane blocks in **both** layouts: re-interleaving the result
+in-kernel feeds a transpose into the fused site-math cluster, and XLA
+then contracts the arithmetic's mul+add chains into FMAs differently
+per vvl — trading a dense output store for broken bit-identity.  With
+SoA output blocks every layout×vvl point is bit-identical to the SoA
+path (pinned by ``tests/test_layout.py``).  ``vvl`` must divide the
+*interior* plane site count exactly — validated at plan-build time by
+:func:`repro.core.api.launch`; the halo-extended stencil operand planes
+are zero-padded to a vvl multiple here and the pad lanes sliced away
+in-kernel.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.layout import plane_to_aosoa
 
 from .tdp_pointwise import _canonicalize_consts
 
@@ -79,6 +99,8 @@ def windowed_execute(plan, extended):
     x_pad = nwin * p - X
     chunk = p * rest_n
     dtype = extended[0].dtype
+    aosoa = plan.layout == "aosoa"
+    vvl = int(plan.vvl)
 
     operands, in_specs, field_meta = [], [], []
     for x, s in zip(extended, stencils):
@@ -88,9 +110,17 @@ def windowed_execute(plan, extended):
             if x_pad:
                 grid_x = jnp.pad(grid_x, [(0, 0), (0, x_pad)]
                                  + [(0, 0)] * (ndim - 1))
-            operands.append(grid_x)
-            in_specs.append(pl.BlockSpec(
-                (ncomp, p, *rest), lambda i: (0, i, *([0] * (ndim - 1)))))
+            if aosoa:
+                # (X, nblk, ncomp, vvl): per-plane vvl-site tiles
+                operands.append(plane_to_aosoa(grid_x, vvl))
+                nblk = rest_n // vvl
+                in_specs.append(pl.BlockSpec(
+                    (p, nblk, ncomp, vvl), lambda i: (i, 0, 0, 0)))
+            else:
+                operands.append(grid_x)
+                in_specs.append(pl.BlockSpec(
+                    (ncomp, p, *rest),
+                    lambda i: (0, i, *([0] * (ndim - 1)))))
             field_meta.append(("pointwise", ncomp, None, None))
         else:
             r = s.radius_per_dim()
@@ -104,15 +134,32 @@ def windowed_execute(plan, extended):
                 x = jnp.pad(x, [(0, 0), (0, x_pad)]
                             + [(0, 0)] * (ndim - 1))
             window = p + 2 * r[0]
+            if aosoa:
+                # flatten the extended rest dims and zero-pad each plane
+                # to a vvl multiple (the interior-divisibility contract
+                # doesn't extend to halo-widened planes); the in-kernel
+                # unpack slices the pad lanes away
+                xf = x.reshape(ncomp, int(x.shape[1]), -1)
+                pad = (-int(xf.shape[-1])) % vvl
+                if pad:
+                    xf = jnp.pad(xf, [(0, 0), (0, 0), (0, pad)])
+                x = plane_to_aosoa(xf, vvl)  # (Xext, nblk_e, ncomp, vvl)
+                nblk_e = int(x.shape[1])
             # One depth-1 plane ref per window slot: operand j of this
             # field is the extended array blocked at x-plane i·p + j.
             # All window operands alias one HBM value — the only copies
             # are the per-step HBM→VMEM window loads.
             for j in range(window):
                 operands.append(x)
-                in_specs.append(pl.BlockSpec(
-                    (ncomp, 1, *ext[1:]),
-                    lambda i, j=j: (0, i * p + j, *([0] * (ndim - 1)))))
+                if aosoa:
+                    in_specs.append(pl.BlockSpec(
+                        (1, nblk_e, ncomp, vvl),
+                        lambda i, j=j: (i * p + j, 0, 0, 0)))
+                else:
+                    in_specs.append(pl.BlockSpec(
+                        (ncomp, 1, *ext[1:]),
+                        lambda i, j=j: (0, i * p + j,
+                                        *([0] * (ndim - 1)))))
             field_meta.append(("stencil", ncomp, s, r))
 
     scalar_consts, array_consts = _canonicalize_consts(plan.consts)
@@ -133,12 +180,32 @@ def windowed_execute(plan, extended):
         const_refs = refs[cref0:cref0 + len(const_names)]
         out_refs = refs[cref0 + len(const_names):]
 
+        def unpack_plane(blk, ncomp, rest_shape):
+            # (nplanes, nblk, ncomp, vvl) AoSoA tile → SoA planes
+            # (ncomp, nplanes, *rest_shape); extended planes may carry
+            # trailing vvl-alignment pad lanes — sliced away here
+            npl = int(blk.shape[0])
+            y = jnp.transpose(blk, (2, 0, 1, 3))
+            y = y.reshape(ncomp, npl, -1)
+            rn = _prod(rest_shape)
+            if int(y.shape[-1]) != rn:
+                y = y[..., :rn]
+            return y.reshape(ncomp, npl, *rest_shape)
+
         chunks = []
         for kind, ncomp, s, r in field_meta:
             if kind == "pointwise":
-                chunks.append(next(it)[...].reshape(ncomp, chunk))
+                blk = next(it)[...]
+                if aosoa:
+                    blk = unpack_plane(blk, ncomp, rest)
+                chunks.append(blk.reshape(ncomp, chunk))
                 continue
+            ext_rest = tuple(sd + 2 * rd
+                             for sd, rd in zip(shape[1:], r[1:]))
             planes = [next(it)[...] for _ in range(p + 2 * r[0])]
+            if aosoa:
+                planes = [unpack_plane(pp, ncomp, ext_rest)
+                          for pp in planes]
             nb = []
             for off in s.offsets:
                 rows = []
@@ -173,7 +240,7 @@ def windowed_execute(plan, extended):
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=plan.interpret,
-        name=f"tdp_windowed_{plan.name}_p{p}",
+        name=f"tdp_windowed_{plan.name}_p{p}_{plan.layout}",
     )(*operands, *const_vals)
 
     n = X * rest_n

@@ -4,8 +4,9 @@ Memory discipline is the whole game for SSMs at scale:
 
 * **Mamba-1 train/prefill** — chunked scan: ``lax.scan`` over time chunks,
   associative scan *within* a chunk (rematerialised), so nothing of size
-  L·d_inner·N is ever live.  On the Pallas backend the fused
-  :mod:`repro.kernels.mamba_scan` kernel keeps the state in VMEM instead.
+  L·d_inner·N is ever live.  On the Pallas backends the scan runs as a
+  targetDP site kernel over channels (:mod:`repro.kernels.lm`), state in
+  VMEM per channel chunk.
 * **Mamba-2 train/prefill** — the SSD chunked matmul formulation (MXU
   friendly): intra-chunk (Q×Q decay-masked score GEMMs) + inter-chunk
   state recurrence over chunk boundaries only.

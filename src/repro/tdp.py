@@ -21,6 +21,10 @@ paper               here
 ``TARGET_LAUNCH``   :func:`tdp.launch` — ``launch(spec, target, *arrays)``
 ``TARGET_TLP``      the executor's chunk loop (vmap / pallas grid)
 ``TARGET_ILP``      the trailing VVL axis, ``Target.vvl`` tunes it
+``VVL`` AoSoA site  ``Target.layout="aosoa"`` — executor-internal
+ordering            SoA↔AoSoA transforms at field boundaries
+                    (:mod:`repro.core.layout`), ``vvl`` as the inner
+                    block width; bit-identical across layouts
 ``TARGET_CONST``    :class:`TargetConst` / launch ``**consts``
 C-vs-CUDA switch    :class:`Target` + :func:`register_executor`
 host step glue      :func:`tdp.program` — multi-launch step graphs with
@@ -64,12 +68,19 @@ from repro.core.registry import (  # noqa: F401
 )
 from repro.core.api import (  # noqa: F401
     LaunchPlan,
+    WindowVmemError,
     gather_neighbors,
     halo_extend,
     launch,
     launch_plan,
     pad_sites,
     xla_executor,
+)
+from repro.core.layout import (  # noqa: F401
+    LAYOUTS,
+    aosoa_nblocks,
+    aosoa_to_soa,
+    soa_to_aosoa,
 )
 from repro.core.program import (  # noqa: F401
     CompiledProgram,
@@ -140,7 +151,8 @@ __all__ = [
     "get_executor_entry", "executor_wants", "list_executors",
     "registry_version",
     "launch", "launch_plan", "LaunchPlan", "xla_executor",
-    "gather_neighbors", "halo_extend", "pad_sites",
+    "gather_neighbors", "halo_extend", "pad_sites", "WindowVmemError",
+    "LAYOUTS", "aosoa_nblocks", "aosoa_to_soa", "soa_to_aosoa",
     "Program", "CompiledProgram", "ProgramPlan", "Stage", "program",
     "exchange_ghosts", "exchange_stats",
     "stage",

@@ -545,7 +545,7 @@ class TestCacheSchema:
     def test_entries_carry_current_schema(self, tmp_path):
         rep, path = self._one_report(tmp_path)
         from repro.core.autotune import SCHEMA_VERSION
-        assert rep.schema == SCHEMA_VERSION == 2
+        assert rep.schema == SCHEMA_VERSION == 3
         with open(path) as fh:
             assert json.load(fh)["schema"] == SCHEMA_VERSION
 

@@ -170,6 +170,23 @@ class TestCheckRegression:
         assert rep["matched"] == 1 and rep["regressions"] == []
         assert ("fleet", "batch8_guarded") in rep["unmatched"]
 
+    def test_compare_layout_identity(self):
+        """AoSoA sweep points never gate SoA ones, and a baseline
+        predating the ``layout`` field still matches fresh SoA records
+        (absent normalises to "soa")."""
+        from benchmarks.check_regression import compare
+        base = {"kernels": {"variants": {
+            "rms_vvl64": {"median_s": 1.0, "executor": "xla",
+                          "vvl": 64}}}}
+        fresh = {"kernels": {"variants": {
+            "rms_vvl64": {"median_s": 1.0, "executor": "xla", "vvl": 64,
+                          "layout": "soa"},
+            "rms_aosoa": {"median_s": 5.0, "executor": "xla", "vvl": 64,
+                          "layout": "aosoa"}}}}
+        rep = compare(base, fresh)
+        assert rep["matched"] == 1 and rep["regressions"] == []
+        assert ("kernels", "rms_aosoa") in rep["unmatched"]
+
     def test_compare_min_seconds_skips_timer_noise(self):
         from benchmarks.check_regression import compare
         base = {"b": {"grid": [], "variants": {

@@ -72,6 +72,80 @@ class TestTdpProperties:
         np.testing.assert_allclose(a.data, f.data, rtol=1e-6)
 
 
+class TestLayoutProperties:
+    """SoA ↔ AoSoA transform invariants (repro/core/layout.py) over
+    arbitrary component counts, site counts, and inner widths — including
+    remainder blocks (vvl ∤ nsites) and vvl > nsites.  The enumerated
+    fallback runs without hypothesis in
+    test_layout.py::TestTransforms."""
+
+    @SET
+    @given(st.integers(1, 6),             # ncomp
+           st.integers(1, 200),           # nsites (odd, prime, tiny...)
+           st.integers(1, 64),            # vvl (any, incl. > nsites)
+           st.integers(0, 2))             # extra leading batch dims
+    def test_roundtrip_exact(self, ncomp, nsites, vvl, nlead):
+        from repro.core.layout import (aosoa_nblocks, aosoa_to_soa,
+                                       soa_to_aosoa)
+        rng = np.random.default_rng(ncomp * 1000 + nsites * 10 + vvl)
+        lead = (2,) * nlead
+        x = jnp.asarray(rng.normal(size=(*lead, ncomp, nsites)),
+                        jnp.float32)
+        y = soa_to_aosoa(x, vvl)
+        nblk = aosoa_nblocks(nsites, vvl)
+        assert y.shape == (nblk, *lead, ncomp, vvl)
+        np.testing.assert_array_equal(
+            np.asarray(aosoa_to_soa(y, nsites)), np.asarray(x))
+        # remainder lanes are zero-padded, never garbage
+        pad = nblk * vvl - nsites
+        if pad:
+            flat = np.moveaxis(np.asarray(y), 0, -2)  # (..., ncomp, nblk, vvl)
+            tail = flat.reshape(*lead, ncomp, nblk * vvl)[..., nsites:]
+            np.testing.assert_array_equal(tail, 0.0)
+
+    @SET
+    @given(st.integers(1, 4),             # ncomp
+           st.integers(1, 8),             # nplanes
+           st.integers(2, 40),            # plane site count
+           st.integers(1, 16))            # vvl candidate
+    def test_plane_roundtrip_or_named_error(self, ncomp, npl, rn, vvl):
+        """plane_to_aosoa either round-trips exactly (vvl | plane sites)
+        or refuses with the no-remainder-blocks error — never silently
+        truncates."""
+        from repro.core.layout import plane_from_aosoa, plane_to_aosoa
+        rng = np.random.default_rng(ncomp + npl * 10 + rn * 100 + vvl)
+        x = jnp.asarray(rng.normal(size=(ncomp, npl, rn)), jnp.float32)
+        if rn % vvl:
+            with pytest.raises(ValueError, match="no remainder blocks"):
+                plane_to_aosoa(x, vvl)
+            return
+        y = plane_to_aosoa(x, vvl)
+        assert y.shape == (npl, rn // vvl, ncomp, vvl)
+        np.testing.assert_array_equal(
+            np.asarray(plane_from_aosoa(y, (rn,))), np.asarray(x))
+
+    @SET
+    @given(st.integers(1, 5),             # ncomp
+           st.integers(1, 120),           # nsites
+           st.sampled_from([1, 2, 4, 8, 16]),
+           st.floats(-2, 2))
+    def test_gathered_layouts_agree(self, ncomp, nsites, vvl, a):
+        """One pointwise launch, every layout×vvl: identical results
+        (allclose here; bit-identity is pinned per-executor in
+        test_layout.py)."""
+        from repro import tdp
+        rng = np.random.default_rng(nsites * 10 + ncomp)
+        x = jnp.asarray(rng.normal(size=(ncomp, nsites)), jnp.float32)
+        spec = tdp.KernelSpec(lambda v, a=1.0: a * v + 1.0,
+                              fields=(tdp.FieldSpec(ncomp=ncomp),),
+                              out=ncomp, name=f"affine_{ncomp}")
+        base = tdp.launch(spec, tdp.Target("xla"), x, a=a)
+        for layout in tdp.LAYOUTS:
+            t = tdp.Target("xla", vvl=vvl, layout=layout)
+            np.testing.assert_array_equal(
+                np.asarray(tdp.launch(spec, t, x, a=a)), np.asarray(base))
+
+
 class TestExchangeProperties:
     """The generalized ghost exchange (repro/core/program.py) against a
     wrap-indexed global reference — any dim, any hop count, widths wider
